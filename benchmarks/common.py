@@ -1,0 +1,191 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+The paper's protocol (§3): pre-train the task model with a conventional full
+softmax, then swap in DS-Softmax and retrain the head (backbone frozen) with
+Adam; λ_load=10 and γ=0.01 fixed; λ_lasso=λ_expert swept upward until
+validation drops. We follow exactly that, on the synthetic counterparts
+(DESIGN.md §8), at CPU-friendly scale controlled by ``FAST``.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DSSoftmaxConfig
+from repro.core import dssoftmax as ds
+from repro.core import metrics as dsmetrics
+from repro.core.gating import top1_gate
+from repro.optim import adam_init, adam_update
+
+FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+
+
+def scale(n: int, fast_n: int | None = None) -> int:
+    return (fast_n if fast_n is not None else max(1, n // 10)) if FAST else n
+
+
+# ---------------------------------------------------------------------------
+# Tiny LM backbone (2-layer transformer; stands in for the paper's LSTM-200)
+# ---------------------------------------------------------------------------
+
+def init_backbone(key, vocab: int, d: int = 128, ff: int = 512):
+    ks = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(d)
+    params = {
+        "embed": (jax.random.normal(ks[0], (vocab, d)) * s).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (2, d, ff)) * s).astype(jnp.float32),
+        "w2": (jax.random.normal(ks[2], (2, ff, d)) * (1 / np.sqrt(ff))).astype(jnp.float32),
+        "wq": (jax.random.normal(ks[3], (2, d, d)) * s).astype(jnp.float32),
+        "wo": (jax.random.normal(ks[4], (2, d, d)) * s).astype(jnp.float32),
+    }
+    return params
+
+
+def backbone_h(params, tokens: jax.Array) -> jax.Array:
+    """tokens (B, S) → contexts (B, S, d): embeddings + 2 mixer layers with
+    causal mean-pooling attention (cheap but context-sensitive)."""
+    x = params["embed"][tokens]
+    B, S, d = x.shape
+    causal = jnp.tril(jnp.ones((S, S), jnp.float32))
+    causal = causal / jnp.sum(causal, axis=1, keepdims=True)
+    for l in range(2):
+        q = jnp.einsum("bsd,de->bse", x, params["wq"][l])
+        ctx = jnp.einsum("ts,bsd->btd", causal, q)
+        x = x + jnp.einsum("bsd,de->bse", jnp.tanh(ctx), params["wo"][l])
+        h = jnp.tanh(jnp.einsum("bsd,df->bsf", x, params["w1"][l]))
+        x = x + jnp.einsum("bsf,fd->bsd", h, params["w2"][l])
+    return x
+
+
+def pretrain_full(key, stream, vocab: int, d: int = 128, steps: int = 300, lr: float = 3e-3):
+    """Pre-train backbone + full softmax head (the paper's stage 1)."""
+    params = init_backbone(key, vocab, d)
+    params["head_w"] = (jax.random.normal(jax.random.PRNGKey(99), (vocab, d))
+                        / np.sqrt(d)).astype(jnp.float32)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, tokens):
+        def loss_fn(p):
+            h = backbone_h(p, tokens[:, :-1])
+            z = jnp.einsum("bsd,nd->bsn", h, p["head_w"])
+            lse = jax.nn.logsumexp(z, -1)
+            gold = jnp.take_along_axis(z, tokens[:, 1:, None], -1)[..., 0]
+            return jnp.mean(lse - gold)
+
+        l, g = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, g, opt, lr)
+        return params, opt, l
+
+    for i in range(steps):
+        params, opt, l = step(params, opt, jnp.asarray(stream.batch_at(i)))
+    return params, float(l)
+
+
+def retrain_ds_head(
+    key,
+    backbone,
+    stream,
+    vocab: int,
+    K: int,
+    *,
+    steps: int = 400,
+    lam: float = 1e-5,
+    lr: float = 3e-3,
+    prune_threshold: float | None = None,
+    mask_mode: str = "zero",
+):
+    """Stage 2: freeze backbone, train DS-Softmax head with pruning."""
+    d = backbone["embed"].shape[1]
+    cfg = DSSoftmaxConfig(
+        num_experts=K, gamma=0.01, lambda_lasso=lam, lambda_expert=lam,
+        lambda_load=10.0, mask_mode=mask_mode,
+        prune_task_loss_threshold=prune_threshold if prune_threshold is not None else 1e9,
+    )
+    # warm-start every expert from the pre-trained full softmax (+noise)
+    base = backbone["head_w"]
+    noise = jax.random.normal(key, (K,) + base.shape) * 0.03
+    params = {
+        "gate": (jax.random.normal(jax.random.PRNGKey(7), (K, d)) / np.sqrt(d)).astype(
+            jnp.float32
+        ),
+        "experts": (base[None] + noise).astype(jnp.float32),
+    }
+    state = ds.DSState(mask=jnp.ones((K, vocab), bool))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, state, opt, tokens):
+        h = backbone_h(backbone, tokens[:, :-1])
+        labels = tokens[:, 1:]
+
+        def loss_fn(p):
+            total, (ce, aux) = ds.total_loss(
+                p, state, h.reshape(-1, d), labels.reshape(-1), cfg, dispatch="sorted"
+            )
+            return total, ce
+
+        (_, ce), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt = adam_update(params, g, opt, lr)
+        state = ds.update_mask(params, state, ce, cfg)
+        return params, state, opt, ce
+
+    for i in range(steps):
+        params, state, opt, ce = step(params, state, opt, jnp.asarray(stream.batch_at(1000 + i)))
+    return cfg, params, state, float(ce)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+def eval_topk_accuracy(predict_topk: Callable, stream, *, n_batches: int = 20,
+                       ks=(1, 5, 10), offset: int = 5000):
+    hits = {k: 0 for k in ks}
+    total = 0
+    for i in range(n_batches):
+        tokens = jnp.asarray(stream.batch_at(offset + i))
+        ids = predict_topk(tokens[:, :-1], max(ks))  # (B, S, kmax)
+        labels = np.asarray(tokens[:, 1:])
+        ids = np.asarray(ids)
+        for k in ks:
+            hits[k] += int(np.sum(np.any(ids[..., :k] == labels[..., None], axis=-1)))
+        total += labels.size
+    return {k: hits[k] / total for k in ks}
+
+
+def ds_speedup_report(cfg, params, state, stream, backbone, *, n_batches: int = 10):
+    """Measured utilization → the paper's speedup formula + padded variant."""
+    d = backbone["embed"].shape[1]
+    sizes = np.asarray(state.mask).sum(axis=1)
+    choices = []
+    for i in range(n_batches):
+        tokens = jnp.asarray(stream.batch_at(8000 + i))
+        h = backbone_h(backbone, tokens[:, :-1]).reshape(-1, d)
+        eidx, _, _ = top1_gate(params["gate"], h)
+        choices.append(np.asarray(eidx))
+    util = dsmetrics.utilization(np.concatenate(choices), cfg.num_experts)
+    vocab = state.mask.shape[1]
+    table = ds.pack_experts(params, state)
+    return {
+        "sizes": sizes,
+        "util": util,
+        "paper_speedup": dsmetrics.paper_speedup(vocab, sizes, util),
+        "padded_speedup": dsmetrics.padded_speedup(vocab, table.v_pad, cfg.num_experts),
+        "v_pad": table.v_pad,
+    }
+
+
+def bench_us(fn, *args, iters: int = 20) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6

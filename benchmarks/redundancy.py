@@ -1,0 +1,46 @@
+"""Paper Fig. 5b: word frequency vs redundancy (number of experts containing
+the word) — the paper observes frequent words live in more experts."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import pretrain_full, retrain_ds_head, scale
+from repro.core.pruning import redundancy
+from repro.data import TopicLMStream
+
+
+def main():
+    vocab = 10000
+    stream = TopicLMStream(vocab=vocab, seq_len=32, batch=16, seed=0)
+    backbone, _ = pretrain_full(jax.random.PRNGKey(0), stream, vocab,
+                                steps=scale(300, 60))
+    cfg, params, state, ce = retrain_ds_head(
+        jax.random.PRNGKey(1), backbone, stream, vocab, K=8,
+        steps=scale(500, 120), lam=2e-5, prune_threshold=7.0)
+
+    red = np.asarray(redundancy(state.mask))
+    # empirical word frequency over the stream
+    counts = np.zeros(vocab)
+    for i in range(scale(50, 15)):
+        b = stream.batch_at(i)
+        counts += np.bincount(b.ravel(), minlength=vocab)
+    freq_rank = np.argsort(-counts)
+
+    # Spearman-style: correlation between log-freq and redundancy
+    seen = counts > 0
+    lf = np.log1p(counts[seen])
+    r = red[seen].astype(float)
+    corr = float(np.corrcoef(lf, r)[0, 1]) if r.std() > 0 else float("nan")
+
+    top_red = red[freq_rank[:100]].mean()
+    tail_red = red[freq_rank[-1000:]].mean()
+    print("metric,value")
+    print(f"corr_logfreq_redundancy,{corr:.3f}")
+    print(f"mean_redundancy_top100_words,{top_red:.2f}")
+    print(f"mean_redundancy_tail1000_words,{tail_red:.2f}")
+    return {"corr": corr, "top": top_red, "tail": tail_red}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Aggregate the dry-run artifacts into the §Roofline / §Dry-run tables.
+
+Reads ``runs/dryrun/*.json`` (written by repro.launch.dryrun) and emits the
+per-(arch × shape × mesh) roofline table: three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS useful ratio, and memory-fit status against the
+16 GB/chip v5e budget.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+HBM_BUDGET = 16 * 2 ** 30
+
+
+def load(out_dir="runs/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def row(r):
+    if not r.get("ok"):
+        return f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAILED: {r.get('error','')[:40]} |"
+    rf = r["roofline"]
+    mem = r["memory_analysis"]
+    per_dev = mem["temp_bytes"] + (mem["argument_bytes"])
+    fits = "✔" if per_dev <= HBM_BUDGET else f"✗({per_dev/2**30:.0f}G)"
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+        f"{rf['compute_s']:.3g} | {rf['memory_s']:.3g} | {rf['collective_s']:.3g} | "
+        f"{rf.get('collective_s_bf16', rf['collective_s']):.3g} | "
+        f"{rf['bottleneck']} | {rf['useful_ratio'] if rf['useful_ratio'] else 0:.2f} | "
+        f"{(rf['achievable_frac'] or 0)*100:.1f}% | {fits} |"
+    )
+
+
+def markdown(out_dir="runs/dryrun"):
+    recs = load(out_dir)
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | coll s (bf16-adj) | bottleneck | useful | achievable | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    for r in recs:
+        lines.append(row(r))
+    ok = sum(1 for r in recs if r.get("ok"))
+    lines.append(f"\n{ok}/{len(recs)} cells compiled OK.")
+    return "\n".join(lines)
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun"
+    print(markdown(out_dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per section. Set BENCH_FAST=1
+for the reduced-step variant (used by CI/smoke; EXPERIMENTS.md numbers come
+from the full run).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        mitosis_memory,
+        redundancy,
+        synthetic_hierarchy,
+        table1_lm,
+        table2_nmt,
+        table3_casia,
+        table4_latency,
+        table5_postapprox,
+    )
+
+    sections = [
+        ("fig3_fig4_synthetic_hierarchy", synthetic_hierarchy.main),
+        ("table1_language_modeling", table1_lm.main),
+        ("table2_translation", table2_nmt.main),
+        ("table3_classification", table3_casia.main),
+        ("table4_device_latency", table4_latency.main_all),
+        ("table5_post_approximation", table5_postapprox.main),
+        ("fig5a_mitosis_memory", mitosis_memory.main),
+        ("fig5b_redundancy", redundancy.main),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, fn in sections:
+        if only and only not in name:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        fn()
+        print(f"# section wall: {time.time()-t0:.1f}s")
+
+
+if __name__ == '__main__':
+    main()

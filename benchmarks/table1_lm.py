@@ -1,0 +1,76 @@
+"""Paper Table 1: word-level LM — DS-{K} vs full softmax.
+
+PTB-scale (|V|=10,000) and WikiText-2-scale (|V|=33,278) synthetic Zipf-topic
+corpora (DESIGN.md §8): report top-1/5/10 accuracy + the paper's FLOPs
+speedup formula per K.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    backbone_h,
+    ds_speedup_report,
+    eval_topk_accuracy,
+    pretrain_full,
+    retrain_ds_head,
+    scale,
+)
+from repro.core import dssoftmax as ds
+from repro.data import TopicLMStream
+
+
+def run_task(name: str, vocab: int, Ks=(8, 16), *, d=128, seed=0):
+    stream = TopicLMStream(vocab=vocab, n_topics=20, seq_len=32, batch=16, seed=seed)
+    t0 = time.time()
+    backbone, pre_loss = pretrain_full(
+        jax.random.PRNGKey(seed), stream, vocab, d=d, steps=scale(400, 80)
+    )
+
+    def full_topk(tokens, k):
+        h = backbone_h(backbone, tokens)
+        z = jnp.einsum("bsd,nd->bsn", h, backbone["head_w"])
+        return jax.lax.top_k(z, k)[1]
+
+    full_acc = eval_topk_accuracy(jax.jit(full_topk, static_argnums=1), stream,
+                                  n_batches=scale(20, 5))
+    rows = [(f"{name}_full", full_acc, "-", "-", "-")]
+
+    for K in Ks:
+        cfg, params, state, ce = retrain_ds_head(
+            jax.random.PRNGKey(seed + K), backbone, stream, vocab, K,
+            steps=scale(500, 100), lam=2e-5, prune_threshold=7.0,
+        )
+        table = ds.pack_experts(params, state)
+
+        def ds_topk_fn(tokens, k, _t=table, _p=params):
+            B, S = tokens.shape
+            h = backbone_h(backbone, tokens).reshape(B * S, -1)
+            vals, ids = ds.serve_topk(_p["gate"], _t, h, k)
+            return ids.reshape(B, S, k)
+
+        acc = eval_topk_accuracy(jax.jit(ds_topk_fn, static_argnums=1), stream,
+                                 n_batches=scale(20, 5))
+        rep = ds_speedup_report(cfg, params, state, stream, backbone)
+        rows.append((f"{name}_DS-{K}", acc, f"{rep['paper_speedup']:.2f}x",
+                     f"{rep['padded_speedup']:.2f}x", int(rep["sizes"].mean())))
+    print(f"# {name} wall: {time.time()-t0:.1f}s  pretrain_loss={pre_loss:.3f}")
+    return rows
+
+
+def main():
+    all_rows = []
+    all_rows += run_task("ptb", 10000)
+    all_rows += run_task("wiki2", 33278, Ks=(8,))
+    print("task,top1,top5,top10,paper_speedup,padded_speedup,mean_expert_size")
+    for name, acc, sp, psp, sz in all_rows:
+        print(f"{name},{acc[1]:.3f},{acc[5]:.3f},{acc[10]:.3f},{sp},{psp},{sz}")
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

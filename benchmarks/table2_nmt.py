@@ -1,0 +1,140 @@
+"""Paper Table 2: seq2seq translation — DS-{K} vs full softmax.
+
+Toy deterministic translation task (|V|=7,709 as IWSLT En-Vi); metric =
+next-token accuracy with teacher forcing (greedy BLEU proxy; the claim
+validated is the DS-vs-full DELTA at the measured speedup).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import scale
+from repro.configs.base import DSSoftmaxConfig
+from repro.core import dssoftmax as ds
+from repro.core import metrics as dsmetrics
+from repro.core.gating import top1_gate
+from repro.data import translation_dataset
+from repro.optim import adam_init, adam_update
+
+VOCAB = 7709
+
+
+def init_seq2seq(key, d=128):
+    ks = jax.random.split(key, 5)
+    s = 1 / np.sqrt(d)
+    return {
+        "src_embed": (jax.random.normal(ks[0], (VOCAB, d)) * s).astype(jnp.float32),
+        "tgt_embed": (jax.random.normal(ks[1], (VOCAB, d)) * s).astype(jnp.float32),
+        "enc_w": (jax.random.normal(ks[2], (d, d)) * s).astype(jnp.float32),
+        "dec_w": (jax.random.normal(ks[3], (d, d)) * s).astype(jnp.float32),
+        "head_w": (jax.random.normal(ks[4], (VOCAB, d)) * s).astype(jnp.float32),
+    }
+
+
+def contexts(params, src, tgt_in):
+    """Position-aligned enc-dec contexts (the toy task is position-wise)."""
+    e = params["src_embed"][src]  # (B, S, d)
+    enc = jnp.tanh(jnp.einsum("bsd,de->bse", e, params["enc_w"]))
+    enc_rev = enc[:, ::-1]  # target t aligns with reversed source
+    t_emb = params["tgt_embed"][tgt_in]
+    h = jnp.tanh(enc_rev + jnp.einsum("bsd,de->bse", t_emb, params["dec_w"]))
+    return h
+
+
+def main():
+    d = 128
+    params = init_seq2seq(jax.random.PRNGKey(0), d)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_full(params, opt, src, tgt):
+        def loss_fn(p):
+            h = contexts(p, src, tgt[:, :-1])
+            z = jnp.einsum("bsd,nd->bsn", h, p["head_w"])
+            lse = jax.nn.logsumexp(z, -1)
+            gold = jnp.take_along_axis(z, tgt[:, 1:, None], -1)[..., 0]
+            return jnp.mean(lse - gold)
+
+        l, g = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, g, opt, 3e-3)
+        return params, opt, l
+
+    t0 = time.time()
+    for i in range(scale(600, 120)):
+        src, tgt = translation_dataset(step=i)
+        params, opt, l = step_full(params, opt, jnp.asarray(src), jnp.asarray(tgt))
+
+    def acc_full():
+        hits = tot = 0
+        for i in range(10):
+            src, tgt = translation_dataset(step=9000 + i)
+            h = contexts(params, jnp.asarray(src), jnp.asarray(tgt[:, :-1]))
+            z = jnp.einsum("bsd,nd->bsn", h, params["head_w"])
+            pred = np.asarray(jnp.argmax(z, -1))
+            hits += (pred == tgt[:, 1:]).sum()
+            tot += pred.size
+        return hits / tot
+
+    rows = [("envi_full", acc_full(), "-")]
+
+    for K in (8,):
+        cfg = DSSoftmaxConfig(num_experts=K, gamma=0.01, lambda_lasso=2e-5,
+                              lambda_expert=2e-5, lambda_load=10.0,
+                              prune_task_loss_threshold=5.0)
+        base = params["head_w"]
+        hp = {
+            "gate": (jax.random.normal(jax.random.PRNGKey(1), (K, d)) / np.sqrt(d)),
+            "experts": base[None] + jax.random.normal(jax.random.PRNGKey(2),
+                                                      (K,) + base.shape) * 0.03,
+        }
+        state = ds.DSState(mask=jnp.ones((K, VOCAB), bool))
+        opt2 = adam_init(hp)
+
+        @jax.jit
+        def step_ds(hp, state, opt2, src, tgt):
+            h = contexts(params, src, tgt[:, :-1])
+
+            def loss_fn(p):
+                total, (ce, aux) = ds.total_loss(
+                    p, state, h.reshape(-1, d), tgt[:, 1:].reshape(-1), cfg,
+                    dispatch="sorted")
+                return total, ce
+
+            (_, ce), g = jax.value_and_grad(loss_fn, has_aux=True)(hp)
+            hp, opt2 = adam_update(hp, g, opt2, 3e-3)
+            state = ds.update_mask(hp, state, ce, cfg)
+            return hp, state, opt2, ce
+
+        for i in range(scale(600, 120)):
+            src, tgt = translation_dataset(step=i)
+            hp, state, opt2, ce = step_ds(hp, state, opt2, jnp.asarray(src), jnp.asarray(tgt))
+
+        table = ds.pack_experts(hp, state)
+        hits = tot = 0
+        choices = []
+        for i in range(10):
+            src, tgt = translation_dataset(step=9000 + i)
+            h = contexts(params, jnp.asarray(src), jnp.asarray(tgt[:, :-1])).reshape(-1, d)
+            _, ids = ds.serve_topk(hp["gate"], table, h, k=1)
+            hits += (np.asarray(ids[:, 0]).reshape(tgt[:, 1:].shape) == tgt[:, 1:]).sum()
+            tot += tgt[:, 1:].size
+            eidx, _, _ = top1_gate(hp["gate"], h)
+            choices.append(np.asarray(eidx))
+        util = dsmetrics.utilization(np.concatenate(choices), K)
+        sizes = np.asarray(state.mask).sum(1)
+        sp = dsmetrics.paper_speedup(VOCAB, sizes, util)
+        rows.append((f"envi_DS-{K}", hits / tot, f"{sp:.2f}x"))
+
+    print("task,next_token_acc,paper_speedup")
+    for name, acc, sp in rows:
+        print(f"{name},{acc:.3f},{sp}")
+    print(f"# wall: {time.time()-t0:.1f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Paper Fig. 3 reproduction: DS-Softmax discovers the two-level hierarchy.
+
+Trains on the §3.1 synthetic data and prints the expert×super-cluster
+incidence matrix — with the full loss it is (near-)block diagonal.
+
+    PYTHONPATH=src python examples/synthetic_hierarchy.py
+"""
+import numpy as np
+
+from benchmarks.synthetic_hierarchy import hierarchy_metrics, train_hierarchy
+
+data, cfg, params, state, ce = train_hierarchy(n_super=6, n_sub=6, steps=500, K=6)
+m = hierarchy_metrics(data, state, params)
+mask = np.asarray(state.mask)
+
+print(f"final ce={ce:.3f}  purity={m['purity']:.2f}  "
+      f"mean expert size={m['mean_expert_size']:.1f} (ideal 6)")
+print("\nexpert x super-cluster class counts (block structure = recovered):")
+inc = np.zeros((mask.shape[0], 6), int)
+for k in range(mask.shape[0]):
+    for c in np.nonzero(mask[k])[0]:
+        inc[k, data.super_of[c]] += 1
+hdr = "        " + " ".join(f"S{j}" for j in range(6))
+print(hdr)
+for k in range(inc.shape[0]):
+    print(f"expert{k} " + " ".join(f"{v:2d}" for v in inc[k]))

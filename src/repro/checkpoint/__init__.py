@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpointer import AsyncSaver, load, save
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["AsyncSaver", "load", "save", "CheckpointManager"]

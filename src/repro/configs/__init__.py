@@ -1,0 +1,122 @@
+"""Architecture registry: ``get_config(arch)``, shape suite, reduced configs.
+
+Every assigned architecture is selectable via ``--arch <id>`` in the
+launchers; ``reduce_config`` produces a smoke-test-sized config of the SAME
+family (used by per-arch smoke tests; the full configs are exercised only via
+the dry-run with ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.configs import (
+    deepseek_67b,
+    granite_20b,
+    internvl2_26b,
+    llama3_2_3b,
+    mamba2_130m,
+    olmoe_1b_7b,
+    paper_lm,
+    qwen2_1_5b,
+    qwen3_moe_235b,
+    whisper_base,
+    zamba2_7b,
+)
+from repro.configs.base import (
+    DSSoftmaxConfig,
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    TrainConfig,
+    VisionStubConfig,
+)
+from repro.configs.shapes import SHAPES, shapes_for
+
+_MODULES = {
+    "mamba2-130m": mamba2_130m,
+    "granite-20b": granite_20b,
+    "qwen2-1.5b": qwen2_1_5b,
+    "llama3.2-3b": llama3_2_3b,
+    "deepseek-67b": deepseek_67b,
+    "whisper-base": whisper_base,
+    "zamba2-7b": zamba2_7b,
+    "internvl2-26b": internvl2_26b,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b,
+    "paper-ptb": paper_lm,
+}
+
+ARCHS: Tuple[str, ...] = tuple(k for k in _MODULES if k != "paper-ptb")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch == "paper-wiki2":
+        return paper_lm.WIKI2
+    if arch == "paper-envi":
+        return paper_lm.ENVI
+    if arch == "paper-casia":
+        return paper_lm.CASIA
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(_MODULES)}")
+    return _MODULES[arch].CONFIG
+
+
+def is_sub_quadratic(arch: str) -> bool:
+    return bool(getattr(_MODULES[arch], "SUB_QUADRATIC", False))
+
+
+def arch_shapes(arch: str):
+    """The runnable shape cells for this arch (assignment rules)."""
+    return shapes_for(get_config(arch).family, is_sub_quadratic(arch))
+
+
+def dryrun_cells() -> list[tuple[str, ShapeConfig]]:
+    """All (arch, shape) dry-run cells."""
+    return [(a, s) for a in ARCHS for s in arch_shapes(a)]
+
+
+def reduce_config(cfg: ModelConfig, vocab: int = 512) -> ModelConfig:
+    """A tiny config of the same family for CPU smoke tests."""
+    kw: Dict = dict(
+        n_layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab_size=vocab,
+        remat="none",
+        attn_q_chunk=64,
+        attn_kv_chunk=64,
+    )
+    if cfg.n_heads:
+        kw.update(n_heads=4, n_kv_heads=max(1, min(cfg.n_kv_heads, 2)), head_dim=16)
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_headdim=16, ssm_chunk=32)
+    if cfg.family == "hybrid":
+        kw.update(attn_period=1, n_layers=3)
+    if cfg.n_encoder_layers:
+        kw.update(n_encoder_layers=2)
+    if cfg.moe is not None:
+        kw.update(moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64))
+    if cfg.vision is not None:
+        kw.update(vision=VisionStubConfig(num_patches=8))
+    kw.update(ds=cfg.ds.replace(num_experts=4))
+    return cfg.replace(**kw)
+
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "DSSoftmaxConfig",
+    "MeshConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "VisionStubConfig",
+    "get_config",
+    "is_sub_quadratic",
+    "arch_shapes",
+    "dryrun_cells",
+    "reduce_config",
+]

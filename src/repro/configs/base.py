@@ -1,0 +1,201 @@
+"""Config dataclasses for models, the DS-Softmax head, meshes and training.
+
+Plain dataclasses (no pydantic): hashable & static-friendly so configs can be
+closed over by jitted functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DSSoftmaxConfig:
+    """Doubly-Sparse softmax head configuration (the paper's technique)."""
+
+    num_experts: int = 8           # K
+    lambda_lasso: float = 1.0      # group-lasso weight (tuned per task in paper)
+    lambda_expert: float = 1.0     # expert-level lasso weight (== lambda_lasso in paper)
+    lambda_load: float = 10.0      # load-balance CV^2 weight (fixed =10 in paper)
+    gamma: float = 0.01            # pruning threshold on row l2 norm (fixed in paper)
+    prune_task_loss_threshold: float = float("inf")  # prune only when task loss < t
+    mask_mode: str = "zero"        # 'zero' (paper-faithful) | 'neg_inf' (beyond-paper)
+    # Serving: padded active-set size per expert (static shape for TPU).
+    # None => derived as max_k |v_k| rounded up to a multiple of 128.
+    serve_pad: Optional[int] = None
+    # serve compute path: 'jnp' (per-token gather — paper-faithful baseline),
+    # 'grouped' (expert-batched weight-stationary — beyond-paper), 'pallas'
+    serve_kernel: str = "jnp"
+    # Mitosis
+    mitosis_start_experts: int = 2
+    mitosis_noise: float = 1e-2
+
+    def replace(self, **kw) -> "DSSoftmaxConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Token-choice MoE FFN configuration (for moe-family backbones)."""
+
+    num_experts: int = 64
+    top_k: int = 8
+    d_ff_expert: int = 1024
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class VisionStubConfig:
+    """Modality frontend stub: precomputed patch/frame embeddings."""
+
+    num_patches: int = 256   # patches (vlm) or frames (audio) per example
+    embed_dim: int = 0       # 0 => d_model
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"   # dense | ssm | hybrid | moe | encdec | vlm
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: Optional[int] = None        # None => d_model // n_heads
+    qkv_bias: bool = False                # qwen2 uses bias on qkv
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    act: str = "swiglu"                   # swiglu | gelu
+    dtype: str = "bfloat16"
+
+    # SSM (mamba2 / hybrid)
+    ssm_state: int = 0                    # N (state dim); 0 => no ssm
+    ssm_expand: int = 2                   # d_inner = expand * d_model
+    ssm_headdim: int = 64                 # P
+    ssm_ngroups: int = 1                  # B/C groups
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256                  # SSD chunk length
+
+    # hybrid (zamba2-style): shared attention block applied every `attn_period`
+    # ssm layers.
+    attn_period: int = 6
+
+    # enc-dec (whisper-style)
+    n_encoder_layers: int = 0
+
+    # MoE backbone
+    moe: Optional[MoEConfig] = None
+
+    # modality frontend stub (vlm / audio)
+    vision: Optional[VisionStubConfig] = None
+
+    # head: 'full' (dense softmax) or 'ds' (DS-Softmax, the paper)
+    head: str = "ds"
+    ds: DSSoftmaxConfig = field(default_factory=DSSoftmaxConfig)
+
+    # attention compute: query/kv chunking for long prefill (flash-style)
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+
+    # remat policy for train: 'none' | 'layer' (checkpoint each scan body)
+    remat: str = "layer"
+
+    # vocab padding multiple for TP-friendly table shapes (standard practice;
+    # 512 keeps every vocab dim divisible by 16-way model sharding with room
+    # for 32-way). Paper-scale configs use 1 (exact vocab on one device).
+    pad_vocab_to: int = 512
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = max(1, self.pad_vocab_to)
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (for MODEL_FLOPS = 6*N*D)."""
+        from repro.models.model_zoo import count_params_analytic
+
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model_zoo import count_params_analytic
+
+        return count_params_analytic(self, active_only=True)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell from the assignment."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    weight_decay: float = 0.0
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"          # constant | linear | cosine
+    microbatches: int = 1             # gradient accumulation
+    seed: int = 0
+    # checkpointing
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 200
+    keep_ckpts: int = 3
+    # gradient compression for cross-pod all-reduce: 'none' | 'int8' | 'topk'
+    grad_compression: str = "none"
+    grad_topk_frac: float = 0.05
+    # DS-softmax schedule: enable pruning after this step
+    prune_start_step: int = 100
+    prune_every: int = 10

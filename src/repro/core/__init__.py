@@ -1,0 +1,37 @@
+"""The paper's contribution: DS-Softmax (doubly sparse softmax)."""
+from repro.core import baselines, gating, losses, metrics, mitosis, pruning
+from repro.core.dssoftmax import (
+    DSAux,
+    DSState,
+    ServeTable,
+    abstract_params,
+    init,
+    logits_dense,
+    loss,
+    pack_experts,
+    serve_full_probs,
+    serve_topk,
+    total_loss,
+    update_mask,
+)
+
+__all__ = [
+    "baselines",
+    "gating",
+    "losses",
+    "metrics",
+    "mitosis",
+    "pruning",
+    "DSAux",
+    "DSState",
+    "ServeTable",
+    "abstract_params",
+    "init",
+    "logits_dense",
+    "loss",
+    "pack_experts",
+    "serve_full_probs",
+    "serve_topk",
+    "total_loss",
+    "update_mask",
+]

@@ -1,0 +1,66 @@
+"""Post-training analysis of a learned DS-Softmax model (paper §3.7/§3.8).
+
+Everything the qualitative sections of the paper compute, as reusable
+functions: expert semantic profiles, redundancy statistics, overlap
+structure, and the full speedup accounting used by the benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import metrics
+from repro.core.dssoftmax import DSState
+
+
+def expert_sizes(state: DSState) -> np.ndarray:
+    return np.asarray(state.mask).sum(axis=1)
+
+
+def redundancy_histogram(state: DSState) -> dict[int, int]:
+    """#experts-per-class histogram (paper Fig. 5b's y-axis)."""
+    red = np.asarray(state.mask).sum(axis=0)
+    vals, counts = np.unique(red, return_counts=True)
+    return {int(v): int(c) for v, c in zip(vals, counts)}
+
+
+def overlap_matrix(state: DSState) -> np.ndarray:
+    """Jaccard overlap between experts' class sets (K, K)."""
+    m = np.asarray(state.mask, dtype=np.float64)
+    inter = m @ m.T
+    sizes = m.sum(axis=1)
+    union = sizes[:, None] + sizes[None, :] - inter
+    return inter / np.maximum(union, 1.0)
+
+
+def exclusive_classes(state: DSState, expert: int) -> np.ndarray:
+    """Classes living ONLY in `expert` (the paper interrogates the smallest
+    expert's exclusive words and finds semantic clusters)."""
+    m = np.asarray(state.mask)
+    only = m[expert] & (m.sum(axis=0) == 1)
+    return np.nonzero(only)[0]
+
+
+def speedup_report(
+    state: DSState,
+    expert_choices: np.ndarray,
+    vocab: Optional[int] = None,
+    v_pad: Optional[int] = None,
+) -> dict:
+    """The paper's speedup formula + the TPU padded-cost variant + the
+    utilization CV the load loss controls."""
+    sizes = expert_sizes(state)
+    K = sizes.shape[0]
+    vocab = vocab or state.mask.shape[1]
+    util = metrics.utilization(expert_choices, K)
+    out = {
+        "paper_speedup": metrics.paper_speedup(vocab, sizes, util),
+        "util_cv": float(np.std(util) / max(np.mean(util), 1e-12)),
+        "mean_redundancy": float(np.asarray(state.mask).sum(0).mean()),
+        "expert_sizes": sizes,
+        "utilization": util,
+    }
+    if v_pad:
+        out["padded_speedup"] = metrics.padded_speedup(vocab, v_pad, K)
+    return out

@@ -1,0 +1,106 @@
+"""Baselines the paper compares against (§3, Tables 1–4).
+
+* Full softmax — the O(N·d) reference.
+* SVD-Softmax (Shim et al., 2017) — post-approximation: preview logits from a
+  width-W window of the SVD-rotated embedding, refine only the top-N_t
+  preview candidates with the full dot product.
+* D-Softmax (Chen et al., 2015) — differentiated softmax: frequency-sorted
+  vocabulary buckets use decreasing embedding widths (slices of h).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Full softmax
+# ---------------------------------------------------------------------------
+
+def full_topk(w: jax.Array, h: jax.Array, k: int):
+    """w: (N, d), h: (B, d) → (values, ids) (B, k)."""
+    z = jnp.einsum("nd,bd->bn", w.astype(jnp.float32), h.astype(jnp.float32))
+    return jax.lax.top_k(z, k)
+
+
+def full_flops(n: int, d: int, batch: int = 1) -> int:
+    return 2 * batch * n * d
+
+
+# ---------------------------------------------------------------------------
+# SVD-Softmax
+# ---------------------------------------------------------------------------
+
+class SVDSoftmax(NamedTuple):
+    b_tilde: jax.Array  # (N, d) = U·S, rows in "importance-sorted" column space
+    v_t: jax.Array      # (d, d)
+    window: int         # preview width W
+    n_top: int          # candidates refined with full width
+
+
+def svd_build(w: jax.Array, window: int, n_top: int) -> SVDSoftmax:
+    """Decompose a trained softmax W = U·S·V^T (one-off, after training)."""
+    u, s, vt = jnp.linalg.svd(w.astype(jnp.float32), full_matrices=False)
+    return SVDSoftmax(b_tilde=u * s[None, :], v_t=vt, window=window, n_top=n_top)
+
+
+def svd_topk(m: SVDSoftmax, h: jax.Array, k: int):
+    """Two-stage preview/refine top-k. h: (B, d)."""
+    h_rot = jnp.einsum("ij,bj->bi", m.v_t, h.astype(jnp.float32))  # (B, d)
+    preview = jnp.einsum("nw,bw->bn", m.b_tilde[:, : m.window], h_rot[:, : m.window])
+    _, cand = jax.lax.top_k(preview, m.n_top)  # (B, n_top)
+    rows = m.b_tilde[cand]  # (B, n_top, d)
+    exact = jnp.einsum("btd,bd->bt", rows, h_rot)
+    vals, pos = jax.lax.top_k(exact, k)
+    ids = jnp.take_along_axis(cand, pos, axis=1)
+    return vals, ids
+
+
+def svd_flops(n: int, d: int, window: int, n_top: int, batch: int = 1) -> int:
+    # rotation d² + preview N·W + refine N_t·d  (per query, x2 for MAC)
+    return 2 * batch * (d * d + n * window + n_top * d)
+
+
+# ---------------------------------------------------------------------------
+# D-Softmax
+# ---------------------------------------------------------------------------
+
+class DSoftmax(NamedTuple):
+    """Frequency-bucketed embedding widths. blocks[i]: (n_i, d_i) uses
+    h[:, :d_i] (nested prefix slices, as in differentiated softmax)."""
+
+    blocks: tuple
+    sizes: tuple
+    dims: tuple
+
+
+def dsoftmax_build(key, n: int, d: int, fractions: Sequence[float], dims: Sequence[int]):
+    sizes = [int(round(f * n)) for f in fractions]
+    sizes[-1] = n - sum(sizes[:-1])
+    ks = jax.random.split(key, len(sizes))
+    blocks = tuple(
+        (jax.random.normal(ks[i], (sizes[i], dims[i])) / np.sqrt(dims[i])).astype(jnp.float32)
+        for i in range(len(sizes))
+    )
+    return DSoftmax(blocks=blocks, sizes=tuple(sizes), dims=tuple(dims))
+
+
+def dsoftmax_logits(m: DSoftmax, h: jax.Array) -> jax.Array:
+    zs = [
+        jnp.einsum("nd,bd->bn", blk, h[:, :dim].astype(jnp.float32))
+        for blk, dim in zip(m.blocks, m.dims)
+    ]
+    return jnp.concatenate(zs, axis=1)
+
+
+def dsoftmax_topk(m: DSoftmax, h: jax.Array, k: int):
+    return jax.lax.top_k(dsoftmax_logits(m, h), k)
+
+
+def dsoftmax_flops(m: DSoftmax, batch: int = 1) -> int:
+    return 2 * batch * sum(n_i * d_i for n_i, d_i in zip(m.sizes, m.dims))

@@ -1,0 +1,31 @@
+"""Sort-based expert dispatch indices (shared by the MoE FFN and the
+DS-Softmax head — the paper's sparse mixture IS an MoE over vocabulary
+shards, so both use the same machinery).
+
+Everything here is index arithmetic on int32 vectors — the heavy payload
+(activations) is moved by the caller with per-k scatters/gathers so no
+(assignments × d_model) tensor is ever materialized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dispatch_indices(e_flat: jax.Array, num_experts: int, capacity: int):
+    """Assignment slots for a flat expert-id vector.
+
+    e_flat: (A,) int — expert chosen per assignment (A = tokens·top_k).
+    Returns (slot (A,) int32, valid (A,) bool): ``slot`` is the position of
+    the assignment inside its expert's capacity buffer (stable order),
+    ``valid`` is False where the expert overflowed ``capacity``.
+    """
+    A = e_flat.shape[0]
+    order = jnp.argsort(e_flat, stable=True)
+    sorted_e = e_flat[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(num_experts, dtype=sorted_e.dtype),
+                             side="left")
+    slot_sorted = jnp.arange(A, dtype=jnp.int32) - first[sorted_e].astype(jnp.int32)
+    slot = jnp.zeros((A,), jnp.int32).at[order].set(slot_sorted)
+    valid = slot < capacity
+    return slot, valid

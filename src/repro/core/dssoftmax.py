@@ -1,0 +1,499 @@
+"""DS-Softmax: the paper's doubly-sparse softmax layer.
+
+Parameters (a plain pytree, shardable by path):
+    gate:    U (K, d)      — sparse-mixture gating network
+    experts: W (K, N, d)   — per-expert class embeddings (pruned over training)
+
+Non-trainable state:
+    mask:    (K, N) bool   — surviving classes per expert (group-lasso pruned)
+
+Three compute paths:
+
+* ``loss(..., dispatch='dense')`` — exact reference: computes every expert's
+  logits for every token and selects via the sparse gate. O(K·T·N·d); used
+  for smoke tests / small models and as the oracle for the production paths.
+* ``loss(..., dispatch='sorted')`` — production: sort tokens by their top-1
+  expert (the same machinery an EP MoE uses for its FFN, applied to the
+  head), run one dense (C, d)x(d, N) matmul per expert, scatter the CE back.
+  O(T·N·d·capacity_factor) — the K× blow-up is gone.
+* ``serve_topk`` — inference: gather the chosen expert's packed active rows
+  (static ``V_max`` padding for TPU) and top-k the small softmax. The Pallas
+  kernel in ``repro/kernels`` fuses this gather→matmul→top-k.
+
+All probabilities follow the paper: logits are scaled by the *un-renormalized*
+top-1 gate value (inverse temperature, Eq. 2); pruned classes contribute
+``exp(0)`` to the train normalizer in ``mask_mode='zero'`` (faithful — the
+rows are literally zero) or are excluded via ``-inf`` in ``'neg_inf'``
+(beyond-paper alignment of train and serve normalizers).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DSSoftmaxConfig
+from repro.core import losses as L
+from repro.core import pruning
+from repro.core.gating import sparse_gate_matrix, top1_gate
+
+NEG_INF = -1e9
+
+
+class DSState(NamedTuple):
+    mask: jax.Array  # (K, N) bool
+
+
+class DSAux(NamedTuple):
+    """Auxiliary losses + diagnostics returned by :func:`loss`."""
+
+    lasso: jax.Array
+    expert_lasso: jax.Array
+    load: jax.Array
+    drop_frac: jax.Array  # sorted dispatch only; 0.0 for dense
+    gate_entropy: jax.Array
+
+
+def init(
+    key: jax.Array,
+    d: int,
+    n_classes: int,
+    cfg: DSSoftmaxConfig,
+    dtype=jnp.float32,
+    n_valid: Optional[int] = None,
+):
+    """Initialize params + state. Experts start as full softmaxes (paper).
+
+    ``n_classes`` may be TP-padded; columns ≥ ``n_valid`` start (and stay)
+    masked out — they behave exactly like permanently-pruned classes.
+    """
+    kg, ke = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(d)
+    params = {
+        "gate": (jax.random.normal(kg, (cfg.num_experts, d)) * scale).astype(dtype),
+        "experts": (jax.random.normal(ke, (cfg.num_experts, n_classes, d)) * scale).astype(dtype),
+    }
+    mask = jnp.ones((cfg.num_experts, n_classes), dtype=jnp.bool_)
+    if n_valid is not None and n_valid < n_classes:
+        mask = mask & (jnp.arange(n_classes) < n_valid)[None, :]
+    state = DSState(mask=mask)
+    return params, state
+
+
+def abstract_params(d: int, n_classes: int, cfg: DSSoftmaxConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins (for the dry-run: no allocation)."""
+    params = {
+        "gate": jax.ShapeDtypeStruct((cfg.num_experts, d), dtype),
+        "experts": jax.ShapeDtypeStruct((cfg.num_experts, n_classes, d), dtype),
+    }
+    state = DSState(mask=jax.ShapeDtypeStruct((cfg.num_experts, n_classes), jnp.bool_))
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# Training forward / loss
+# ---------------------------------------------------------------------------
+
+def _masked_logits(z: jax.Array, mask: jax.Array, mode: str) -> jax.Array:
+    """Apply the class mask to raw logits z (…, N) with mask (…, N)."""
+    if mode == "zero":
+        # Faithful: pruned rows are zero weights => logit exactly 0.
+        return z * mask.astype(z.dtype)
+    return jnp.where(mask, z, NEG_INF)
+
+
+def logits_dense(params, state: DSState, h: jax.Array, cfg: DSSoftmaxConfig):
+    """Reference path: full (T, N) mixture logits via the sparse gate.
+
+    h: (T, d) → logits (T, N) float32, plus (expert_idx, g, G).
+    """
+    expert_idx, g, G = top1_gate(params["gate"], h)
+    w = pruning.apply_mask(params["experts"], state.mask)  # (K, N, d)
+    # All-expert logits then one-hot select (exact; O(K·T·N·d)).
+    z_all = jnp.einsum("td,knd->tkn", h.astype(jnp.float32), w.astype(jnp.float32))
+    Gs = sparse_gate_matrix(G)  # (T, K) — only top-1 nonzero, grads flow
+    z = jnp.einsum("tkn,tk->tn", z_all, Gs)
+    sel_mask = state.mask[expert_idx]  # (T, N)
+    z = _masked_logits(z, sel_mask, cfg.mask_mode)
+    return z, (expert_idx, g, G)
+
+
+def _sorted_dispatch(expert_idx: jax.Array, T: int, K: int, capacity: int):
+    """Group tokens by expert. Returns (order, slot, valid).
+
+    order: (T,) token permutation grouped by expert;
+    slot:  (T,) position of token ``order[i]`` inside its expert buffer;
+    valid: (T,) False where the token overflowed the expert capacity.
+    """
+    order = jnp.argsort(expert_idx, stable=True)
+    sorted_e = expert_idx[order]
+    # Rank within the expert group = i - first_occurrence(sorted_e[i]).
+    first = jnp.searchsorted(sorted_e, jnp.arange(K, dtype=sorted_e.dtype), side="left")
+    slot = jnp.arange(T, dtype=jnp.int32) - first[sorted_e].astype(jnp.int32)
+    valid = slot < capacity
+    return order, slot, valid
+
+
+def loss(
+    params,
+    state: DSState,
+    h: jax.Array,
+    labels: jax.Array,
+    cfg: DSSoftmaxConfig,
+    *,
+    dispatch: str = "dense",
+    capacity_factor: float = 2.0,
+) -> tuple[jax.Array, DSAux]:
+    """Mean cross-entropy + the paper's aux losses.
+
+    h: (T, d), labels: (T,) int32. Returns (task_ce, DSAux).
+    Total train objective = task_ce + λ_lasso·lasso + λ_expert·expert
+    + λ_load·load (assembled by the caller so each λ stays visible).
+    """
+    T, d = h.shape
+    K, N, _ = params["experts"].shape
+
+    if dispatch == "dense":
+        z, (expert_idx, g, G) = logits_dense(params, state, h, cfg)
+        ce = _ce_from_logits(z, labels)
+        drop = jnp.zeros((), jnp.float32)
+    elif dispatch == "sorted":
+        expert_idx, g, G = top1_gate(params["gate"], h)
+        capacity = int(max(1, round(T / K * capacity_factor)))
+        order, slot, valid = _sorted_dispatch(expert_idx, T, K, capacity)
+        w = pruning.apply_mask(params["experts"], state.mask)
+        Gs = sparse_gate_matrix(G)  # (T, K)
+        g_kept = jnp.sum(Gs, axis=-1)  # == g but with Eq-1 gradients
+        # Dispatch tokens (and their gate scale / labels) into (K, C, ·).
+        buf = jnp.zeros((K, capacity, d), h.dtype)
+        buf = buf.at[expert_idx[order], slot].set(
+            jnp.where(valid[:, None], h[order], 0.0), mode="drop"
+        )
+        lab_buf = jnp.full((K, capacity), 0, labels.dtype)
+        lab_buf = lab_buf.at[expert_idx[order], slot].set(labels[order], mode="drop")
+        g_buf = jnp.zeros((K, capacity), jnp.float32)
+        g_buf = g_buf.at[expert_idx[order], slot].set(
+            jnp.where(valid, g_kept[order], 0.0), mode="drop"
+        )
+        z = jnp.einsum("kcd,knd->kcn", buf.astype(jnp.float32), w.astype(jnp.float32))
+        z = z * g_buf[..., None]
+        z = _masked_logits(z, state.mask[:, None, :], cfg.mask_mode)
+        ce_buf = _ce_from_logits(z.reshape(K * capacity, N), lab_buf.reshape(-1), mean=False)
+        ce_buf = ce_buf.reshape(K, capacity)
+        # Gather each token's CE back; overflowed tokens are dropped from the
+        # mean (and counted).
+        tok_ce = ce_buf[expert_idx[order], jnp.minimum(slot, capacity - 1)]
+        tok_ce = jnp.where(valid, tok_ce, 0.0)
+        n_valid = jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+        ce = jnp.sum(tok_ce) / n_valid
+        drop = 1.0 - n_valid / T
+    else:
+        raise ValueError(f"unknown dispatch {dispatch!r}")
+
+    w = params["experts"]
+    aux = DSAux(
+        lasso=L.group_lasso(w, state.mask, cfg.gamma),
+        expert_lasso=L.expert_lasso(w, state.mask),
+        load=L.load_balance(jnp.sum(sparse_gate_matrix(G), axis=tuple(range(G.ndim - 1)))),
+        drop_frac=drop,
+        gate_entropy=-jnp.mean(jnp.sum(G * jnp.log(G + 1e-10), axis=-1)),
+    )
+    return ce, aux
+
+
+def loss_rows(
+    params,
+    state: DSState,
+    h: jax.Array,
+    labels: jax.Array,
+    cfg: DSSoftmaxConfig,
+    *,
+    capacity_factor: float = 1.25,
+    label_mask: Optional[jax.Array] = None,
+) -> tuple[jax.Array, DSAux]:
+    """Sorted-dispatch CE over batched rows. h: (B, S, d), labels: (B, S).
+
+    Tokens are grouped by expert *within each row* (vmap over B), so under
+    batch→data sharding the argsort/scatter stay device-local — the only
+    cross-device traffic for the head is the vocab-sharded expert tables
+    (this is the production train path for the big-model heads).
+    ``label_mask`` (B, S) excludes positions (e.g. vision-prefix) from CE.
+    """
+    B, S, d = h.shape
+    K, N, _ = params["experts"].shape
+    from repro.distributed.hints import constrain, constrain_batch
+
+    h = constrain_batch(h)
+    expert_idx, g, G = top1_gate(params["gate"], h)  # (B,S), (B,S), (B,S,K)
+    Gs = sparse_gate_matrix(G)
+    g_kept = jnp.sum(Gs, axis=-1)  # (B,S) — g with Eq-1 gradients
+    capacity = int(max(1, round(S / K * capacity_factor)))
+    w = pruning.apply_mask(params["experts"], state.mask)
+
+    def dispatch_row(h_r, lab_r, e_r, g_r):
+        order, slot, valid = _sorted_dispatch(e_r, S, K, capacity)
+        buf = jnp.zeros((K, capacity, d), h_r.dtype)
+        buf = buf.at[e_r[order], slot].set(
+            jnp.where(valid[:, None], h_r[order], 0.0), mode="drop"
+        )
+        lab_buf = jnp.zeros((K, capacity), lab_r.dtype)
+        lab_buf = lab_buf.at[e_r[order], slot].set(lab_r[order], mode="drop")
+        g_buf = jnp.zeros((K, capacity), jnp.float32)
+        g_buf = g_buf.at[e_r[order], slot].set(
+            jnp.where(valid, g_r[order], 0.0), mode="drop"
+        )
+        return buf, lab_buf, g_buf, order, slot, valid
+
+    buf, lab_buf, g_buf, order, slot, valid = jax.vmap(dispatch_row)(
+        h, labels, expert_idx, g_kept
+    )  # (B,K,C,d), (B,K,C), (B,K,C), (B,S), (B,S), (B,S)
+
+    # One batched matmul for all rows — logits explicitly vocab-sharded
+    # (b→batch axes by propagation, n→model), CE is vocab-parallel.
+    from repro.distributed.hints import BATCH
+
+    # Streaming vocab-parallel CE: the (B,K,C,N) fp32 logits are never fully
+    # materialized — capacity is processed in chunks under jax.checkpoint, so
+    # one chunk's logits are live at a time and the backward recomputes them
+    # (fused-softmax-CE, the Megatron vocab-parallel recipe).
+    n_chunks = 1
+    for cand in (8, 4, 2):
+        if capacity % cand == 0 and capacity // cand >= 8:
+            n_chunks = cand
+            break
+    cc = capacity // n_chunks
+
+    def ce_chunk(_, inp):
+        buf_i, lab_i, g_i = inp  # (B,K,cc,d), (B,K,cc), (B,K,cc)
+        z = jnp.einsum("bkcd,knd->bkcn", buf_i, w, preferred_element_type=jnp.float32)
+        z = constrain(z, BATCH, None, None, "model")
+        z = z * g_i[..., None]
+        z = _masked_logits(z, state.mask[None, :, None, :], cfg.mask_mode)
+        return (), _ce_from_logits(z, lab_i, mean=False)  # (B,K,cc)
+
+    def split(t):  # (B,K,C,...) -> (nc, B,K,cc,...)
+        shp = t.shape
+        t = t.reshape(shp[0], shp[1], n_chunks, cc, *shp[3:])
+        return jnp.moveaxis(t, 2, 0)
+
+    if n_chunks > 1:
+        _, ce_chunks = jax.lax.scan(
+            jax.checkpoint(ce_chunk), (), (split(buf), split(lab_buf), split(g_buf))
+        )
+        ce_buf = jnp.moveaxis(ce_chunks, 0, 2).reshape(B, K, capacity)
+    else:
+        _, ce_buf = ce_chunk((), (buf, lab_buf, g_buf))
+
+    def gather_row(ce_r, e_r, order, slot, valid):
+        tok_ce = ce_r[e_r[order], jnp.minimum(slot, capacity - 1)]
+        tok_ce = jnp.where(valid, tok_ce, 0.0)
+        inv = jnp.zeros((S,), jnp.int32).at[order].set(jnp.arange(S, dtype=jnp.int32))
+        return tok_ce[inv], valid[inv]
+
+    tok_ce, valid = jax.vmap(gather_row)(ce_buf, expert_idx, order, slot, valid)  # (B,S)
+    if label_mask is not None:
+        valid = jnp.logical_and(valid, label_mask.astype(bool))
+    n_valid = jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+    ce = jnp.sum(jnp.where(valid, tok_ce, 0.0)) / n_valid
+    count = B * S if label_mask is None else jnp.sum(label_mask.astype(jnp.float32))
+    drop = 1.0 - n_valid / jnp.maximum(count, 1.0)
+
+    we = params["experts"]
+    aux = DSAux(
+        lasso=L.group_lasso(we, state.mask, cfg.gamma),
+        expert_lasso=L.expert_lasso(we, state.mask),
+        load=L.load_balance(jnp.sum(Gs, axis=tuple(range(Gs.ndim - 1)))),
+        drop_frac=drop,
+        gate_entropy=-jnp.mean(jnp.sum(G * jnp.log(G + 1e-10), axis=-1)),
+    )
+    return ce, aux
+
+
+def total_loss(params, state, h, labels, cfg: DSSoftmaxConfig, **kw):
+    """task CE + λ-weighted aux losses (paper Algorithm 1's L_all)."""
+    ce, aux = loss(params, state, h, labels, cfg, **kw)
+    full = (
+        ce
+        + cfg.lambda_lasso * aux.lasso
+        + cfg.lambda_expert * aux.expert_lasso
+        + cfg.lambda_load * aux.load
+    )
+    return full, (ce, aux)
+
+
+def _ce_from_logits(z: jax.Array, labels: jax.Array, mean: bool = True) -> jax.Array:
+    """Vocab-parallel-safe CE: the gold logit is extracted with a one-hot
+    contraction over the class axis (local partial + all-reduce under
+    GSPMD) — ``take_along_axis`` on a model-sharded axis would all-gather
+    the full logits tensor."""
+    lse = jax.nn.logsumexp(z, axis=-1)
+    onehot = jax.nn.one_hot(labels, z.shape[-1], dtype=jnp.bfloat16)
+    gold = jnp.einsum("...n,...n->...", z.astype(jnp.float32), onehot.astype(jnp.float32))
+    ce = lse - gold
+    return jnp.mean(ce) if mean else ce
+
+
+# ---------------------------------------------------------------------------
+# Pruning step (between optimizer steps)
+# ---------------------------------------------------------------------------
+
+def update_mask(params, state: DSState, task_loss, cfg: DSSoftmaxConfig) -> DSState:
+    new_mask = pruning.prune_step(
+        params["experts"],
+        state.mask,
+        jnp.asarray(task_loss, jnp.float32),
+        gamma=cfg.gamma,
+        threshold=cfg.prune_task_loss_threshold,
+    )
+    return DSState(mask=new_mask)
+
+
+# ---------------------------------------------------------------------------
+# Serving: packed experts + top-k retrieval
+# ---------------------------------------------------------------------------
+
+class ServeTable(NamedTuple):
+    """Static-shape packed experts for TPU serving.
+
+    ids:     (K, V_pad) int32 — class id per packed row; -1 for padding.
+    weights: (K, V_pad, d)    — gathered active rows (zeros for padding).
+    """
+
+    ids: jax.Array
+    weights: jax.Array
+
+    @property
+    def v_pad(self) -> int:
+        return self.ids.shape[1]
+
+
+def _round_up(x: int, m: int = 128) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pack_experts(params, state: DSState, pad: Optional[int] = None) -> ServeTable:
+    """Compact each expert's surviving rows into a padded static table.
+
+    NOTE: sizes come from the concrete mask, so this runs outside jit
+    (it is a one-off packing step after training / checkpoint load).
+    """
+    mask = jax.device_get(state.mask)
+    w = jax.device_get(params["experts"])
+    K, N, d = w.shape
+    sizes = mask.sum(axis=1)
+    v_pad = int(pad) if pad else _round_up(max(1, int(sizes.max())))
+    import numpy as np
+
+    ids = np.full((K, v_pad), -1, np.int32)
+    weights = np.zeros((K, v_pad, d), w.dtype)
+    for k in range(K):
+        idx = np.nonzero(mask[k])[0][:v_pad]
+        ids[k, : len(idx)] = idx
+        weights[k, : len(idx)] = w[k, idx]
+    return ServeTable(ids=jnp.asarray(ids), weights=jnp.asarray(weights))
+
+
+def serve_topk(
+    gate_w: jax.Array,
+    table: ServeTable,
+    h: jax.Array,
+    k: int,
+    *,
+    kernel: str = "jnp",
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k class retrieval (paper inference). h: (B, d) → values/ids (B, k).
+
+    kernel='jnp'    — gather + matmul in plain jnp (oracle; XLA fuses the
+                      gather reasonably but materializes (B, V_pad, d)).
+    kernel='pallas' — fused streaming kernel from repro.kernels (TPU target;
+                      validated under interpret=True on CPU).
+    """
+    from repro.distributed.hints import BATCH, constrain, constrain_batch
+
+    h = constrain_batch(h)
+    expert_idx, g, _ = top1_gate(gate_w, h)
+    if kernel == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.dss_topk(table.weights, table.ids, h, expert_idx, g, k)
+    if kernel == "grouped":
+        return _serve_topk_grouped(table, h, expert_idx, g, k)
+    w_sel = constrain(table.weights[expert_idx], BATCH, "model", None)  # (B,V_pad,d)
+    ids_sel = constrain(table.ids[expert_idx], BATCH, "model")  # (B, V_pad)
+    z = jnp.einsum("bvd,bd->bv", w_sel, h, preferred_element_type=jnp.float32)
+    z = constrain(z, BATCH, "model")
+    z = z * g[:, None]
+    z = jnp.where(ids_sel >= 0, z, NEG_INF)
+    vals, pos = jax.lax.top_k(z, k)
+    ids = jnp.take_along_axis(ids_sel, pos, axis=1)
+    return vals, ids
+
+
+def _serve_topk_grouped(
+    table: ServeTable, h: jax.Array, expert_idx: jax.Array, g: jax.Array, k: int,
+    capacity_factor: float = 2.0,
+):
+    """Beyond-paper batched serving: tokens grouped by expert, one
+    weight-stationary (C, d)×(d, V_pad) MXU matmul per expert — the packed
+    tables are read once per *expert*, not once per token (the naive gather
+    path moves B·V_pad·d bytes; this moves K·V_pad·d + dispatch).
+
+    Tokens overflowing an expert's capacity fall back to the gather path
+    (rare with the load-balance loss; exactness preserved).
+    """
+    from repro.core.dispatch import dispatch_indices
+    from repro.distributed.hints import constrain
+
+    B, d = h.shape
+    K, v_pad, _ = table.weights.shape
+    capacity = int(max(1, round(B / K * capacity_factor)))
+    slot, valid = dispatch_indices(expert_idx, K, capacity)
+
+    buf = jnp.zeros((K, capacity, d), h.dtype)
+    s_k = jnp.where(valid, slot, capacity)
+    buf = buf.at[expert_idx, s_k].set(h * g[:, None].astype(h.dtype), mode="drop")
+    z = jnp.einsum("kcd,kvd->kcv", buf, table.weights,
+                   preferred_element_type=jnp.float32)  # (K, C, V_pad)
+    z = constrain(z, None, None, "model")
+    z = jnp.where(table.ids[:, None, :] >= 0, z, NEG_INF)
+    vals_b, pos_b = jax.lax.top_k(z, k)  # (K, C, k)
+    ids_b = jnp.take_along_axis(
+        jnp.broadcast_to(table.ids[:, None, :], z.shape), pos_b, axis=2
+    )
+    vals = vals_b[expert_idx, jnp.minimum(slot, capacity - 1)]  # (B, k)
+    ids = ids_b[expert_idx, jnp.minimum(slot, capacity - 1)]
+
+    # Bounded exact fallback: the (few) capacity-overflow tokens take the
+    # gather path on a fixed O-slot buffer — cost O(O·V_pad·d), not B·V_pad·d.
+    O = capacity
+    over_idx = jnp.nonzero(~valid, size=O, fill_value=0)[0]  # (O,)
+    h_o = h[over_idx] * g[over_idx][:, None].astype(h.dtype)
+    w_o = table.weights[expert_idx[over_idx]]  # (O, V_pad, d)
+    ids_o = table.ids[expert_idx[over_idx]]
+    z_o = jnp.einsum("ovd,od->ov", w_o, h_o, preferred_element_type=jnp.float32)
+    z_o = jnp.where(ids_o >= 0, z_o, NEG_INF)
+    v_o, p_o = jax.lax.top_k(z_o, k)
+    i_o = jnp.take_along_axis(ids_o, p_o, axis=1)
+    use = (~valid)[over_idx][:, None]
+    vals = vals.at[over_idx].set(jnp.where(use, v_o, vals[over_idx]))
+    ids = ids.at[over_idx].set(jnp.where(use, i_o, ids[over_idx]))
+    return vals, ids
+
+
+def serve_full_probs(
+    gate_w: jax.Array, table: ServeTable, h: jax.Array, n_classes: int
+) -> jax.Array:
+    """Full sparse categorical distribution (probability mass only on the
+    chosen expert's surviving classes). For evaluation/debug. (B, N)."""
+    expert_idx, g, _ = top1_gate(gate_w, h)
+    w_sel = table.weights[expert_idx]
+    ids_sel = table.ids[expert_idx]
+    z = jnp.einsum("bvd,bd->bv", w_sel.astype(jnp.float32), h.astype(jnp.float32)) * g[:, None]
+    z = jnp.where(ids_sel >= 0, z, NEG_INF)
+    p = jax.nn.softmax(z, axis=-1)
+    out = jnp.zeros((h.shape[0], n_classes), jnp.float32)
+    out = out.at[jnp.arange(h.shape[0])[:, None], jnp.maximum(ids_sel, 0)].add(
+        jnp.where(ids_sel >= 0, p, 0.0)
+    )
+    return out

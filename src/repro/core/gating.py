@@ -1,0 +1,44 @@
+"""Sparse mixture gating (paper Eq. 1).
+
+``G_k(h) = softmax(U h)_k``; only the top-1 expert's gate value is kept (all
+others zeroed) *after* normalization, so gradients still flow to the whole
+gate matrix ``U`` through the softmax normalizer. The kept gate value acts as
+a learned inverse temperature on the selected expert's logits (paper §2.3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gate_values(gate_w: jax.Array, h: jax.Array) -> jax.Array:
+    """Normalized gate values G (…, K).  gate_w: (K, d), h: (…, d)."""
+    logits = jnp.einsum("...d,kd->...k", h.astype(jnp.float32), gate_w.astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def top1_gate(gate_w: jax.Array, h: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-1 sparse gate.
+
+    Returns ``(expert_idx, g, G)`` where ``expert_idx`` (…,) int32 is the
+    argmax expert, ``g`` (…,) is its (un-renormalized) gate value and ``G``
+    (…, K) the full normalized gate vector (for the load-balance loss).
+    """
+    G = gate_values(gate_w, h)
+    expert_idx = jnp.argmax(G, axis=-1).astype(jnp.int32)
+    g = jnp.max(G, axis=-1)
+    return expert_idx, g, G
+
+
+def sparse_gate_matrix(G: jax.Array) -> jax.Array:
+    """G' (…, K): the paper's masked gate — top-1 kept, others zero.
+
+    Differentiable w.r.t. G (straight-through on the argmax mask, which is
+    exactly Eq. 1: the mask itself is not differentiated).
+    """
+    top = jnp.max(G, axis=-1, keepdims=True)
+    mask = (G >= top).astype(G.dtype)
+    # Break ties deterministically toward the lowest index.
+    first = jnp.cumsum(mask, axis=-1) <= 1
+    mask = mask * first.astype(G.dtype)
+    return G * jax.lax.stop_gradient(mask)

@@ -1,0 +1,49 @@
+"""DS-Softmax auxiliary losses (paper Eqs. 3–6).
+
+* ``group_lasso``  (Eq. 3/4): sum of row l2 norms over rows still above the
+  pruning threshold γ — rows already below γ are excluded (they are about to
+  be pruned; the paper zeroes them in the loss).
+* ``load_balance`` (Eq. 5): squared coefficient of variation of the summed
+  sparse gate values per expert (Shazeer'17 importance loss on G').
+* ``expert_lasso`` (Eq. 6): expert-level group lasso Σ_k ||W^(k)||_F —
+  encourages each class to live in few experts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def row_norms(experts_w: jax.Array, mask: jax.Array) -> jax.Array:
+    """l2 norm of each class row. experts_w: (K, N, d), mask: (K, N) → (K, N)."""
+    w = experts_w.astype(jnp.float32) * mask[..., None].astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(jnp.square(w), axis=-1) + 1e-12)
+
+
+def group_lasso(experts_w: jax.Array, mask: jax.Array, gamma: float) -> jax.Array:
+    """Eq. 3 with Eq. 4's thresholding: only rows with ||W_c|| > γ contribute."""
+    norms = row_norms(experts_w, mask)
+    keep = (norms > gamma).astype(norms.dtype)
+    return jnp.sum(norms * jax.lax.stop_gradient(keep))
+
+
+def expert_lasso(experts_w: jax.Array, mask: jax.Array) -> jax.Array:
+    """Eq. 6: Σ_k Frobenius norm of each (masked) expert."""
+    w = experts_w.astype(jnp.float32) * mask[..., None].astype(jnp.float32)
+    return jnp.sum(jnp.sqrt(jnp.sum(jnp.square(w), axis=(1, 2)) + 1e-12))
+
+
+def cv_squared(x: jax.Array, eps: float = 1e-10) -> jax.Array:
+    """Squared coefficient of variation along the last axis."""
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1)
+    var = jnp.var(x, axis=-1)
+    return var / (jnp.square(mean) + eps)
+
+
+def load_balance(G_sparse_sum: jax.Array) -> jax.Array:
+    """Eq. 5: CV(Σ_h G'_k(h))² over experts.
+
+    ``G_sparse_sum``: (K,) — batch-summed sparse gate values per expert.
+    """
+    return cv_squared(G_sparse_sum)

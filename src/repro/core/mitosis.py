@@ -1,0 +1,43 @@
+"""Mitosis training (paper §2.3, Fig. 2): progressive expert cloning.
+
+Train with few experts; when converged, split every expert into two
+near-identical offspring (sparsity masks inherited) and keep training. The
+train-time memory footprint stays bounded by the *pruned* expert sizes rather
+than K full softmaxes (paper: ≤3.25× one softmax for DS-64 on PTB).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dssoftmax import DSState
+
+
+def clone_experts(key: jax.Array, params: dict, state: DSState, noise: float = 1e-2):
+    """K experts → 2K. Gate rows get ± noise so the offspring diverge."""
+    gate = params["gate"]  # (K, d)
+    w = params["experts"]  # (K, N, d)
+    eps = jax.random.normal(key, gate.shape, gate.dtype) * noise * jnp.std(
+        gate.astype(jnp.float32)
+    ).astype(gate.dtype)
+    new_gate = jnp.concatenate([gate + eps, gate - eps], axis=0)
+    new_w = jnp.concatenate([w, w], axis=0)
+    new_mask = jnp.concatenate([state.mask, state.mask], axis=0)
+    return {"gate": new_gate, "experts": new_w}, DSState(mask=new_mask)
+
+
+def memory_ratio(state: DSState) -> float:
+    """Training memory in units of ONE full softmax (paper Fig. 5a):
+    total surviving rows across experts / N."""
+    mask = jax.device_get(state.mask)
+    return float(mask.sum() / mask.shape[1])
+
+
+def mitosis_schedule(start: int, target: int) -> list[int]:
+    """Expert counts visited: e.g. 2 → [2, 4, 8, ..., target]."""
+    ks = [start]
+    while ks[-1] < target:
+        ks.append(min(ks[-1] * 2, target))
+    if ks[-1] != target:
+        ks.append(target)
+    return ks

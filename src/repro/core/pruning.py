@@ -1,0 +1,64 @@
+"""Group-lasso pruning of expert class rows (paper Algorithm 1).
+
+A persistent boolean ``mask`` (K, N) tracks surviving classes per expert.
+Pruning is applied between optimizer steps, gated on the task loss being
+below threshold ``t`` (Algorithm 1's ``if L_task < t``). Once pruned, a row
+stays pruned (the weights are hard-zeroed via the mask).
+
+The paper's footnote 4 keeps *at least one copy of every class across all
+experts* during training (otherwise low-frequency words vanish and the
+speedup is vacuous); :func:`keep_one_copy` implements that guarantee.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import row_norms
+
+
+def keep_one_copy(
+    candidate_mask: jax.Array, norms: jax.Array, prev_mask: jax.Array
+) -> jax.Array:
+    """Ensure every *previously-alive* class column keeps ≥1 expert (the
+    max-norm one). Columns never alive (TP padding / already extinct) stay
+    dead — once-pruned-always-pruned."""
+    col_alive = jnp.any(candidate_mask, axis=0)  # (N,)
+    col_ever = jnp.any(prev_mask, axis=0)  # (N,)
+    best_k = jnp.argmax(norms, axis=0)  # (N,)
+    resurrection = jax.nn.one_hot(best_k, norms.shape[0], dtype=jnp.bool_).T  # (K, N)
+    resurrection = resurrection & col_ever[None, :]
+    return jnp.where(col_alive[None, :], candidate_mask, resurrection)
+
+
+def prune_step(
+    experts_w: jax.Array,
+    mask: jax.Array,
+    task_loss: jax.Array,
+    *,
+    gamma: float,
+    threshold: float,
+    enforce_one_copy: bool = True,
+) -> jax.Array:
+    """One pruning update: returns the new mask (jit-safe, branch-free)."""
+    norms = row_norms(experts_w, mask)
+    candidate = jnp.logical_and(mask, norms > gamma)
+    if enforce_one_copy:
+        candidate = keep_one_copy(candidate, norms, mask)
+    do_prune = task_loss < threshold
+    return jnp.where(do_prune, candidate, mask)
+
+
+def apply_mask(experts_w: jax.Array, mask: jax.Array) -> jax.Array:
+    """Hard-zero pruned rows (keeps dtype)."""
+    return experts_w * mask[..., None].astype(experts_w.dtype)
+
+
+def expert_sizes(mask: jax.Array) -> jax.Array:
+    """|v_k| per expert. mask: (K, N) → (K,) int32."""
+    return jnp.sum(mask.astype(jnp.int32), axis=-1)
+
+
+def redundancy(mask: jax.Array) -> jax.Array:
+    """Number of experts containing each class (paper Fig. 5b). (N,)."""
+    return jnp.sum(mask.astype(jnp.int32), axis=0)

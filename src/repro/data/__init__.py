@@ -1,0 +1,16 @@
+from repro.data.pipeline import DataPipeline, PipelineState
+from repro.data.synthetic import (
+    TopicLMStream,
+    classification_dataset,
+    hierarchy_dataset,
+    translation_dataset,
+)
+
+__all__ = [
+    "DataPipeline",
+    "PipelineState",
+    "TopicLMStream",
+    "classification_dataset",
+    "hierarchy_dataset",
+    "translation_dataset",
+]

@@ -1,0 +1,137 @@
+"""Synthetic datasets mirroring the paper's four evaluation domains.
+
+No external datasets exist offline, so each paper task gets a synthetic
+counterpart with the same *structure* (vocab scale, class distribution,
+hierarchy). Accuracy DELTAS between DS-Softmax and the full-softmax baseline
+are the validated quantity, not absolute scores (DESIGN.md §8).
+
+* :func:`hierarchy_dataset` — the paper's §3.1 two-level Gaussian hierarchy,
+  exactly Eqs. (7)–(9): super centers ~ N(0, d³I), sub centers ~
+  N(super, d²I), points ~ N(sub, dI), d=10, dim=100.
+* :func:`TopicLMStream` — Zipf-distributed LM corpus with a latent two-level
+  topic structure: each segment draws a topic; tokens draw from the topic's
+  overlapping sub-vocabulary with Zipf weights. A learnable hierarchy for
+  the DS head + realistic unigram skew (PTB/WikiText-2 stand-in).
+* :func:`translation_dataset` — deterministic toy translation (shift+reverse
+  cipher with per-position offsets) for the seq2seq/NMT table.
+* :func:`classification_dataset` — CASIA stand-in: uniform class
+  distribution (the paper stresses image classes are NOT Zipf-skewed),
+  Gaussian class prototypes on feature vectors.
+"""
+from __future__ import annotations
+
+from typing import Iterator, NamedTuple
+
+import numpy as np
+
+
+class HierarchyData(NamedTuple):
+    x: np.ndarray          # (n, dim) float32
+    y: np.ndarray          # (n,) int32 — sub-cluster label
+    super_of: np.ndarray   # (n_sub,) int32 — ground-truth super cluster per class
+
+
+def hierarchy_dataset(
+    n_super: int = 10,
+    n_sub_per_super: int = 10,
+    n_per_sub: int = 100,
+    dim: int = 100,
+    d: float = 10.0,
+    seed: int = 0,
+) -> HierarchyData:
+    rng = np.random.RandomState(seed)
+    n_sub = n_super * n_sub_per_super
+    supers = rng.normal(0, d ** 1.5, size=(n_super, dim))          # std² = d³
+    subs = np.repeat(supers, n_sub_per_super, axis=0) + rng.normal(
+        0, d, size=(n_sub, dim)
+    )                                                               # std² = d²
+    xs, ys = [], []
+    for c in range(n_sub):
+        xs.append(subs[c] + rng.normal(0, np.sqrt(d), size=(n_per_sub, dim)))
+        ys.append(np.full(n_per_sub, c, np.int32))
+    x = np.concatenate(xs).astype(np.float32)
+    y = np.concatenate(ys)
+    perm = rng.permutation(len(x))
+    super_of = np.repeat(np.arange(n_super, dtype=np.int32), n_sub_per_super)
+    return HierarchyData(x=x[perm], y=y[perm], super_of=super_of)
+
+
+class TopicLMStream:
+    """Deterministic, checkpointable synthetic LM corpus.
+
+    Batch ``i`` is a pure function of ``(seed, i)`` — restoring a data
+    pipeline after preemption is just "resume at step i".
+    """
+
+    def __init__(
+        self,
+        vocab: int = 10000,
+        n_topics: int = 20,
+        topic_frac: float = 0.15,
+        overlap_frac: float = 0.30,
+        zipf_a: float = 1.1,
+        seq_len: int = 64,
+        batch: int = 32,
+        seed: int = 0,
+    ):
+        self.vocab, self.seq_len, self.batch, self.seed = vocab, seq_len, batch, seed
+        rng = np.random.RandomState(seed + 12345)
+        # global Zipf unigram weights
+        ranks = np.arange(1, vocab + 1)
+        self.unigram = (1.0 / ranks ** zipf_a).astype(np.float64)
+        # topic sub-vocabularies: each topic owns a contiguous-ish block plus
+        # a shared "common words" pool (the overlap that motivates the
+        # paper's NON-exclusive hierarchy).
+        size = max(16, int(topic_frac * vocab))
+        n_common = max(8, int(overlap_frac * size))
+        common = np.argsort(-self.unigram)[:n_common]  # most-frequent words shared
+        self.topic_words = []
+        for t in range(n_topics):
+            own = rng.choice(vocab, size=size, replace=False)
+            words = np.unique(np.concatenate([own, common]))
+            self.topic_words.append(words)
+        self.n_topics = n_topics
+
+    def batch_at(self, step: int) -> np.ndarray:
+        """→ (batch, seq_len+1) int32 token ids."""
+        rng = np.random.RandomState((self.seed * 1_000_003 + step) % (2 ** 31))
+        out = np.empty((self.batch, self.seq_len + 1), np.int32)
+        for b in range(self.batch):
+            t = rng.randint(self.n_topics)
+            words = self.topic_words[t]
+            w = self.unigram[words]
+            w = w / w.sum()
+            out[b] = rng.choice(words, size=self.seq_len + 1, p=w)
+        return out
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        i = 0
+        while True:
+            yield self.batch_at(i)
+            i += 1
+
+
+def translation_dataset(
+    vocab: int = 7709, seq_len: int = 24, batch: int = 32, step: int = 0, seed: int = 0
+):
+    """Toy seq2seq: target = reversed source shifted by position-dependent
+    offset (deterministic given source — learnable by a tiny enc-dec)."""
+    rng = np.random.RandomState((seed * 999_983 + step) % (2 ** 31))
+    src = rng.randint(2, vocab, size=(batch, seq_len)).astype(np.int32)
+    offset = (np.arange(seq_len, dtype=np.int32) * 7 + 13) % vocab
+    tgt = (src[:, ::-1] + offset[None, :]) % vocab
+    bos = np.ones((batch, 1), np.int32)
+    tgt_full = np.concatenate([bos, tgt], axis=1)  # (batch, seq_len+1)
+    return src, tgt_full
+
+
+def classification_dataset(
+    n_classes: int = 3740, dim: int = 256, n: int = 64, step: int = 0, seed: int = 0
+):
+    """CASIA stand-in: UNIFORM class distribution, Gaussian prototypes."""
+    proto_rng = np.random.RandomState(seed + 777)
+    protos = proto_rng.normal(0, 1, size=(n_classes, dim)).astype(np.float32)
+    rng = np.random.RandomState((seed * 31337 + step) % (2 ** 31))
+    y = rng.randint(0, n_classes, size=n).astype(np.int32)
+    x = protos[y] + rng.normal(0, 0.8, size=(n, dim)).astype(np.float32)
+    return x, y

@@ -1,0 +1,12 @@
+from repro.distributed import hlo_analysis, roofline, sharding
+from repro.distributed.hlo_analysis import analyze_hlo
+from repro.distributed.roofline import Roofline, roofline_from_cost
+
+__all__ = [
+    "hlo_analysis",
+    "roofline",
+    "sharding",
+    "analyze_hlo",
+    "Roofline",
+    "roofline_from_cost",
+]

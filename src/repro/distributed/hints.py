@@ -1,0 +1,87 @@
+"""In-model sharding hints that degrade to no-ops off-mesh.
+
+Model code calls ``constrain(x, None, "model", ...)`` to pin an
+intermediate's layout; outside a mesh context (CPU smoke tests) the call is
+a no-op, and axes absent from the active mesh are dropped.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _active_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:  # legacy `with mesh:` context
+        from jax._src import mesh as mesh_lib
+
+        env = mesh_lib.thread_resources.env
+        if env.physical_mesh and not env.physical_mesh.empty:
+            return env.physical_mesh
+    except Exception:
+        pass
+    return None
+
+
+REP = "rep"  # sentinel: force this dim replicated (None = leave unconstrained)
+BATCH = ("pod", "data")  # logical batch axes (filtered to the active mesh)
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Pin the batch dim of an activation to the (pod, data) axes.
+
+    The canonical guard against GSPMD propagating a weight's FSDP sharding
+    into the residual stream (observed: batch replicated + d_model→data,
+    16× activation bloat)."""
+    spec = [None] * x.ndim
+    spec[batch_dim] = BATCH
+    return constrain(x, *spec)
+
+
+def constrain_residual(x):
+    """Residual-stream (B, S, d) boundary sharding: batch→(pod, data) AND
+    sequence→model (Megatron-style sequence parallelism).
+
+    The remat-saved per-layer carries dominate train memory for deep archs
+    (L × B_loc × S × d); sharding S over the otherwise-idle model axis cuts
+    them 16× for one all-gather per layer entry."""
+    if x.ndim != 3 or x.shape[1] < 2:
+        return constrain_batch(x)
+    return constrain(x, BATCH, "model", None)
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint if a mesh is active; identity otherwise.
+
+    ``None`` entries are UNCONSTRAINED (propagation decides — crucial so a
+    hint on one dim doesn't silently un-shard the others); the ``REP``
+    sentinel forces replication of a dim.
+    """
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    U = P.UNCONSTRAINED
+
+    def ok(axis):
+        if axis is None:
+            return U
+        if axis == REP:
+            return None
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        present = tuple(a for a in axes if a in names)
+        if not present:
+            return U
+        return present if len(present) > 1 else present[0]
+
+    spec2 = tuple(ok(a) for a in spec)
+    spec2 = spec2[: x.ndim] + (U,) * max(0, x.ndim - len(spec2))
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec2)))
+    except Exception:
+        return x

@@ -1,0 +1,84 @@
+"""Roofline term computation from a compiled dry-run artifact.
+
+TPU v5e per-chip constants (the assignment's target):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: ~50 GB/s per link
+
+Terms (seconds, PER STEP, using per-device HLO costs from hlo_analysis —
+the SPMD module is device-local so no further division by chip count):
+
+    compute    = flops_per_device / peak
+    memory     = hbm_bytes_per_device / hbm_bw
+    collective = collective_wire_bytes_per_device / link_bw
+
+(The assignment's formulas divide GLOBAL totals by chips; per-device totals
+are identical quantities. Both raw operand-byte and ring-wire-model
+collective figures are recorded.)
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per device
+    hbm_bytes: float             # per device (fusion-level traffic proxy)
+    coll_operand_bytes: float    # per device (assignment definition)
+    coll_wire_bytes: float       # per device (ring model)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    collective_s_bf16: float  # TPU-adjusted (bf16 reduction payloads)
+    bottleneck: str
+    model_flops: Optional[float] = None   # 6·N·D (train) or 2·N·D (inference), global
+    useful_ratio: Optional[float] = None  # model_flops / (flops · n_devices)
+    coll_counts: Optional[dict] = None
+    step_time_s: Optional[float] = None   # max of the three terms
+    achievable_frac: Optional[float] = None  # model-flops-time / step_time
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_from_cost(
+    cost: dict,
+    *,
+    n_devices: int,
+    model_flops: Optional[float] = None,
+) -> Roofline:
+    compute_s = cost["flops"] / PEAK_FLOPS
+    memory_s = cost["bytes"] / HBM_BW
+    collective_s = cost["coll_wire_bytes"] / LINK_BW
+    collective_s_bf16 = cost.get("coll_wire_bytes_bf16", cost["coll_wire_bytes"]) / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    useful = None
+    achievable = None
+    if model_flops:
+        useful = model_flops / max(1.0, cost["flops"] * n_devices)
+        ideal = model_flops / (PEAK_FLOPS * n_devices)
+        achievable = ideal / step if step > 0 else None
+    return Roofline(
+        flops=cost["flops"],
+        hbm_bytes=cost["bytes"],
+        coll_operand_bytes=cost["coll_operand_bytes"],
+        coll_wire_bytes=cost["coll_wire_bytes"],
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        collective_s_bf16=collective_s_bf16,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=useful,
+        coll_counts=cost.get("coll_counts"),
+        step_time_s=step,
+        achievable_frac=achievable,
+    )

@@ -1,0 +1,195 @@
+"""Logical→physical sharding rules (DP / FSDP / TP / EP / SP).
+
+Rules are applied by pytree-path regex over the parameter tree, so every
+model family gets consistent sharding without per-model boilerplate:
+
+* vocab-carrying tables (embed, unembed, DS expert rows) → ``model`` (TP),
+  second dim → ``data`` (FSDP storage sharding);
+* attention/MLP weights → (d_model → ``data``, heads/ff → ``model``);
+* MoE expert stacks → (experts → ``model`` [EP], d_model → ``data``);
+* per-head vectors / norm scales / small biases → replicated;
+* batch dims of activations → (``pod``, ``data``); KV-cache sequence dim →
+  ``model`` (flash-decode style split-KV) — cache batching already covers
+  ``data``; for batch=1 long-context cells the batch axis is unsharded and
+  the sequence picks up both axes.
+
+``data_axes``/``model_axes`` adapt automatically to 2-D (data, model) and
+3-D (pod, data, model) production meshes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.utils.tree import map_with_path
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_size_on(mesh: Mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+_RULES: list[tuple[str, tuple]] = [
+    # --- DS-Softmax head (the paper): experts (K, N, d) vocab-TP + FSDP ---
+    (r"head/experts$", (None, "model", "data")),
+    (r"head/gate$", (None, "data")),
+    # --- embeddings: (V, d) ---
+    (r"embed/table$", ("model", "data")),
+    (r"head/unembed$", ("model", "data")),
+    (r"pos_embed$", (None, "data")),
+    # --- attention (leading L axis handled generically below) ---
+    (r"attn/wq$", ("data", "model")),
+    (r"attn/wk$", ("data", "model")),
+    (r"attn/wv$", ("data", "model")),
+    (r"attn/wo$", ("model", "data")),
+    (r"attn/b[qkv]$", ("model",)),
+    # --- dense MLP ---
+    (r"mlp/w_gate$", ("data", "model")),
+    (r"mlp/w_up$", ("data", "model")),
+    (r"mlp/w_down$", ("model", "data")),
+    # --- MoE (E, d, ff): EP over model, FSDP over data ---
+    (r"moe/router$", ("data", None)),
+    (r"moe/w_gate$", ("model", "data", None)),
+    (r"moe/w_up$", ("model", "data", None)),
+    (r"moe/w_down$", ("model", None, "data")),
+    # --- mamba2 ---
+    (r"mamba/in_zx$", ("data", "model")),
+    (r"mamba/in_bc$", ("data", "model")),
+    (r"mamba/in_dt$", ("data", None)),
+    (r"mamba/out_proj$", ("model", "data")),
+    (r"mamba/conv_w$", (None, "model")),
+    (r"mamba/conv_b$", ("model",)),
+    # small per-head vectors & norms: replicated
+    (r"mamba/(A_log|dt_bias|D)$", ()),
+    (r"(ln\d?|ln_x|norm|final_norm|enc_norm|dec_norm)/(scale|bias)$", ()),
+    (r"norm_scale$", ()),
+]
+
+_STACKED_RE = re.compile(r"(^|/)(layers|enc_layers|dec_layers)/")
+
+
+def param_pspec(path: str, ndim: int) -> P:
+    """PartitionSpec for one parameter leaf given its slash path."""
+    stacked = bool(_STACKED_RE.search(path))
+    for pat, axes in _RULES:
+        if re.search(pat, path):
+            spec = tuple(axes)
+            if stacked:
+                spec = (None,) + spec
+            # pad/trim to ndim
+            spec = spec[:ndim] + (None,) * max(0, ndim - len(spec))
+            return P(*spec)
+    # default: replicate (correct but wasteful — rules should cover all big leaves)
+    return P(*((None,) * ndim))
+
+
+def param_shardings(mesh: Mesh, params: Any) -> Any:
+    """NamedSharding tree matching ``params`` (works on ShapeDtypeStructs)."""
+
+    def leaf(path, x):
+        return NamedSharding(mesh, param_pspec(path, len(x.shape)))
+
+    return map_with_path(leaf, params)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def constrain_like_params(tree: Any) -> Any:
+    """Pin a params-shaped tree (e.g. gradients) to the parameter sharding
+    rules. No-op outside a mesh context. Applied to grads before the
+    optimizer so backward scatter-adds (embedding/expert tables) don't come
+    out replicated."""
+    from repro.distributed.hints import _active_mesh
+
+    mesh = _active_mesh()
+    if mesh is None:
+        return tree
+
+    def leaf(path, x):
+        try:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, param_pspec(path, x.ndim))
+            )
+        except Exception:
+            return x
+
+    return map_with_path(leaf, tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh: Mesh, global_batch: int, extra_dims: int = 1) -> P:
+    """Shard the leading batch dim over (pod, data) when divisible."""
+    ba = batch_axes(mesh)
+    if global_batch % max(1, batch_size_on(mesh)) != 0 or global_batch < batch_size_on(mesh):
+        ba = ()
+    return P(ba if ba else None, *((None,) * extra_dims))
+
+
+def input_shardings(mesh: Mesh, cfg: ModelConfig, specs: dict, shape: ShapeConfig) -> dict:
+    out = {}
+    for k, v in specs.items():
+        nd = len(v.shape)
+        out[k] = NamedSharding(mesh, batch_pspec(mesh, shape.global_batch, nd - 1))
+    return out
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache: Any, shape: ShapeConfig) -> Any:
+    """Decode caches: (L, B, S, KV, dh) → B→(pod,data), S→model (split-KV).
+    SSM states: (L, B, H, P, N) → B→(pod,data), H→model when divisible."""
+    ba = batch_axes(mesh)
+    b_ok = shape.global_batch % batch_size_on(mesh) == 0
+    b_ax = ba if (ba and b_ok) else None
+    m = mesh.shape.get("model", 1)
+
+    def leaf(path, x):
+        nd = len(x.shape)
+        if nd == 5 and ("attn" in path or "self_k" in path or "self_v" in path
+                        or "cross" in path or path.endswith("k") or path.endswith("v")):
+            # (L|napps, B, S, KV, dh): sequence → model
+            s_ax = "model" if x.shape[2] % m == 0 else None
+            if not b_ok and x.shape[2] % (batch_size_on(mesh) * m) == 0:
+                s_ax = tuple(list(ba) + ["model"])  # B=1 long-context: SP over all axes
+            return NamedSharding(mesh, P(None, b_ax, s_ax, None, None))
+        if nd == 5:  # ssm state (L, B, H, P, N)
+            h_ax = "model" if x.shape[2] % m == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, h_ax, None, None))
+        if nd == 4:  # conv state (L, B, W-1, conv_dim)
+            c_ax = "model" if x.shape[3] % m == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, None, c_ax))
+        return NamedSharding(mesh, P(*((None,) * nd)))
+
+    return map_with_path(leaf, cache)
+
+
+def serve_table_shardings(mesh: Mesh, table) -> Any:
+    """ServeTable: ids (K, V_pad) + weights (K, V_pad, d): V_pad → model."""
+    return type(table)(
+        ids=NamedSharding(mesh, P(None, "model")),
+        weights=NamedSharding(mesh, P(None, "model", "data")),
+    )
+
+
+def topk_out_shardings(mesh: Mesh, global_batch: int):
+    b = batch_pspec(mesh, global_batch, 1)
+    return NamedSharding(mesh, b)

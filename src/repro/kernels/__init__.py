@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel ships with a pure-jnp oracle in ``ref.py``; tests sweep
+shapes/dtypes in ``interpret=True`` mode (this container is CPU-only — TPU
+is the compile target, the interpreter validates semantics).
+"""
+from repro.kernels import ops, ref
+from repro.kernels.dss_topk import dss_topk
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gate_top1 import gate_top1
+from repro.kernels.lasso_prune import lasso_prune
+
+__all__ = [
+    "ops",
+    "ref",
+    "dss_topk",
+    "flash_attention",
+    "gate_top1",
+    "lasso_prune",
+]

@@ -1,0 +1,96 @@
+"""Fused DS-Softmax serving kernel (the paper's inference hot-spot on TPU).
+
+Per token: gather the chosen expert's packed rows HBM→VMEM in blocks via a
+*scalar-prefetch index map* (the expert id steers the BlockSpec — no
+materialized (B, V_pad, d) gather), MXU matmul per block, pad-mask, and an
+in-VMEM per-block top-k. A tiny host-side merge over (n_blocks·k)
+candidates yields the exact global top-k.
+
+Why this shape: serving is memory-bound — the win is reading only
+``V_pad·d`` expert bytes per *expert* (tokens sharing an expert hit the
+same blocks) instead of ``N·d``, and never spilling logits to HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e9
+
+
+def _block_v(v_pad: int, d: int, dtype_bytes: int = 2, budget: int = 4 * 2 ** 20) -> int:
+    for cand in (1024, 512, 256, 128):
+        if v_pad % cand == 0 and cand * d * dtype_bytes <= budget:
+            return cand
+    return 128
+
+
+def _kernel(eidx_ref, w_ref, ids_ref, h_ref, vals_ref, idx_ref, *, k: int, block_v: int):
+    del eidx_ref  # consumed by the index maps
+    w = w_ref[0]  # (block_v, d)
+    h = h_ref[...]  # (1, d)
+    ids = ids_ref[...]  # (1, block_v)
+    z = jnp.dot(w, h.T, preferred_element_type=jnp.float32)  # (block_v, 1)
+    z = jnp.where(ids.T >= 0, z, NEG_INF)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (block_v, 1), 0)
+    # unrolled top-k within the block (k is small and static)
+    for i in range(k):
+        m = jnp.max(z)
+        am = jnp.argmax(z[:, 0])
+        vals_ref[0, 0, i] = m
+        idx_ref[0, 0, i] = ids[0, am]
+        z = jnp.where(iota == am, NEG_INF, z)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "block_v"))
+def dss_topk(
+    weights: jax.Array,   # (K, V_pad, d)
+    ids: jax.Array,       # (K, V_pad) int32, -1 = padding
+    h_scaled: jax.Array,  # (B, d) — pre-scaled by the gate value g
+    expert_idx: jax.Array,  # (B,) int32
+    k: int = 8,
+    *,
+    interpret: bool | None = None,
+    block_v: int | None = None,
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    K, v_pad, d = weights.shape
+    B = h_scaled.shape[0]
+    bv = block_v or _block_v(v_pad, d, weights.dtype.itemsize)
+    n_blocks = v_pad // bv
+    grid = (B, n_blocks)
+
+    kern = functools.partial(_kernel, k=k, block_v=bv)
+    vals, idxs = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bv, d), lambda b, j, eidx: (eidx[b], j, 0)),
+                pl.BlockSpec((1, bv), lambda b, j, eidx: (eidx[b], j)),
+                pl.BlockSpec((1, d), lambda b, j, eidx: (b, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, k), lambda b, j, eidx: (b, j, 0)),
+                pl.BlockSpec((1, 1, k), lambda b, j, eidx: (b, j, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_blocks, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_blocks, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(expert_idx, weights, ids, h_scaled)
+
+    # exact global top-k from the per-block candidates
+    cand_v = vals.reshape(B, n_blocks * k)
+    cand_i = idxs.reshape(B, n_blocks * k)
+    out_v, pos = jax.lax.top_k(cand_v, k)
+    out_i = jnp.take_along_axis(cand_i, pos, axis=1)
+    return out_v, out_i

@@ -1,0 +1,60 @@
+"""Fused sparse-mixture gate: logits + softmax + top-1 in one VMEM pass.
+
+The gate matrix U (K, d) is tiny (K ≤ 64) and lives whole in VMEM; tokens
+stream through in blocks. Output is the paper's (argmax expert, its
+*normalized-then-masked* gate value) per token.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(h_ref, u_ref, idx_ref, g_ref):
+    h = h_ref[...]  # (block_b, d)
+    u = u_ref[...]  # (K, d)
+    z = jnp.dot(h, u.T, preferred_element_type=jnp.float32)  # (block_b, K)
+    m = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    idx_ref[...] = jnp.argmax(p, axis=-1, keepdims=True).astype(jnp.int32)
+    g_ref[...] = jnp.max(p, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def gate_top1(
+    gate_w: jax.Array,  # (K, d)
+    h: jax.Array,       # (B, d)
+    *,
+    interpret: bool | None = None,
+    block_b: int = 128,
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, d = h.shape
+    K = gate_w.shape[0]
+    bb = min(block_b, B)
+    while B % bb:
+        bb //= 2
+    grid = (B // bb,)
+    idx, g = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((K, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, gate_w)
+    return idx[:, 0], g[:, 0]

@@ -1,0 +1,58 @@
+"""Fused group-lasso row-norm + threshold-mask kernel (paper Eq. 3/4).
+
+One pass over the expert tables computes every class row's l2 norm and the
+updated survival mask — the training-loop pruning step without
+materializing the fp32 (K, N, d) masked copy that the jnp path creates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, m_ref, norm_ref, mask_ref, *, gamma: float):
+    w = w_ref[0].astype(jnp.float32)  # (block_n, d)
+    m = m_ref[...]  # (1, block_n)
+    sq = jnp.sum(w * w, axis=-1, keepdims=True)  # (block_n, 1)
+    norms = jnp.sqrt(sq).T * m.astype(jnp.float32)  # masked rows -> 0
+    norm_ref[...] = norms
+    mask_ref[...] = jnp.logical_and(m, norms > gamma)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "interpret", "block_n"))
+def lasso_prune(
+    weights: jax.Array,  # (K, N, d)
+    mask: jax.Array,     # (K, N) bool
+    gamma: float = 0.01,
+    *,
+    interpret: bool | None = None,
+    block_n: int = 512,
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    K, N, d = weights.shape
+    bn = min(block_n, N)
+    while N % bn:
+        bn //= 2
+    grid = (K, N // bn)
+    norms, new_mask = pl.pallas_call(
+        functools.partial(_kernel, gamma=gamma),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, N), jnp.float32),
+            jax.ShapeDtypeStruct((K, N), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(weights, mask)
+    return norms, new_mask

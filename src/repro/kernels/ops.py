@@ -1,0 +1,20 @@
+"""Jit'd public wrappers over the Pallas kernels (the API models call)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dss_topk import dss_topk as _dss_topk_kernel
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gate_top1 import gate_top1
+from repro.kernels.lasso_prune import lasso_prune
+
+
+def dss_topk(weights, ids, h, expert_idx, g, k: int = 8, **kw):
+    """Serve-path fused top-k. Matches core.dssoftmax.serve_topk semantics:
+    the gate value is folded into h (z = g·(W h) = W·(g h))."""
+    h_scaled = (h.astype(jnp.float32) * g[:, None]).astype(h.dtype)
+    return _dss_topk_kernel(weights, ids, h_scaled, expert_idx, k, **kw)
+
+
+__all__ = ["dss_topk", "flash_attention", "gate_top1", "lasso_prune"]

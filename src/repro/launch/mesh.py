@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod 16×16 (256 chips) or 2-pod 2×16×16 (512 chips) v5e mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests / elastic reshapes)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh():
+    """Whatever devices exist locally as a 1×N (data, model) mesh."""
+    n = len(jax.devices())
+    return make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,39 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [--reduced]``."""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.models import build
+from repro.train import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(bundle, params, ds_state)
+    rng = np.random.RandomState(0)
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+                    max_new_tokens=args.new_tokens) for _ in range(args.batch)]
+    t0 = time.time()
+    out = engine.generate(reqs)
+    dt = time.time() - t0
+    n = sum(len(r.out_tokens) for r in out)
+    print(f"{n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real hardware this runs under the production mesh (one process per host;
+jax.distributed.initialize handles the rest); on CPU it runs the same code
+path on the local device for smoke-scale configs.
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.configs.base import TrainConfig
+from repro.data import DataPipeline, TopicLMStream
+from repro.models import build
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", help="CPU smoke scale")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--grad-compression", choices=["none", "int8", "topk"],
+                    default="none")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    bundle = build(cfg)
+    stream = TopicLMStream(vocab=cfg.vocab_size, seq_len=args.seq,
+                           batch=args.batch, seed=0)
+
+    def batch_fn(i):
+        b = {"tokens": stream.batch_at(i)}
+        if cfg.family == "vlm":
+            b["patches"] = np.random.RandomState(i).normal(
+                size=(args.batch, cfg.vision.num_patches, cfg.d_model)
+            ).astype(np.float32)
+        if cfg.family == "encdec":
+            b["frames"] = np.random.RandomState(i).normal(
+                size=(args.batch, cfg.vision.num_patches, cfg.d_model)
+            ).astype(np.float32)
+        return b
+
+    pipe = DataPipeline(batch_fn)
+    tcfg = TrainConfig(lr=args.lr, total_steps=args.steps, warmup_steps=10,
+                       ckpt_dir=args.ckpt_dir, ckpt_every=max(10, args.steps // 4),
+                       grad_compression=args.grad_compression)
+    trainer = Trainer(bundle, tcfg, iter(pipe), pipeline=pipe,
+                      hooks={"on_step": lambda s, m, st: (s % 10 == 0) and print(
+                          f"step {s} loss={m['loss']:.3f} dt={m['dt']*1e3:.0f}ms")})
+    trainer.train()
+
+
+if __name__ == "__main__":
+    main()

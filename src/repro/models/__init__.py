@@ -1,0 +1,18 @@
+from repro.models import encdec, heads, hybrid, layers, mamba2, moe, model_zoo, transformer
+from repro.models.model_zoo import ModelBundle, build, cache_specs, input_specs, serve_table_spec
+
+__all__ = [
+    "encdec",
+    "heads",
+    "hybrid",
+    "layers",
+    "mamba2",
+    "moe",
+    "model_zoo",
+    "transformer",
+    "ModelBundle",
+    "build",
+    "cache_specs",
+    "input_specs",
+    "serve_table_spec",
+]

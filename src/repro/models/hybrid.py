@@ -1,0 +1,215 @@
+"""SSM and hybrid LMs: mamba2-130m (pure SSD stack) and zamba2-7b
+(Mamba2 backbone + one *shared* attention block applied every
+``attn_period`` layers, zamba-style).
+
+Layer layout for hybrid (L mamba layers, period p):
+    [m m m m m m A] x n_groups  [m] x remainder
+where every ``A`` is the SAME parameter set (shared block). The mamba stack
+is scanned in groups of p (compile-time constant), the shared block is a
+closure — HLO stays O(1) in depth.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import heads
+from repro.models.layers import (
+    attention_block,
+    attention_decode,
+    embed,
+    init_attention,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+)
+from repro.models.mamba2 import init_mamba2, mamba2_block, mamba2_decode
+
+
+class HybridCache(NamedTuple):
+    conv: jax.Array      # (L, B, W-1, conv_dim)
+    ssm: jax.Array       # (L, B, H, P, N) fp32
+    attn_k: jax.Array    # (n_apps, B, S_max, KV, dh) — empty (0 apps) for pure ssm
+    attn_v: jax.Array
+
+
+def _layout(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_groups, remainder) of the mamba stack around shared-attn points."""
+    if cfg.family != "hybrid":
+        return 0, cfg.n_layers
+    return cfg.n_layers // cfg.attn_period, cfg.n_layers % cfg.attn_period
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    return _layout(cfg)[0]
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+
+    def one(k):
+        return {"ln": init_rmsnorm(cfg.d_model), "mamba": init_mamba2(k, cfg)}
+
+    params = {
+        "embed": init_embedding(ks[1], cfg.padded_vocab, cfg.d_model, cfg.jdtype),
+        "layers": jax.vmap(one)(layer_keys),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if cfg.family == "hybrid":
+        params["shared_attn"] = {
+            "ln1": init_rmsnorm(cfg.d_model),
+            "attn": init_attention(ks[2], cfg),
+            "ln2": init_rmsnorm(cfg.d_model),
+            "mlp": init_mlp(ks[3], cfg),
+        }
+    head_params, ds_state = heads.init_head(ks[4], cfg)
+    params["head"] = head_params
+    return params, ds_state
+
+
+def _mamba_scan(cfg, x, stacked, *, with_state: bool):
+    from repro.distributed.hints import constrain_residual
+
+    def body(carry, lp):
+        if with_state:
+            out, (conv, ssm) = mamba2_block(
+                lp["mamba"], cfg, rmsnorm(lp["ln"], carry), return_state=True
+            )
+            return constrain_residual(carry + out), (conv, ssm)
+        out = mamba2_block(lp["mamba"], cfg, rmsnorm(lp["ln"], carry))
+        return constrain_residual(carry + out), ()
+
+    if cfg.remat == "layer" and not with_state:
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots" and not with_state:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.lax.scan(body, constrain_residual(x), stacked)
+
+
+def _tree_slice(tree, a, b):
+    return jax.tree.map(lambda t: t[a:b], tree)
+
+
+def forward_hidden(params, cfg: ModelConfig, x, positions, *, collect_state=False):
+    """→ (hidden, aux=0, optional HybridCache pieces)."""
+    n_groups, rem = _layout(cfg)
+    p = cfg.attn_period if cfg.family == "hybrid" else cfg.n_layers
+    states, attn_kv = [], []
+    if cfg.family == "hybrid":
+        for gi in range(n_groups):
+            grp = _tree_slice(params["layers"], gi * p, (gi + 1) * p)
+            x, st = _mamba_scan(cfg, x, grp, with_state=collect_state)
+            if collect_state:
+                states.append(st)
+            sa = params["shared_attn"]
+            h, kv = attention_block(sa["attn"], cfg, rmsnorm(sa["ln1"], x), positions)
+            x = x + h
+            x = x + mlp(sa["mlp"], cfg, rmsnorm(sa["ln2"], x))
+            if collect_state:
+                attn_kv.append(kv)
+        if rem:
+            grp = _tree_slice(params["layers"], n_groups * p, cfg.n_layers)
+            x, st = _mamba_scan(cfg, x, grp, with_state=collect_state)
+            if collect_state:
+                states.append(st)
+    else:
+        x, st = _mamba_scan(cfg, x, params["layers"], with_state=collect_state)
+        if collect_state:
+            states.append(st)
+    h = rmsnorm(params["final_norm"], x)
+    if not collect_state:
+        return h, jnp.zeros((), jnp.float32)
+    conv = jnp.concatenate([s[0] for s in states], axis=0)
+    ssm = jnp.concatenate([s[1] for s in states], axis=0)
+    if attn_kv:
+        ak = jnp.stack([kv[0] for kv in attn_kv], axis=0)
+        av = jnp.stack([kv[1] for kv in attn_kv], axis=0)
+    else:
+        B = x.shape[0]
+        ak = jnp.zeros((0, B, x.shape[1], max(cfg.n_kv_heads, 1), max(cfg.hd, 1)), cfg.jdtype)
+        av = ak
+    return h, HybridCache(conv=conv, ssm=ssm, attn_k=ak, attn_v=av)
+
+
+def train_loss(params, ds_state, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    x = embed(params["embed"], inputs)
+    B, S = inputs.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h, _ = forward_hidden(params, cfg, x, positions)
+    ce, aux = heads.head_loss(
+        params["head"], ds_state, cfg, h, labels, embed_table=params["embed"]["table"]
+    )
+    total = ce + aux["head_aux_total"]
+    return total, {"ce": ce, **aux}
+
+
+def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h, cache = forward_hidden(params, cfg, x, positions, collect_state=True)
+    vals, ids = heads.head_topk(
+        params["head"], ds_state_or_table, cfg, h[:, -1], k,
+        embed_table=params["embed"]["table"],
+    )
+    return vals, ids, cache
+
+
+def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token, pos, k: int = 8):
+    x = embed(params["embed"], token)[:, None, :]
+    n_groups, rem = _layout(cfg)
+    p = cfg.attn_period if cfg.family == "hybrid" else cfg.n_layers
+
+    def mamba_body(carry, scanned):
+        xc = carry
+        lp, conv, ssm = scanned
+        out, nconv, nssm = mamba2_decode(lp["mamba"], cfg, rmsnorm(lp["ln"], xc), conv, ssm)
+        return xc + out, (nconv, nssm)
+
+    new_conv, new_ssm, new_ak, new_av = [], [], [], []
+    idx = 0
+    x_cur = x
+    groups = [p] * n_groups + ([rem] if rem else []) if cfg.family == "hybrid" else [cfg.n_layers]
+    for gi, glen in enumerate(groups):
+        grp = _tree_slice(params["layers"], idx, idx + glen)
+        conv_g = cache.conv[idx : idx + glen]
+        ssm_g = cache.ssm[idx : idx + glen]
+        x_cur, (nc, ns) = jax.lax.scan(mamba_body, x_cur, (grp, conv_g, ssm_g))
+        new_conv.append(nc)
+        new_ssm.append(ns)
+        idx += glen
+        if cfg.family == "hybrid" and gi < n_groups:
+            sa = params["shared_attn"]
+            h, nk, nv = attention_decode(
+                sa["attn"], cfg, rmsnorm(sa["ln1"], x_cur),
+                cache.attn_k[gi], cache.attn_v[gi], pos,
+            )
+            x_cur = x_cur + h
+            x_cur = x_cur + mlp(sa["mlp"], cfg, rmsnorm(sa["ln2"], x_cur))
+            new_ak.append(nk)
+            new_av.append(nv)
+    h = rmsnorm(params["final_norm"], x_cur)[:, 0]
+    vals, ids = heads.head_topk(
+        params["head"], serve_table, cfg, h, k, embed_table=params["embed"]["table"]
+    )
+    if new_ak:
+        ak, av = jnp.stack(new_ak), jnp.stack(new_av)
+    else:
+        ak, av = cache.attn_k, cache.attn_v
+    new_cache = HybridCache(
+        conv=jnp.concatenate(new_conv, axis=0),
+        ssm=jnp.concatenate(new_ssm, axis=0),
+        attn_k=ak,
+        attn_v=av,
+    )
+    return vals, ids, new_cache

@@ -1,0 +1,244 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-scan implementation.
+
+Follows arXiv:2405.21060 §6: sequence is split into chunks of length Q;
+within a chunk the dual "attention-like" quadratic form is used (MXU
+friendly), across chunks a linear recurrence on the (H, P, N) state is
+carried by ``lax.scan``. Exact (up to fp) w.r.t. the sequential scan — the
+oracle in ``ssd_reference`` is used by tests.
+
+Shapes: d_inner = expand*d_model, H = d_inner/headdim (heads), P = headdim,
+N = ssm_state, G = ssm_ngroups (B/C groups).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    conv_dim = di + 2 * G * N
+    ks = jax.random.split(key, 5)
+    # Per-stream projections instead of one fused in_proj: the fused output
+    # dim (2·di + 2·G·N + H) is generally not TP-divisible; splitting along
+    # semantic streams is exactly how Mamba TP shards anyway (heads split).
+    p = {
+        "in_zx": dense_init(ks[0], (d, 2 * di), cfg.jdtype),
+        "in_bc": dense_init(ks[3], (d, 2 * G * N), cfg.jdtype),
+        "in_dt": dense_init(ks[4], (d, H), cfg.jdtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim)) * 0.1).astype(
+            cfg.jdtype
+        ),
+        "conv_b": jnp.zeros((conv_dim,), cfg.jdtype),
+        # A stored as log(-A) per head (A negative); dt bias via softplus inv.
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.full((H,), math.log(math.expm1(0.01)), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], (di, d), cfg.jdtype, fan_in=di),
+    }
+    return p
+
+
+def _in_proj(params, cfg: ModelConfig, u: jax.Array):
+    """u: (..., d) → (z, x, B, C, dt) streams."""
+    di, G, N = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    zx = jnp.einsum("...d,de->...e", u, params["in_zx"])
+    bc = jnp.einsum("...d,de->...e", u, params["in_bc"])
+    dt = jnp.einsum("...d,de->...e", u, params["in_dt"])
+    z, x = zx[..., :di], zx[..., di:]
+    B, C = bc[..., : G * N], bc[..., G * N :]
+    return z, x, B, C, dt
+
+
+def _conv1d(w, b, x):
+    """Depthwise causal conv, width W. x: (B, S, C) → (B, S, C)."""
+    W = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pads[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD. x: (b,S,H,P), dt: (b,S,H) (post-softplus), A: (H,) (<0),
+    B,C: (b,S,G,N). Returns y: (b,S,H,P) and final state (b,H,P,N)."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    Q = min(chunk, S)
+    if S % Q:
+        Q = S
+    nc = S // Q
+    rep = H // G
+
+    from repro.distributed.hints import constrain
+
+    def resh(t, extra):  # (b,S,...) -> (b,nc,Q,...)
+        return constrain(t.reshape((b, nc, Q) + extra), None, "model")
+
+    # The chunk axis (nc) is embarrassingly parallel for the intra-chunk dual
+    # form — shard it over 'model' (the head count H is generally not
+    # TP-divisible for SSM archs, the chunk count is). Without this the model
+    # axis would idle AND the O(S·Q·H) intra-chunk tensors would replicate.
+    x = resh(x, (H, P))
+    dt = resh(dt, (H,))
+    Bm = resh(B, (G, N))
+    Cm = resh(C, (G, N))
+
+    dA = dt * A[None, None, None, :]  # (b,nc,Q,H) log-decay per step, <=0
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk inclusive cumsum
+    total = cum[:, :, -1, :]  # (b,nc,H)
+
+    # --- intra-chunk (dual quadratic form) ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0 (decay from j+1..i).
+    # Computed in bf16 (|L| <= 1, CB bounded by the conv/norm'd activations)
+    # with fp32 accumulation in the einsum — halves the O(S·Q·H) footprint.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum(
+        "bcign,bcjgn->bcijg",
+        Cm.astype(jnp.bfloat16),
+        Bm.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    CB = jnp.repeat(CB, rep, axis=-1)  # broadcast groups -> heads (b,nc,Qi,Qj,H)
+    xdt = x.astype(jnp.float32) * dt[..., None]  # (b,nc,Q,H,P)
+    y_diag = jnp.einsum(
+        "bcijh,bcjhp->bcihp",
+        (CB * L).astype(jnp.bfloat16),
+        xdt.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
+    # --- chunk states:   states_c = Σ_j exp(total - cum_j)·dt_j·B_j ⊗ x_j ---
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)  # (b,nc,Q,H)
+    states = jnp.einsum(
+        "bcqh,bcqhn,bcqhp->bchpn",
+        decay_to_end,
+        jnp.repeat(Bm.astype(jnp.float32), rep, axis=-2),
+        xdt,
+    )
+
+    # --- inter-chunk recurrence (sequential over chunks; un-shard the chunk
+    # axis first so the scan's per-iteration slices are local) ---
+    from repro.distributed.hints import REP
+
+    states = constrain(states, None, REP)
+    total_r = constrain(total, None, REP)
+
+    def body(carry, inp):
+        st_c, tot_c = inp
+        new = carry * jnp.exp(tot_c)[..., None, None] + st_c
+        return new, carry  # emit state ENTERING this chunk
+
+    init = jnp.zeros((b, H, P, N), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        body, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total_r, 1, 0))
+    )
+    prev_states = constrain(jnp.moveaxis(prev_states, 0, 1), None, "model")  # (b,nc,H,P,N)
+
+    # --- inter-chunk contribution: y_off_i = (C_i · state_in) * exp(cum_i) ---
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=-2)  # (b,nc,Q,H,N)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y, final
+
+
+def ssd_reference(x, dt, A, B, C):
+    """Sequential-scan oracle (tests): same signature minus chunking."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp  # (b,H,P), (b,H), (b,H,N), (b,H,N)
+        decay = jnp.exp(dt_t * A)  # (b,H)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhpn", B_t, x_t.astype(jnp.float32), dt_t
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", C_t, state)
+        return state, y
+
+    init = jnp.zeros((b, H, P, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bh, 1, 0),
+        jnp.moveaxis(Ch, 1, 0),
+    )
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def mamba2_block(params, cfg: ModelConfig, u: jax.Array, *, return_state: bool = False):
+    """Full Mamba2 block over a sequence. u: (B, S, d) → (B, S, d).
+
+    With ``return_state``, also returns ``(conv_tail, ssm_state)`` for
+    prefill→decode handoff: conv_tail (B, W-1, conv_dim) is the pre-conv
+    input tail, ssm_state (B, H, P, N) the final recurrent state.
+    """
+    Bsz, S, _ = u.shape
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    z, x, Bc, Cc, dt = _in_proj(params, cfg, u)
+    xBC_pre = jnp.concatenate([x, Bc, Cc], axis=-1)
+    xBC = _conv1d(params["conv_w"], params["conv_b"], xBC_pre)
+    x = xBC[..., : cfg.d_inner].reshape(Bsz, S, H, P)
+    Bc = xBC[..., cfg.d_inner : cfg.d_inner + G * N].reshape(Bsz, S, G, N)
+    Cc = xBC[..., cfg.d_inner + G * N :].reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])  # (H,) < 0
+    y, final = ssd_chunked(x, dt, A, Bc, Cc, cfg.ssm_chunk)
+    y = y + x.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, cfg.d_inner)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm({"scale": params["norm_scale"]}, y.astype(u.dtype), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    if return_state:
+        W = cfg.ssm_conv_width
+        conv_tail = xBC_pre[:, S - (W - 1) :, :] if S >= W - 1 else jnp.pad(
+            xBC_pre, ((0, 0), (W - 1 - S, 0), (0, 0))
+        )
+        return out, (conv_tail, final)
+    return out
+
+
+def mamba2_decode(params, cfg: ModelConfig, u, conv_state, ssm_state):
+    """One-token decode. u: (B,1,d); conv_state: (B, W-1, conv_dim);
+    ssm_state: (B,H,P,N) fp32. Returns (out, new_conv_state, new_ssm_state)."""
+    Bsz = u.shape[0]
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    W = cfg.ssm_conv_width
+    z, x, Bc, Cc, dt = _in_proj(params, cfg, u[:, 0])
+    xBC = jnp.concatenate([x, Bc, Cc], axis=-1)  # (B, conv_dim)
+    window = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)  # (B, W, conv)
+    new_conv_state = window[:, 1:]
+    conv_out = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    xBC = jax.nn.silu(conv_out.astype(jnp.float32)).astype(u.dtype)
+    x = xBC[:, : cfg.d_inner].reshape(Bsz, H, P)
+    Bc = xBC[:, cfg.d_inner : cfg.d_inner + G * N].reshape(Bsz, G, N)
+    Cc = xBC[:, cfg.d_inner + G * N :].reshape(Bsz, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cc, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)  # (B,H)
+    ssm_state = ssm_state * decay[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", Bh, x.astype(jnp.float32), dt
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, ssm_state)
+    y = y + x.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(Bsz, cfg.d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm({"scale": params["norm_scale"]}, y.astype(u.dtype), cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None, :]
+    return out, new_conv_state, ssm_state

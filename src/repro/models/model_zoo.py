@@ -1,0 +1,176 @@
+"""Uniform model API over all families + input/cache specs for the dry-run.
+
+``build(cfg)`` returns a :class:`ModelBundle` of pure functions; every
+launcher, test and benchmark goes through this interface, so adding an
+architecture = adding a config + (at most) a family implementation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, heads, hybrid, transformer
+
+MAX_TARGET_LEN = 32768  # learned-position table size for encdec (decode_32k)
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    train_loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+        init = lambda key: transformer.init_params(key, cfg)
+    elif fam in ("ssm", "hybrid"):
+        mod = hybrid
+        init = lambda key: hybrid.init_params(key, cfg)
+    elif fam == "encdec":
+        mod = encdec
+        init = lambda key: encdec.init_params(key, cfg, max_target_len=MAX_TARGET_LEN)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return ModelBundle(
+        cfg=cfg,
+        init=init,
+        train_loss=lambda p, s, batch: mod.train_loss(p, s, cfg, batch),
+        prefill=lambda p, t, batch, k=8: mod.prefill(p, t, cfg, batch, k=k),
+        decode_step=lambda p, t, cache, tok, pos, k=8: mod.decode_step(
+            p, t, cfg, cache, tok, pos, k=k
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input / cache specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch specs for ``train_loss`` (kind='train') / ``prefill`` / decode."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((B,), tok)}
+    if cfg.family == "encdec":
+        F = cfg.vision.num_patches if cfg.vision else 1500
+        specs = {
+            "frames": jax.ShapeDtypeStruct((B, F, cfg.d_model), cfg.jdtype),
+            "tokens": jax.ShapeDtypeStruct((B, S + (1 if shape.kind == "train" else 0)), tok),
+        }
+        return specs
+    if cfg.family == "vlm":
+        P = cfg.vision.num_patches
+        s_text = S - P
+        return {
+            "patches": jax.ShapeDtypeStruct((B, P, cfg.d_model), cfg.jdtype),
+            "tokens": jax.ShapeDtypeStruct((B, s_text + (1 if shape.kind == "train" else 0)), tok),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S + (1 if shape.kind == "train" else 0)), tok)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode-cache specs sized to the cell's seq_len (per the assignment:
+    decode shapes lower serve_step with a KV/state cache of seq_len)."""
+    B, S = shape.global_batch, shape.seq_len
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = jax.ShapeDtypeStruct((L, B, S, cfg.n_kv_heads, cfg.hd), cfg.jdtype)
+        return transformer.DecodeCache(k=kv, v=kv)
+    if cfg.family in ("ssm", "hybrid"):
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        napps = hybrid.n_attn_apps(cfg)
+        attn = jax.ShapeDtypeStruct(
+            (napps, B, S, max(cfg.n_kv_heads, 1), max(cfg.hd, 1)), cfg.jdtype
+        )
+        return hybrid.HybridCache(
+            conv=jax.ShapeDtypeStruct((L, B, cfg.ssm_conv_width - 1, conv_dim), cfg.jdtype),
+            ssm=jax.ShapeDtypeStruct(
+                (L, B, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32
+            ),
+            attn_k=attn,
+            attn_v=attn,
+        )
+    if cfg.family == "encdec":
+        F = cfg.vision.num_patches if cfg.vision else 1500
+        kv = jax.ShapeDtypeStruct((L, B, S, cfg.n_kv_heads, cfg.hd), cfg.jdtype)
+        ckv = jax.ShapeDtypeStruct((L, B, F, cfg.n_kv_heads, cfg.hd), cfg.jdtype)
+        return encdec.EncDecCache(self_k=kv, self_v=kv, cross_k=ckv, cross_v=ckv)
+    raise ValueError(cfg.family)
+
+
+def serve_table_spec(cfg: ModelConfig):
+    if cfg.head == "ds":
+        return heads.abstract_serve_table(cfg)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter / FLOPs accounting (for MODEL_FLOPS roofline term)
+# ---------------------------------------------------------------------------
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Matmul parameters touched per token (embedding lookup excluded,
+    head included). ``active_only`` counts top-k experts for MoE."""
+    d, ff = cfg.d_model, cfg.d_ff
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    attn = d * H * dh + 2 * d * KV * dh + H * dh * d
+    mlp = (3 if cfg.act == "swiglu" else 2) * d * ff
+
+    def mamba_params():
+        di = cfg.d_inner
+        gn = cfg.ssm_ngroups * cfg.ssm_state
+        d_in_proj = 2 * di + 2 * gn + cfg.ssm_nheads
+        return d * d_in_proj + di * d  # in_proj + out_proj (conv negligible)
+
+    total = 0
+    if cfg.family in ("dense", "vlm"):
+        total += cfg.n_layers * (attn + mlp)
+    elif cfg.family == "moe":
+        mc = cfg.moe
+        e = mc.top_k if active_only else mc.num_experts
+        moe_p = e * 3 * d * mc.d_ff_expert + d * mc.num_experts
+        total += cfg.n_layers * (attn + moe_p)
+    elif cfg.family == "ssm":
+        total += cfg.n_layers * mamba_params()
+    elif cfg.family == "hybrid":
+        total += cfg.n_layers * mamba_params()
+        napps = hybrid.n_attn_apps(cfg)
+        # shared block params counted once, but FLOPs paid per application:
+        total += napps * (attn + mlp) if not active_only else napps * (attn + mlp)
+    elif cfg.family == "encdec":
+        total += cfg.n_encoder_layers * (attn + mlp)
+        total += cfg.n_layers * (2 * attn + mlp)  # self + cross
+    # head
+    if cfg.head == "ds":
+        K = cfg.ds.num_experts
+        v_pad = cfg.ds.serve_pad or max(128, 2 * cfg.vocab_size // K)
+        head_p = K * d + (v_pad * d if active_only else cfg.vocab_size * d)
+    else:
+        head_p = cfg.vocab_size * d
+    return int(total + head_p)
+
+
+def head_flops_per_token(cfg: ModelConfig, serve: bool) -> int:
+    """Forward FLOPs of the head per token (paper's metric: 2·rows·d)."""
+    d = cfg.d_model
+    if cfg.head != "ds":
+        return 2 * cfg.vocab_size * d
+    K = cfg.ds.num_experts
+    if serve:
+        v_pad = cfg.ds.serve_pad or max(128, 2 * cfg.vocab_size // K)
+        return 2 * (K * d + v_pad * d)
+    return 2 * (K * d + cfg.vocab_size * d)

@@ -1,0 +1,183 @@
+"""Token-choice top-k MoE FFN (olmoe / qwen3-moe backbones).
+
+Sort-based dispatch, per-sequence: tokens are grouped by expert *within each
+batch row*, so under batch→data sharding the sort/scatter stay device-local
+and the only cross-device traffic is the expert weights (experts→model axis,
+EP). Dispatch buffers are (B, E, C, d) with per-row capacity
+C = ceil(S·top_k/E · capacity_factor); overflow tokens fall back to their
+residual stream (counted in aux.drop_frac).
+
+The DS-Softmax head reuses exactly this pattern for its top-1 head dispatch —
+the paper's "sparse mixture" is an MoE whose experts are vocabulary shards.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+class MoEAux(NamedTuple):
+    load_loss: jax.Array
+    drop_frac: jax.Array
+
+
+def init_moe(key, cfg: ModelConfig):
+    d = cfg.d_model
+    mc = cfg.moe
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, mc.num_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (mc.num_experts, d, mc.d_ff_expert), cfg.jdtype),
+        "w_up": dense_init(ks[2], (mc.num_experts, d, mc.d_ff_expert), cfg.jdtype),
+        "w_down": dense_init(
+            ks[3], (mc.num_experts, mc.d_ff_expert, d), cfg.jdtype, fan_in=mc.d_ff_expert
+        ),
+    }
+
+
+def _moe_ep_shardmap(params, cfg, mesh, x, top_e, top_p, slot, valid, C):
+    """Expert-parallel MoE via shard_map (production EP).
+
+    Per model-shard: local dispatch into (B_loc, E_loc, C, d) buffers for the
+    shard's own experts (out-of-shard assignments masked), local expert
+    MLPs, local masked combine, then ONE fp32 psum over 'model'. Expert
+    weights enter with their FSDP dim gathered (cheap, MBs). Differentiable
+    (psum transposes to identity; everything else is shard-local)."""
+    from jax.sharding import PartitionSpec as P
+
+    B, S, d = x.shape
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    n_model = mesh.shape["model"]
+    E_loc = E // n_model
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = ba if ba else None
+
+    def region(x_l, e_l, p_l, slot_l, valid_l, wg_l, wu_l, wd_l):
+        # x_l: (B_loc, S, d); e/p/slot/valid: (B_loc, S, K); w*_l: (E_loc, ...)
+        shard = jax.lax.axis_index("model")
+        e_local = e_l - shard * E_loc
+        in_shard = (e_local >= 0) & (e_local < E_loc) & valid_l  # (B_loc,S,K)
+
+        def dispatch_row(x_r, el_r, ok_r, slot_r):
+            buf = jnp.zeros((E_loc, C, d), x_r.dtype)
+            for k in range(K):
+                ei = jnp.clip(el_r[:, k], 0, E_loc - 1)
+                s_k = jnp.where(ok_r[:, k], slot_r[:, k], C)  # OOB -> dropped
+                buf = buf.at[ei, s_k].set(x_r, mode="drop")
+            return buf
+
+        buf = jax.vmap(dispatch_row)(x_l, e_local, in_shard, slot_l)
+        g = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, wg_l,
+                                   preferred_element_type=jnp.float32))
+        u = jnp.einsum("becd,edf->becf", buf, wu_l,
+                       preferred_element_type=jnp.float32)
+        yb = jnp.einsum("becf,efd->becd", (g * u).astype(x_l.dtype), wd_l)
+
+        def combine_row(yb_r, el_r, p_r, ok_r, slot_r):
+            y = jnp.zeros((S, d), jnp.float32)
+            for k in range(K):
+                ei = jnp.clip(el_r[:, k], 0, E_loc - 1)
+                got = yb_r[ei, jnp.minimum(slot_r[:, k], C - 1)]
+                w_k = jnp.where(ok_r[:, k], p_r[:, k], 0.0)
+                y = y + got.astype(jnp.float32) * w_k[:, None]
+            return y
+
+        y = jax.vmap(combine_row)(yb, e_local, p_l, in_shard, slot_l)
+        return jax.lax.psum(y.astype(jnp.bfloat16), "model")
+
+    f = jax.shard_map(
+        region,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None), P(bspec, None, None), P(bspec, None, None),
+            P(bspec, None, None), P(bspec, None, None),
+            P("model", None, None), P("model", None, None), P("model", None, None),
+        ),
+        out_specs=P(bspec, None, None),
+        check_vma=False,
+    )
+    return f(x, top_e, top_p, slot, valid,
+             params["w_gate"], params["w_up"], params["w_down"]).astype(x.dtype)
+
+
+def moe_block(params, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, MoEAux]:
+    """x: (B, S, d) → (B, S, d), Switch-style aux load loss."""
+    B, S, d = x.shape
+    mc = cfg.moe
+    E, K = mc.num_experts, mc.top_k
+    from repro.core.dispatch import dispatch_indices
+    from repro.distributed.hints import BATCH, constrain, constrain_batch
+
+    x = constrain_batch(x)
+    r = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(r, axis=-1)  # (B,S,E)
+    top_p, top_e = jax.lax.top_k(probs, K)  # (B,S,K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+
+    # ---- per-row dispatch; only index vectors are sorted, the activation
+    # payload moves in K per-choice scatters of (S, d) — never (S·K, d) ----
+    C = int(max(1, round(S * K / E * mc.capacity_factor)))
+
+    def row_slots(e_r):  # (S, K) -> slot/valid (S, K)
+        slot, valid = dispatch_indices(e_r.reshape(-1), E, C)
+        return slot.reshape(S, K), valid.reshape(S, K)
+
+    slot, valid = jax.vmap(row_slots)(top_e)  # (B,S,K)
+
+    from repro.distributed.hints import _active_mesh
+
+    mesh = _active_mesh()
+    ep = mesh is not None and "model" in mesh.axis_names and E % mesh.shape["model"] == 0
+    if ep:
+        # ---- shard_map EP region: dispatch → expert FFN → combine are all
+        # shard-LOCAL over the model axis (each shard owns E/16 experts and
+        # only builds/consumes ITS buffers); the single collective is one
+        # fp32 psum of the combined output. This removes GSPMD's
+        # partitioned-gather u32 index all-reduces (measured 31% of AR
+        # bytes on qwen3-235b train — EXPERIMENTS.md §Perf C). ----
+        y = _moe_ep_shardmap(params, cfg, mesh, x, top_e, top_p, slot, valid, C)
+    else:
+        def dispatch_row(buf, x_r, e_r, slot_r, valid_r):
+            for k in range(K):
+                s_k = jnp.where(valid_r[:, k], slot_r[:, k], C)  # OOB -> dropped
+                buf = buf.at[e_r[:, k], s_k].set(x_r, mode="drop")
+            return buf
+
+        buf0 = constrain(jnp.zeros((B, E, C, d), x.dtype), BATCH, "model", None, None)
+        buf = jax.vmap(dispatch_row)(buf0, x, top_e, slot, valid)  # (B,E,C,d)
+        buf = constrain(buf, BATCH, "model", None, None)
+
+        # explicit f32 casts: this branch executes on CPU (tests/smoke),
+        # whose DotThunk lacks BF16xBF16=F32; the shard_map branch above is
+        # the mesh/TPU path.
+        buf32 = buf.astype(jnp.float32)
+        g = jax.nn.silu(
+            jnp.einsum("becd,edf->becf", buf32, params["w_gate"].astype(jnp.float32))
+        )
+        u = jnp.einsum("becd,edf->becf", buf32, params["w_up"].astype(jnp.float32))
+        yb = jnp.einsum("becf,efd->becd", (g * u).astype(x.dtype), params["w_down"])
+        yb = constrain(yb, BATCH, "model", None, None)
+
+        def combine_row(yb_r, e_r, p_r, slot_r, valid_r):
+            y = jnp.zeros((S, d), jnp.float32)
+            for k in range(K):
+                got = yb_r[e_r[:, k], jnp.minimum(slot_r[:, k], C - 1)]  # (S, d)
+                w_k = jnp.where(valid_r[:, k], p_r[:, k], 0.0)
+                y = y + got.astype(jnp.float32) * w_k[:, None]
+            return y
+
+        y = jax.vmap(combine_row)(yb, top_e, top_p, slot, valid)
+    y = constrain_batch(y)
+
+    # Switch aux loss: E * Σ_e f_e · P_e  (f = token fraction, P = mean prob)
+    assign1 = jax.nn.one_hot(top_e[..., 0], E)  # top-1 assignment fraction
+    f = jnp.mean(assign1.reshape(-1, E), axis=0)
+    P = jnp.mean(probs.reshape(-1, E), axis=0)
+    load_loss = E * jnp.sum(f * P)
+    drop = 1.0 - jnp.mean(valid.astype(jnp.float32))
+    return y.astype(x.dtype), MoEAux(load_loss=load_loss, drop_frac=drop)

@@ -1,0 +1,192 @@
+"""Decoder-only transformer LM (dense / moe / vlm families).
+
+Per-layer parameters are stacked on axis 0 and consumed by ``jax.lax.scan``
+so HLO size and compile time are depth-independent (mandatory for the
+95-layer archs on the 512-device dry-run). ``cfg.remat='layer'`` wraps the
+scan body in ``jax.checkpoint`` for train memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import heads, layers, moe
+from repro.models.layers import (
+    attention_block,
+    attention_decode,
+    embed,
+    init_attention,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+)
+
+
+class DecodeCache(NamedTuple):
+    k: jax.Array  # (L, B, S_max, KV, dh)
+    v: jax.Array
+
+
+def init_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    p = {
+        "ln1": init_rmsnorm(cfg.d_model),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": init_rmsnorm(cfg.d_model),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": init_embedding(ks[1], cfg.padded_vocab, cfg.d_model, cfg.jdtype),
+        "layers": stacked,
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    head_params, ds_state = heads.init_head(ks[2], cfg)
+    params["head"] = head_params
+    return params, ds_state
+
+
+def _layer_body(cfg: ModelConfig, x, layer_params, positions):
+    h, _ = attention_block(layer_params["attn"], cfg, rmsnorm(layer_params["ln1"], x), positions)
+    x = x + h
+    xn = rmsnorm(layer_params["ln2"], x)
+    if cfg.moe is not None:
+        y, aux = moe.moe_block(layer_params["moe"], cfg, xn)
+        return x + y, aux.load_loss
+    return x + mlp(layer_params["mlp"], cfg, xn), jnp.zeros((), jnp.float32)
+
+
+def forward_hidden(params, cfg: ModelConfig, x: jax.Array, positions) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) embeddings → (hidden (B, S, d), moe_aux_sum)."""
+    from repro.distributed.hints import constrain_residual
+
+    def body(carry, layer_params):
+        y, aux = _layer_body(cfg, carry, layer_params, positions)
+        return constrain_residual(y), aux
+
+    if cfg.remat == "layer":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        # save weight-matmul outputs: the backward recompute skips the
+        # TP partial-sum all-reduces (~1/3 of train collective traffic)
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    x, auxs = jax.lax.scan(body, constrain_residual(x), params["layers"])
+    return rmsnorm(params["final_norm"], x), jnp.sum(auxs)
+
+
+def embed_inputs(params, cfg: ModelConfig, batch):
+    """Token (+ optional vision-prefix) embedding. Returns (x, positions,
+    label_mask) where label_mask marks CE-able positions (text only)."""
+    tokens = batch["tokens"]
+    tok_emb = embed(params["embed"], tokens)
+    if cfg.vision is not None and "patches" in batch:
+        patches = batch["patches"].astype(tok_emb.dtype)  # (B, P, d) stub frontend
+        x = jnp.concatenate([patches, tok_emb], axis=1)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        label_mask = jnp.concatenate(
+            [jnp.zeros(patches.shape[:2], bool), jnp.ones(tokens.shape, bool)], axis=1
+        )
+        return x, positions, label_mask
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return tok_emb, positions, None
+
+
+def train_loss(params, ds_state, cfg: ModelConfig, batch):
+    """batch: tokens (B, S+1) [+ patches]. → (total_loss, metrics dict)."""
+    inp = dict(batch)
+    tokens = batch["tokens"]
+    inp["tokens"] = tokens[:, :-1]
+    labels = tokens[:, 1:]
+    x, positions, label_mask = embed_inputs(params, cfg, inp)
+    h, moe_aux = forward_hidden(params, cfg, x, positions)
+    if label_mask is not None:
+        # CE only over text positions; labels aligned to text suffix
+        n_pre = x.shape[1] - labels.shape[1]
+        h_text = h[:, n_pre:]
+    else:
+        h_text = h
+    ce, aux = heads.head_loss(
+        params["head"], ds_state, cfg, h_text, labels,
+        embed_table=params["embed"]["table"], label_mask=None,
+    )
+    moe_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+    total = ce + aux["head_aux_total"] + moe_w * moe_aux
+    metrics = {"ce": ce, "moe_aux": moe_aux, **aux}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8):
+    """Run the full prompt; returns (topk_vals, topk_ids, DecodeCache).
+
+    The cache is built to ``S_max = prompt length`` (the dry-run decode cells
+    size it to seq_len per the assignment).
+    """
+    x, positions, _ = embed_inputs(params, cfg, batch)
+
+    def body(carry, layer_params):
+        xc = carry
+        h, (kv_k, kv_v) = attention_block(
+            layer_params["attn"], cfg, rmsnorm(layer_params["ln1"], xc), positions
+        )
+        xc = xc + h
+        xn = rmsnorm(layer_params["ln2"], xc)
+        if cfg.moe is not None:
+            y, _ = moe.moe_block(layer_params["moe"], cfg, xn)
+        else:
+            y = mlp(layer_params["mlp"], cfg, xn)
+        return xc + y, (kv_k, kv_v)
+
+    xf, (ck, cv) = jax.lax.scan(body, x, params["layers"])
+    h = rmsnorm(params["final_norm"], xf)[:, -1]  # last position
+    vals, ids = heads.head_topk(
+        params["head"], ds_state_or_table, cfg, h, k, embed_table=params["embed"]["table"]
+    )
+    return vals, ids, DecodeCache(k=ck, v=cv)
+
+
+def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token, pos, k: int = 8):
+    """One-token decode. token: (B,) int32; pos: scalar position.
+    Returns (vals, ids, new_cache)."""
+    x = embed(params["embed"], token)[:, None, :]  # (B,1,d)
+
+    def body(carry, scanned):
+        xc = carry
+        layer_params, ck, cv = scanned
+        h, nk, nv = attention_decode(
+            layer_params["attn"], cfg, rmsnorm(layer_params["ln1"], xc), ck, cv, pos
+        )
+        xc = xc + h
+        xn = rmsnorm(layer_params["ln2"], xc)
+        if cfg.moe is not None:
+            y, _ = moe.moe_block(layer_params["moe"], cfg, xn)
+        else:
+            y = mlp(layer_params["mlp"], cfg, xn)
+        return xc + y, (nk, nv)
+
+    xf, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    h = rmsnorm(params["final_norm"], xf)[:, 0]
+    vals, ids = heads.head_topk(
+        params["head"], serve_table, cfg, h, k, embed_table=params["embed"]["table"]
+    )
+    return vals, ids, DecodeCache(k=nk, v=nv)

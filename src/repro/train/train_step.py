@@ -1,0 +1,85 @@
+"""The canonical train step: loss → grads → clip → Adam → mask pruning.
+
+One function for every architecture (the ModelBundle supplies the loss).
+Supports microbatched gradient accumulation (decouples global batch from
+per-device memory) and DS-Softmax mask updates (paper Algorithm 1's
+"if L_task < t: prune").
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import dssoftmax as ds
+from repro.models.model_zoo import ModelBundle
+from repro.optim import OptState, adam_update, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    ds_state: Optional[ds.DSState]
+
+
+def make_train_step(bundle: ModelBundle, tcfg: TrainConfig, lr_schedule=None):
+    cfg = bundle.cfg
+
+    def loss_fn(params, ds_state, batch):
+        total, metrics = bundle.train_loss(params, ds_state, batch)
+        return total, metrics
+
+    def train_step(state: TrainState, batch):
+        from repro.distributed.sharding import constrain_like_params as _clp
+
+        if tcfg.microbatches > 1:
+            # split the batch leading dim into microbatches, accumulate fp32 grads
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, state.ds_state, mb
+                )
+                g = _clp(g)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (_clp(g_acc), l_acc + l), m
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((tcfg.microbatches, x.shape[0] // tcfg.microbatches)
+                                    + x.shape[1:]),
+                batch,
+            )
+            zero = _clp(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            )
+            (grads, loss_sum), metrics = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+            loss = loss_sum / tcfg.microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, state.ds_state, batch
+            )
+
+        from repro.distributed.sharding import constrain_like_params
+
+        grads = constrain_like_params(grads)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = lr_schedule(state.opt.step) if lr_schedule else tcfg.lr
+        new_params, new_opt = adam_update(
+            state.params, grads, state.opt, lr,
+            b1=tcfg.beta1, b2=tcfg.beta2, eps=tcfg.eps, weight_decay=tcfg.weight_decay,
+        )
+
+        new_ds = state.ds_state
+        if cfg.head == "ds" and state.ds_state is not None:
+            task_loss = metrics.get("ce", loss)
+            new_ds = ds.update_mask(new_params["head"], state.ds_state, task_loss, cfg.ds)
+
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        return TrainState(params=new_params, opt=new_opt, ds_state=new_ds), metrics
+
+    return train_step

@@ -1,0 +1,163 @@
+"""Fault-tolerant training loop with DS-Softmax lifecycle management.
+
+Features for the 1000+-node story:
+* auto-resume from the latest checkpoint (params, optimizer, DS masks,
+  data-pipeline step) — a restarted job continues bit-for-bit;
+* preemption-signal checkpointing (SIGTERM → save at step boundary);
+* per-step watchdog: steps slower than ``straggler_factor``× the running
+  median are logged as straggler suspects (on real fleets this feeds the
+  backup-task scheduler);
+* transient-failure retry: a failed step is retried from the last good
+  state up to ``max_retries`` times before surfacing;
+* DS-Softmax mitosis schedule: expert cloning at configured steps (the
+  paper's memory-bounded route to K=64), with recompilation handled by
+  re-jitting on the new shapes.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import dssoftmax as ds
+from repro.core import mitosis
+from repro.models.model_zoo import ModelBundle
+from repro.optim import adam_init, make_schedule
+from repro.train.train_step import TrainState, make_train_step
+from repro.utils import get_logger
+
+log = get_logger("trainer")
+
+
+class Trainer:
+    def __init__(
+        self,
+        bundle: ModelBundle,
+        tcfg: TrainConfig,
+        data_iter,
+        *,
+        pipeline=None,
+        mitosis_steps: Optional[Dict[int, int]] = None,  # step -> new K (x2 clone)
+        hooks: Optional[Dict[str, Callable]] = None,
+        straggler_factor: float = 3.0,
+        max_retries: int = 2,
+    ):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.tcfg = tcfg
+        self.data_iter = data_iter
+        self.pipeline = pipeline
+        self.mitosis_steps = mitosis_steps or {}
+        self.hooks = hooks or {}
+        self.straggler_factor = straggler_factor
+        self.max_retries = max_retries
+        self.mgr = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+        self.sched = make_schedule(tcfg.schedule, tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+        self._step_fn = None
+        self.metrics_history: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0) -> TrainState:
+        params, ds_state = self.bundle.init(jax.random.PRNGKey(seed))
+        return TrainState(params=params, opt=adam_init(params), ds_state=ds_state)
+
+    def _compile(self):
+        step = make_train_step(self.bundle, self.tcfg, self.sched)
+        self._step_fn = jax.jit(step, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    def maybe_resume(self, state: TrainState):
+        latest = self.mgr.latest()
+        if latest is None:
+            return state, 0
+        restored, meta = self.mgr.restore(like=state)
+        if self.pipeline is not None and meta and "pipeline" in meta:
+            self.pipeline.restore(meta["pipeline"])
+        log.info("auto-resumed at step %d", meta["step"])
+        return restored, int(meta["step"])
+
+    def _checkpoint(self, step: int, state: TrainState):
+        meta: dict = {}
+        if self.pipeline is not None:
+            meta["pipeline"] = self.pipeline.snapshot()
+        self.mgr.save(step, state, meta=meta)
+
+    # ------------------------------------------------------------------
+    def _apply_mitosis(self, state: TrainState) -> TrainState:
+        """Clone DS experts K -> 2K (paper Fig. 2) and rebuild opt state."""
+        key = jax.random.PRNGKey(int(state.opt.step))
+        head, ds_state = mitosis.clone_experts(key, state.params["head"], state.ds_state)
+        params = dict(state.params)
+        params["head"] = head
+        # fresh moments for the new head (shape change); everything else kept
+        opt = adam_init(params)
+        opt = opt._replace(step=state.opt.step)
+        new_cfg = self.cfg.replace(ds=self.cfg.ds.replace(num_experts=head["gate"].shape[0]))
+        from repro.models.model_zoo import build
+
+        self.bundle = build(new_cfg)
+        self.cfg = new_cfg
+        self._compile()
+        log.info("mitosis: experts -> %d", head["gate"].shape[0])
+        return TrainState(params=params, opt=opt, ds_state=ds_state)
+
+    # ------------------------------------------------------------------
+    def train(self, state: Optional[TrainState] = None, steps: Optional[int] = None):
+        if state is None:
+            state = self.init_state(self.tcfg.seed)
+        state, start = self.maybe_resume(state)
+        if self._step_fn is None:
+            self._compile()
+        steps = steps if steps is not None else self.tcfg.total_steps
+        self.mgr.install_preemption_handler()
+
+        durations: list[float] = []
+        step = start
+        while step < steps:
+            if step in self.mitosis_steps:
+                state = self._apply_mitosis(state)
+            batch = {k: jax.numpy.asarray(v) for k, v in next(self.data_iter).items()}
+
+            retries = 0
+            while True:
+                try:
+                    t0 = time.perf_counter()
+                    new_state, metrics = self._step_fn(state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    dt = time.perf_counter() - t0
+                    break
+                except Exception as e:  # noqa: BLE001 — transient-failure retry
+                    retries += 1
+                    if retries > self.max_retries:
+                        log.error("step %d failed %d times: %s", step, retries, e)
+                        self._checkpoint(step, state)
+                        raise
+                    log.warning("step %d retry %d after %s", step, retries, e)
+                    self._compile()  # re-jit (fresh donation state)
+
+            state = new_state
+            durations.append(dt)
+            med = float(np.median(durations[-50:]))
+            if len(durations) > 10 and dt > self.straggler_factor * med:
+                log.warning("straggler suspect: step %d took %.3fs (median %.3fs)", step, dt, med)
+
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = step
+            rec["dt"] = dt
+            self.metrics_history.append(rec)
+            if "on_step" in self.hooks:
+                self.hooks["on_step"](step, rec, state)
+
+            step += 1
+            if self.mgr.preempted or (self.tcfg.ckpt_every and step % self.tcfg.ckpt_every == 0):
+                self._checkpoint(step, state)
+                if self.mgr.preempted:
+                    log.warning("exiting after preemption checkpoint at step %d", step)
+                    return state
+        self._checkpoint(steps, state)
+        self.mgr.wait()
+        return state

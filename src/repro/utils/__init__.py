@@ -1,0 +1,27 @@
+from repro.utils.tree import (
+    tree_size,
+    tree_bytes,
+    tree_paths,
+    map_with_path,
+    tree_zeros_like,
+    tree_cast,
+    tree_global_norm,
+    flatten_dict,
+    unflatten_dict,
+)
+from repro.utils.logging import get_logger
+from repro.utils.timing import Timer
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_paths",
+    "map_with_path",
+    "tree_zeros_like",
+    "tree_cast",
+    "tree_global_norm",
+    "flatten_dict",
+    "unflatten_dict",
+    "get_logger",
+    "Timer",
+]

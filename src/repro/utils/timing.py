@@ -1,0 +1,38 @@
+"""Wall-clock timing helpers for benchmarks (block_until_ready-aware)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+class Timer:
+    """Context manager and median-of-N benchmark helper."""
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self.elapsed = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self._t0
+        return False
+
+
+def bench(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median seconds per call of a jax function (blocks on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

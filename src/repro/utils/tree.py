@@ -1,0 +1,88 @@
+"""Pytree utilities used across the framework.
+
+We deliberately avoid external deps (no flax/optax): everything is built on
+``jax.tree_util`` so the framework is self-contained.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes across all leaves (works on ShapeDtypeStruct too)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_paths(tree: Any) -> list[str]:
+    """Slash-joined string path for every leaf."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [_path_str(p) for p, _ in flat]
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where ``fn`` receives the slash-joined leaf path."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_path_str(p), x), tree)
+
+
+def tree_zeros_like(tree: Any, dtype=None) -> Any:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_global_norm(tree: Any) -> jax.Array:
+    """Global l2 norm over all leaves (fp32 accumulation)."""
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def flatten_dict(d: Mapping, sep: str = "/", prefix: str = "") -> dict[str, Any]:
+    """Flatten a nested dict into {'a/b/c': leaf}."""
+    out: dict[str, Any] = {}
+    for k, v in d.items():
+        key = f"{prefix}{sep}{k}" if prefix else str(k)
+        if isinstance(v, Mapping):
+            out.update(flatten_dict(v, sep=sep, prefix=key))
+        else:
+            out[key] = v
+    return out
+
+
+def unflatten_dict(d: Mapping[str, Any], sep: str = "/") -> dict:
+    """Inverse of :func:`flatten_dict`."""
+    out: dict = {}
+    for k, v in d.items():
+        parts = k.split(sep)
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out

@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+# (the 512-device override belongs ONLY to repro.launch.dryrun).
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

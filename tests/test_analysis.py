@@ -1,0 +1,40 @@
+"""Tests for the post-training analysis module (paper §3.7/3.8 tooling)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analysis
+from repro.core.dssoftmax import DSState
+
+
+def _state(mask):
+    return DSState(mask=jnp.asarray(mask, bool))
+
+
+def test_redundancy_and_overlap():
+    mask = np.array([[1, 1, 0, 0], [0, 1, 1, 0], [0, 0, 0, 1]], bool)
+    st = _state(mask)
+    assert analysis.redundancy_histogram(st) == {1: 3, 2: 1}
+    ov = analysis.overlap_matrix(st)
+    assert np.isclose(ov[0, 1], 1 / 3)  # classes {0,1} vs {1,2}: |∩|=1, |∪|=3
+    assert ov[0, 2] == 0.0
+    np.testing.assert_allclose(np.diag(ov), 1.0)
+
+
+def test_exclusive_classes():
+    mask = np.array([[1, 1, 0], [0, 1, 1]], bool)
+    st = _state(mask)
+    assert list(analysis.exclusive_classes(st, 0)) == [0]
+    assert list(analysis.exclusive_classes(st, 1)) == [2]
+
+
+def test_speedup_report():
+    mask = np.ones((4, 100), bool)
+    mask[:, 50:] = False  # every expert holds 50 of 100 classes
+    st = _state(mask)
+    choices = np.repeat(np.arange(4), 25)  # perfectly balanced
+    rep = analysis.speedup_report(st, choices, v_pad=64)
+    assert np.isclose(rep["paper_speedup"], 100 / (50 + 4))
+    assert rep["util_cv"] < 1e-9
+    assert np.isclose(rep["padded_speedup"], 100 / 68)
+    assert np.isclose(rep["mean_redundancy"], 2.0)

@@ -1,0 +1,40 @@
+"""Baseline implementations: full softmax, SVD-softmax, D-softmax."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+
+
+def test_svd_softmax_near_exact_with_full_window():
+    rng = jax.random.PRNGKey(0)
+    w = jax.random.normal(rng, (500, 32))
+    h = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    full_v, full_i = bl.full_topk(w, h, 5)
+    m = bl.svd_build(w, window=32, n_top=500)  # full window/full refine == exact
+    v, i = bl.svd_topk(m, h, 5)
+    assert np.array_equal(np.asarray(i), np.asarray(full_i))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(full_v), rtol=1e-4, atol=1e-4)
+
+
+def test_svd_softmax_preview_recall_reasonable():
+    w = jax.random.normal(jax.random.PRNGKey(0), (1000, 64))
+    h = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
+    _, full_i = bl.full_topk(w, h, 1)
+    m = bl.svd_build(w, window=16, n_top=100)
+    _, i = bl.svd_topk(m, h, 1)
+    recall = np.mean(np.asarray(i[:, 0]) == np.asarray(full_i[:, 0]))
+    assert recall > 0.6  # preview should find most top-1s
+    assert bl.svd_flops(1000, 64, 16, 100) < bl.full_flops(1000, 64)
+
+
+def test_dsoftmax_shapes_and_flops():
+    m = bl.dsoftmax_build(jax.random.PRNGKey(0), n=1000, d=64,
+                          fractions=[0.25, 0.25, 0.5], dims=[64, 32, 16])
+    h = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    z = bl.dsoftmax_logits(m, h)
+    assert z.shape == (4, 1000)
+    v, i = bl.dsoftmax_topk(m, h, 5)
+    assert i.shape == (4, 5)
+    assert bl.dsoftmax_flops(m) < bl.full_flops(1000, 64)
+    assert sum(m.sizes) == 1000

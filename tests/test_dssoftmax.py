@@ -1,0 +1,144 @@
+"""Unit tests for the paper's core: DS-Softmax layer semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DSSoftmaxConfig
+from repro.core import dssoftmax as ds
+from repro.core import gating, losses, pruning
+
+
+@pytest.fixture
+def small():
+    cfg = DSSoftmaxConfig(num_experts=4, gamma=0.05)
+    params, state = ds.init(jax.random.PRNGKey(0), 16, 64, cfg)
+    h = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (32,), 0, 64)
+    return cfg, params, state, h, labels
+
+
+def test_gate_top1_is_normalized_then_masked(small):
+    cfg, params, state, h, _ = small
+    idx, g, G = gating.top1_gate(params["gate"], h)
+    assert np.allclose(np.asarray(jnp.sum(G, -1)), 1.0, atol=1e-5)
+    # kept value is the (un-renormalized) max of the softmax
+    assert np.allclose(np.asarray(g), np.asarray(jnp.max(G, -1)))
+    Gs = gating.sparse_gate_matrix(G)
+    assert np.all(np.asarray(jnp.sum(Gs > 0, -1)) == 1)  # exactly one expert
+    assert np.allclose(np.asarray(jnp.sum(Gs, -1)), np.asarray(g))
+
+
+def test_gate_gradients_flow_to_all_rows(small):
+    """Eq. 1: normalization before masking keeps grads on every gate row."""
+    cfg, params, state, h, labels = small
+
+    def loss(gate_w):
+        G = gating.gate_values(gate_w, h)
+        Gs = gating.sparse_gate_matrix(G)
+        return jnp.sum(Gs)
+
+    g = jax.grad(loss)(params["gate"])
+    assert np.all(np.any(np.asarray(g) != 0, axis=1)), "some expert got zero grad"
+
+
+def test_dense_and_sorted_dispatch_agree(small):
+    cfg, params, state, h, labels = small
+    ce_d, _ = ds.loss(params, state, h, labels, cfg, dispatch="dense")
+    ce_s, aux = ds.loss(params, state, h, labels, cfg, dispatch="sorted",
+                        capacity_factor=4.0)
+    assert float(aux.drop_frac) == 0.0
+    np.testing.assert_allclose(float(ce_d), float(ce_s), rtol=1e-4)
+
+
+def test_loss_rows_matches_dense(small):
+    cfg, params, state, h, labels = small
+    h2 = h.reshape(2, 16, 16)
+    l2 = labels.reshape(2, 16)
+    ce_r, _ = ds.loss_rows(params, state, h2, l2, cfg, capacity_factor=4.0)
+    ce_d, _ = ds.loss(params, state, h, labels, cfg, dispatch="dense")
+    np.testing.assert_allclose(float(ce_r), float(ce_d), rtol=1e-4)
+
+
+def test_mask_modes(small):
+    """'zero' keeps exp(0) of pruned classes in Z (paper-faithful);
+    'neg_inf' excludes them — CE must differ once pruning happened."""
+    cfg, params, state, h, labels = small
+    mask = np.asarray(state.mask).copy()
+    mask[:, 32:] = False  # prune half the classes everywhere
+    state2 = ds.DSState(mask=jnp.asarray(mask))
+    labels_small = labels % 32
+    ce_zero, _ = ds.loss(params, state2, h, labels_small, cfg, dispatch="dense")
+    cfg_ninf = cfg.replace(mask_mode="neg_inf")
+    ce_ninf, _ = ds.loss(params, state2, h, labels_small, cfg_ninf, dispatch="dense")
+    assert not np.isclose(float(ce_zero), float(ce_ninf))
+    # zero mode's Z is larger (extra exp(0) terms) => larger CE
+    assert float(ce_zero) > float(ce_ninf)
+
+
+def test_prune_monotone_and_one_copy(small):
+    cfg, params, state, h, labels = small
+    # shrink some rows below gamma
+    w = np.asarray(params["experts"], np.float32).copy()
+    w[:, :10, :] *= 1e-4
+    params2 = {**params, "experts": jnp.asarray(w)}
+    cfg2 = cfg.replace(prune_task_loss_threshold=1e9)
+    st1 = ds.update_mask(params2, state, jnp.asarray(0.0), cfg2)
+    m = np.asarray(st1.mask)
+    assert m[:, :10].sum() == 10, "exactly one copy kept per tiny class"
+    # monotone: pruning again can't resurrect
+    st2 = ds.update_mask(params2, st1, jnp.asarray(0.0), cfg2)
+    assert np.all(np.asarray(st2.mask) <= m)
+
+
+def test_prune_gated_on_task_loss(small):
+    cfg, params, state, h, labels = small
+    cfg2 = cfg.replace(prune_task_loss_threshold=0.5)
+    # task loss above threshold -> no pruning even with tiny rows
+    w = np.asarray(params["experts"], np.float32) * 1e-4
+    params2 = {**params, "experts": jnp.asarray(w)}
+    st = ds.update_mask(params2, state, jnp.asarray(10.0), cfg2)
+    assert np.asarray(st.mask).all()
+
+
+def test_pack_and_serve_matches_dense_topk(small):
+    cfg, params, state, h, labels = small
+    w = np.asarray(params["experts"], np.float32).copy()
+    w[:, ::3, :] = 0.0
+    params2 = {**params, "experts": jnp.asarray(w)}
+    st = ds.update_mask(params2, state, jnp.asarray(0.0),
+                        cfg.replace(prune_task_loss_threshold=1e9))
+    table = ds.pack_experts(params2, st)
+    vals, ids = ds.serve_topk(params2["gate"], table, h, k=5)
+    z, (eidx, g, _) = ds.logits_dense(params2, st, h, cfg)
+    zm = jnp.where(st.mask[eidx], z, -1e9)
+    ref_vals, ref_ids = jax.lax.top_k(zm, 5)
+    assert np.all(np.asarray(ids) == np.asarray(ref_ids))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(ref_vals), rtol=1e-4)
+
+
+def test_serve_full_probs_sums_to_one(small):
+    cfg, params, state, h, _ = small
+    table = ds.pack_experts(params, state)
+    p = ds.serve_full_probs(params["gate"], table, h, 64)
+    np.testing.assert_allclose(np.asarray(jnp.sum(p, -1)), 1.0, rtol=1e-4)
+
+
+def test_padded_vocab_columns_stay_dead():
+    cfg = DSSoftmaxConfig(num_experts=2, gamma=0.05)
+    params, state = ds.init(jax.random.PRNGKey(0), 8, 32, cfg, n_valid=20)
+    assert not np.asarray(state.mask)[:, 20:].any()
+    st = ds.update_mask(params, state, jnp.asarray(0.0),
+                        cfg.replace(prune_task_loss_threshold=1e9))
+    assert not np.asarray(st.mask)[:, 20:].any(), "pads must never resurrect"
+
+
+def test_aux_losses_values():
+    w = jnp.ones((2, 4, 9))  # row norm = 3
+    mask = jnp.ones((2, 4), bool)
+    assert np.isclose(float(losses.group_lasso(w, mask, gamma=0.01)), 2 * 4 * 3.0)
+    assert np.isclose(float(losses.expert_lasso(w, mask)), 2 * 6.0)  # ||W||_F = 6
+    load = losses.load_balance(jnp.asarray([1.0, 1.0, 1.0]))
+    assert float(load) < 1e-6  # perfectly balanced -> CV^2 = 0
+    load2 = losses.load_balance(jnp.asarray([3.0, 0.0, 0.0]))
+    assert float(load2) > 1.0

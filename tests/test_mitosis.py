@@ -1,0 +1,39 @@
+"""Mitosis training tests (paper §2.3 / Fig. 2 / Fig. 5a)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DSSoftmaxConfig
+from repro.core import dssoftmax as ds
+from repro.core import mitosis
+
+
+def test_clone_doubles_and_inherits_sparsity():
+    cfg = DSSoftmaxConfig(num_experts=2)
+    params, state = ds.init(jax.random.PRNGKey(0), 8, 32, cfg)
+    mask = np.asarray(state.mask).copy()
+    mask[0, :16] = False
+    state = ds.DSState(mask=jnp.asarray(mask))
+    p2, s2 = mitosis.clone_experts(jax.random.PRNGKey(1), params, state)
+    assert p2["gate"].shape == (4, 8)
+    assert p2["experts"].shape == (4, 32, 8)
+    m2 = np.asarray(s2.mask)
+    assert np.array_equal(m2[0], mask[0]) and np.array_equal(m2[2], mask[0])
+    # expert weights identical between parent and offspring
+    np.testing.assert_array_equal(np.asarray(p2["experts"][0]), np.asarray(p2["experts"][2]))
+    # gates diverge slightly
+    assert not np.array_equal(np.asarray(p2["gate"][0]), np.asarray(p2["gate"][2]))
+
+
+def test_memory_ratio():
+    cfg = DSSoftmaxConfig(num_experts=4)
+    _, state = ds.init(jax.random.PRNGKey(0), 8, 100, cfg)
+    assert np.isclose(mitosis.memory_ratio(state), 4.0)  # 4 full softmaxes
+    mask = np.asarray(state.mask).copy()
+    mask[:, 50:] = False
+    assert np.isclose(mitosis.memory_ratio(ds.DSState(mask=jnp.asarray(mask))), 2.0)
+
+
+def test_schedule():
+    assert mitosis.mitosis_schedule(2, 64) == [2, 4, 8, 16, 32, 64]
+    assert mitosis.mitosis_schedule(8, 8) == [8]

@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline claim, in miniature: train a classifier with a DS-Softmax head
+on the paper's §3.1 two-level hierarchy data; after group-lasso pruning the
+experts are sparse, serving agrees with training, and FLOPs speedup > 1 at
+matched accuracy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DSSoftmaxConfig
+from repro.core import dssoftmax as ds
+from repro.core import metrics
+from repro.core.gating import top1_gate
+from repro.data import hierarchy_dataset
+from repro.optim import adam_init, adam_update
+
+
+def _train_ds_head(data, n_classes, K=4, steps=400, lam=3e-4, seed=0):
+    d = data.x.shape[1]
+    cfg = DSSoftmaxConfig(num_experts=K, gamma=0.02,
+                          lambda_lasso=lam, lambda_expert=lam, lambda_load=10.0,
+                          prune_task_loss_threshold=1.5)
+    params, state = ds.init(jax.random.PRNGKey(seed), d, n_classes, cfg)
+    opt = adam_init(params)
+    x = jnp.asarray(data.x / np.linalg.norm(data.x, axis=1, keepdims=True) * np.sqrt(d))
+    y = jnp.asarray(data.y)
+
+    @jax.jit
+    def step(params, state, opt):
+        def loss_fn(p):
+            total, (ce, aux) = ds.total_loss(p, state, x, y, cfg, dispatch="dense")
+            return total, ce
+
+        (_, ce), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt = adam_update(params, g, opt, 3e-2)
+        state = ds.update_mask(params, state, ce, cfg)
+        return params, state, opt, ce
+
+    for _ in range(steps):
+        params, state, opt, ce = step(params, state, opt)
+    return cfg, params, state, float(ce)
+
+
+def test_hierarchy_recovery_and_speedup():
+    data = hierarchy_dataset(n_super=4, n_sub_per_super=4, n_per_sub=40, dim=32)
+    n_classes = 16
+    cfg, params, state, ce = _train_ds_head(data, n_classes)
+
+    # 1. accuracy: serving top-1 matches labels on training data
+    table = ds.pack_experts(params, state)
+    x = jnp.asarray(data.x / np.linalg.norm(data.x, axis=1, keepdims=True)
+                    * np.sqrt(data.x.shape[1]))
+    vals, ids = ds.serve_topk(params["gate"], table, x, k=1)
+    acc = float(np.mean(np.asarray(ids[:, 0]) == data.y))
+    assert acc > 0.9, acc
+
+    # 2. sparsity: experts were pruned (each holds a subset of classes)
+    sizes = np.asarray(state.mask).sum(axis=1)
+    assert sizes.max() < n_classes, sizes
+
+    # 3. paper speedup formula > 1
+    eidx, _, _ = top1_gate(params["gate"], x)
+    util = metrics.utilization(np.asarray(eidx), cfg.num_experts)
+    speedup = metrics.paper_speedup(n_classes, sizes, util)
+    assert speedup > 1.0, speedup
+
+
+def test_serve_matches_train_distribution():
+    """Serve-path probabilities equal the train-forward ('neg_inf' mode)."""
+    cfg = DSSoftmaxConfig(num_experts=3, mask_mode="neg_inf")
+    params, state = ds.init(jax.random.PRNGKey(0), 16, 40, cfg)
+    mask = np.asarray(state.mask).copy()
+    mask[:, ::4] = False
+    state = ds.DSState(mask=jnp.asarray(mask))
+    h = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+    z, (eidx, g, G) = ds.logits_dense(params, state, h, cfg)
+    p_train = jax.nn.softmax(z, axis=-1)
+    table = ds.pack_experts(params, state)
+    p_serve = ds.serve_full_probs(params["gate"], table, h, 40)
+    np.testing.assert_allclose(np.asarray(p_serve), np.asarray(p_train),
+                               rtol=1e-3, atol=1e-5)

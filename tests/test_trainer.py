@@ -1,0 +1,95 @@
+"""Trainer integration: loss decreases, resume is exact, mitosis works,
+serve engine generates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.configs.base import TrainConfig
+from repro.data import DataPipeline, TopicLMStream
+from repro.models import build
+from repro.train import Request, ServeEngine, Trainer
+from repro.train.train_step import make_train_step
+
+
+def _tiny_lm(tmp_path, vocab=128, steps=30, ckpt_every=10):
+    cfg = reduce_config(get_config("qwen2-1.5b"), vocab=vocab).replace(
+        ds=get_config("qwen2-1.5b").ds.replace(
+            num_experts=4, lambda_lasso=1e-4, lambda_expert=1e-4, lambda_load=1e-2
+        )
+    )
+    bundle = build(cfg)
+    stream = TopicLMStream(vocab=vocab, seq_len=32, batch=8, seed=0)
+    pipe = DataPipeline(lambda i: {"tokens": stream.batch_at(i)},
+                        process_index=0, process_count=1)
+    tcfg = TrainConfig(lr=1e-3, total_steps=steps, warmup_steps=5,
+                       ckpt_dir=str(tmp_path), ckpt_every=ckpt_every, keep_ckpts=2)
+    return bundle, pipe, tcfg
+
+
+def test_loss_decreases_and_checkpoints(tmp_path):
+    bundle, pipe, tcfg = _tiny_lm(tmp_path)
+    tr = Trainer(bundle, tcfg, iter(pipe), pipeline=pipe)
+    state = tr.train()
+    losses = [m["ce"] for m in tr.metrics_history]
+    assert losses[-1] < losses[0], (losses[0], losses[-1])
+    assert tr.mgr.latest() == tcfg.total_steps
+
+
+def test_exact_resume(tmp_path):
+    bundle, pipe, tcfg = _tiny_lm(tmp_path, steps=10, ckpt_every=5)
+    tr = Trainer(bundle, tcfg, iter(pipe), pipeline=pipe)
+    tr.train(steps=5)  # stops at 5... train() runs to total; emulate partial:
+    # wipe and do a clean 2-phase run instead
+    import shutil
+    shutil.rmtree(str(tmp_path))
+
+    bundle, pipe, tcfg = _tiny_lm(tmp_path, steps=10, ckpt_every=5)
+    tr1 = Trainer(bundle, tcfg, iter(pipe), pipeline=pipe)
+    s1 = tr1.train(steps=5)  # checkpoints at step 5
+
+    bundle2, pipe2, tcfg2 = _tiny_lm(tmp_path, steps=10, ckpt_every=5)
+    tr2 = Trainer(bundle2, tcfg2, iter(pipe2), pipeline=pipe2)
+    s2 = tr2.train(steps=10)  # resumes at 5, runs to 10
+    assert tr2.metrics_history[0]["step"] == 5
+    # pipeline resumed (batches 5.. consumed, not 0..)
+    assert pipe2.state.step == 10
+
+
+def test_microbatch_equivalence():
+    cfg = reduce_config(get_config("llama3.2-3b"), vocab=64)
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    from repro.optim import adam_init
+    from repro.train.train_step import TrainState
+
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 33), 0, 64)}
+    out = {}
+    for micro in (1, 2):
+        tcfg = TrainConfig(lr=1e-3, microbatches=micro, grad_clip=1e9)
+        step = jax.jit(make_train_step(bundle, tcfg))
+        st = TrainState(params=params, opt=adam_init(params), ds_state=ds_state)
+        new_st, m = step(st, batch)
+        out[micro] = new_st.params["layers"]["attn"]["wq"]
+    # grads averaged over microbatches -> same update (CE is per-token mean)
+    a, b = np.asarray(out[1], np.float32), np.asarray(out[2], np.float32)
+    np.testing.assert_allclose(a, b, rtol=0.2, atol=1e-2)
+
+
+def test_mitosis_in_trainer(tmp_path):
+    bundle, pipe, tcfg = _tiny_lm(tmp_path, steps=8, ckpt_every=100)
+    tr = Trainer(bundle, tcfg, iter(pipe), pipeline=pipe, mitosis_steps={4: 8})
+    state = tr.train(steps=8)
+    assert state.params["head"]["gate"].shape[0] == 8  # 4 -> 8 experts
+
+
+def test_serve_engine_generates(tmp_path):
+    bundle, pipe, tcfg = _tiny_lm(tmp_path)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(bundle, params, ds_state)
+    reqs = [Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=4),
+            Request(prompt=np.arange(3, dtype=np.int32) + 7, max_new_tokens=4)]
+    out = eng.generate(reqs)
+    for r in out:
+        assert len(r.out_tokens) == 4
+        assert all(0 <= t < bundle.cfg.vocab_size for t in r.out_tokens)
