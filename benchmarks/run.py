@@ -14,6 +14,7 @@ def main() -> None:
     from benchmarks import (
         mitosis_memory,
         redundancy,
+        serve_topk,
         synthetic_hierarchy,
         table1_lm,
         table2_nmt,
@@ -31,15 +32,30 @@ def main() -> None:
         ("table5_post_approximation", table5_postapprox.main),
         ("fig5a_mitosis_memory", mitosis_memory.main),
         ("fig5b_redundancy", redundancy.main),
+        # serving kernel-path sweep; writes BENCH_serve_topk.json
+        ("serve_topk_kernel_sweep", serve_topk.main),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    walls = {}
     for name, fn in sections:
         if only and only not in name:
             continue
         print(f"\n===== {name} =====")
         t0 = time.time()
         fn()
-        print(f"# section wall: {time.time()-t0:.1f}s")
+        walls[name] = time.time() - t0
+        print(f"# section wall: {walls[name]:.1f}s")
+    # machine-readable section timings for trajectory tracking across PRs
+    # (full runs only — a filtered run must not clobber the record with a
+    # partial dict)
+    if only is None:
+        import json
+        import os
+
+        out = os.environ.get("BENCH_SECTIONS_OUT", "BENCH_sections.json")
+        with open(out, "w") as fh:
+            json.dump({"section_wall_s": walls}, fh, indent=1)
+        print(f"\n# wrote {out}")
 
 
 if __name__ == '__main__':

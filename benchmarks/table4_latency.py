@@ -43,7 +43,10 @@ def main(B: int = 16):
         sizes = np.asarray(state.mask).sum(1)
         util = np.full(K, 1.0 / K)
         sp = dsmetrics.paper_speedup(vocab, sizes, util)
-        for kern in ("jnp", "grouped"):
+        # 'pallas_grouped' runs under interpret=True here (CPU container):
+        # semantics + trend only — the TPU number is the bytes model in
+        # benchmarks/serve_topk.py.
+        for kern in ("jnp", "grouped", "pallas_grouped"):
             f = jax.jit(lambda hh, _t=table, _p=params, _k=kern: ds.serve_topk(
                 _p["gate"], _t, hh, k, kernel=_k))
             rows.append((f"DS-{K}[{kern},B={B}]", bench_us(f, h), sp))

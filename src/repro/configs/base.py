@@ -27,7 +27,10 @@ class DSSoftmaxConfig:
     # None => derived as max_k |v_k| rounded up to a multiple of 128.
     serve_pad: Optional[int] = None
     # serve compute path: 'jnp' (per-token gather — paper-faithful baseline),
-    # 'grouped' (expert-batched weight-stationary — beyond-paper), 'pallas'
+    # 'grouped' (expert-batched weight-stationary XLA — beyond-paper),
+    # 'pallas' (legacy per-token streaming kernel), 'pallas_grouped'
+    # (expert-grouped streaming kernel with in-VMEM top-k carry — the
+    # production serving default in train.serve.ServeEngine)
     serve_kernel: str = "jnp"
     # Mitosis
     mitosis_start_experts: int = 2

@@ -401,13 +401,21 @@ def serve_topk(
     k: int,
     *,
     kernel: str = "jnp",
+    capacity_factor: float = 2.0,
 ) -> tuple[jax.Array, jax.Array]:
     """Top-k class retrieval (paper inference). h: (B, d) → values/ids (B, k).
 
-    kernel='jnp'    — gather + matmul in plain jnp (oracle; XLA fuses the
-                      gather reasonably but materializes (B, V_pad, d)).
-    kernel='pallas' — fused streaming kernel from repro.kernels (TPU target;
-                      validated under interpret=True on CPU).
+    kernel='jnp'     — per-token gather + matmul in plain jnp (the oracle;
+                       XLA materializes the (B, V_pad, d) gather).
+    kernel='grouped' — expert-batched weight-stationary XLA path: tokens
+                       dispatched by top-1 expert, one (C, d)×(d, V_pad)
+                       matmul per expert, exact overflow fallback.
+    kernel='pallas'  — per-token streaming Pallas kernel (legacy; spills
+                       (B, n_blocks, k) candidates and re-merges).
+    kernel='pallas_grouped' — expert-grouped streaming Pallas kernel: the
+                       grouped dispatch feeds (block_b, d)×(d, block_v) MXU
+                       matmuls with a running top-k carried in VMEM; only
+                       O(B·k) values/ids reach HBM. Production serving path.
     """
     from repro.distributed.hints import BATCH, constrain, constrain_batch
 
@@ -417,8 +425,16 @@ def serve_topk(
         from repro.kernels import ops as kops
 
         return kops.dss_topk(table.weights, table.ids, h, expert_idx, g, k)
-    if kernel == "grouped":
-        return _serve_topk_grouped(table, h, expert_idx, g, k)
+    if kernel in ("grouped", "pallas_grouped"):
+        return _serve_topk_grouped(
+            table, h, expert_idx, g, k,
+            capacity_factor=capacity_factor, use_pallas=kernel == "pallas_grouped",
+        )
+    if kernel != "jnp":
+        raise ValueError(
+            f"unknown serve kernel {kernel!r} "
+            "(expected 'jnp' | 'grouped' | 'pallas' | 'pallas_grouped')"
+        )
     w_sel = constrain(table.weights[expert_idx], BATCH, "model", None)  # (B,V_pad,d)
     ids_sel = constrain(table.ids[expert_idx], BATCH, "model")  # (B, V_pad)
     z = jnp.einsum("bvd,bd->bv", w_sel, h, preferred_element_type=jnp.float32)
@@ -430,55 +446,109 @@ def serve_topk(
     return vals, ids
 
 
+def _group_tokens(h: jax.Array, g: jax.Array, expert_idx: jax.Array,
+                  K: int, capacity: int):
+    """Grouped-dispatch pre-pass shared by the XLA and Pallas serve paths.
+
+    Scatters tokens (UNscaled) and their fp32 gate values into per-expert
+    capacity buffers. Returns (buf (K,C,d), g_buf (K,C), slot, valid)."""
+    from repro.core.dispatch import dispatch_indices
+
+    d = h.shape[-1]
+    slot, valid = dispatch_indices(expert_idx, K, capacity)
+    s_k = jnp.where(valid, slot, capacity)
+    buf = jnp.zeros((K, capacity, d), h.dtype)
+    buf = buf.at[expert_idx, s_k].set(h, mode="drop")
+    g_buf = jnp.zeros((K, capacity), jnp.float32)
+    g_buf = g_buf.at[expert_idx, s_k].set(
+        jnp.where(valid, g.astype(jnp.float32), 0.0), mode="drop"
+    )
+    return buf, g_buf, slot, valid
+
+
+def _overflow_fixup(table: ServeTable, h, g, expert_idx, valid, vals, ids, k,
+                    capacity: int):
+    """Exact fallback for capacity-overflow tokens via the gather path,
+    processed in fixed O-slot chunks inside a dynamic-trip-count loop:
+    cost O(ceil(n_over/O)·O·V_pad·d) — proportional to the *actual* overflow
+    (zero loop iterations when nothing overflowed), never B·V_pad·d unless
+    everything did. O = min(B, max(capacity, K)): one expert capacity in the
+    large-batch regime, ~one slot per expert when B ≲ K (where capacity
+    rounds to 1 and overflow is dominated by experts receiving a second
+    token). Every overflowed token is fixed up exactly, however skewed the
+    gate distribution."""
+    B = h.shape[0]
+    K = table.ids.shape[0]
+    O = min(B, max(capacity, K))
+    # All overflow positions, padded with the out-of-range sentinel B.
+    over_all = jnp.nonzero(~valid, size=B, fill_value=B)[0]  # (B,)
+    n_over = jnp.sum((~valid).astype(jnp.int32))
+    n_chunks = (n_over + O - 1) // O  # dynamic — lowers to a while loop
+
+    def chunk(c, carry):
+        vals, ids = carry
+        idx = jax.lax.dynamic_slice(over_all, (c * O,), (O,))  # (O,)
+        take = jnp.minimum(idx, B - 1)  # clamp sentinel rows for the GATHERS
+        h_o = h[take]
+        w_o = table.weights[expert_idx[take]]  # (O, V_pad, d)
+        ids_o = table.ids[expert_idx[take]]
+        z_o = jnp.einsum("ovd,od->ov", w_o, h_o, preferred_element_type=jnp.float32)
+        z_o = z_o * g[take][:, None]
+        z_o = jnp.where(ids_o >= 0, z_o, NEG_INF)
+        v_o, p_o = jax.lax.top_k(z_o, k)
+        i_o = jnp.take_along_axis(ids_o, p_o, axis=1)
+        # Scatter through the UNclamped index with mode='drop': sentinel rows
+        # (idx == B) fall out of bounds and are discarded — clamping them to
+        # B-1 would duplicate that index and could clobber a real fixup of
+        # the last token with its stale pre-update value.
+        vals = vals.at[idx].set(v_o, mode="drop")
+        ids = ids.at[idx].set(i_o, mode="drop")
+        return vals, ids
+
+    return jax.lax.fori_loop(0, n_chunks, chunk, (vals, ids))
+
+
 def _serve_topk_grouped(
     table: ServeTable, h: jax.Array, expert_idx: jax.Array, g: jax.Array, k: int,
-    capacity_factor: float = 2.0,
+    capacity_factor: float = 2.0, use_pallas: bool = False,
 ):
     """Beyond-paper batched serving: tokens grouped by expert, one
-    weight-stationary (C, d)×(d, V_pad) MXU matmul per expert — the packed
+    weight-stationary (C, d)×(d, V_pad) contraction per expert — the packed
     tables are read once per *expert*, not once per token (the naive gather
     path moves B·V_pad·d bytes; this moves K·V_pad·d + dispatch).
 
+    ``use_pallas`` routes the matmul+top-k through the fused streaming
+    kernel (``kernels.dss_topk_grouped``): the running top-k lives in VMEM
+    across vocab blocks and only the (K, C, k) grouped outputs reach HBM.
     Tokens overflowing an expert's capacity fall back to the gather path
     (rare with the load-balance loss; exactness preserved).
     """
-    from repro.core.dispatch import dispatch_indices
     from repro.distributed.hints import constrain
 
     B, d = h.shape
     K, v_pad, _ = table.weights.shape
     capacity = int(max(1, round(B / K * capacity_factor)))
-    slot, valid = dispatch_indices(expert_idx, K, capacity)
+    buf, g_buf, slot, valid = _group_tokens(h, g, expert_idx, K, capacity)
 
-    buf = jnp.zeros((K, capacity, d), h.dtype)
-    s_k = jnp.where(valid, slot, capacity)
-    buf = buf.at[expert_idx, s_k].set(h * g[:, None].astype(h.dtype), mode="drop")
-    z = jnp.einsum("kcd,kvd->kcv", buf, table.weights,
-                   preferred_element_type=jnp.float32)  # (K, C, V_pad)
-    z = constrain(z, None, None, "model")
-    z = jnp.where(table.ids[:, None, :] >= 0, z, NEG_INF)
-    vals_b, pos_b = jax.lax.top_k(z, k)  # (K, C, k)
-    ids_b = jnp.take_along_axis(
-        jnp.broadcast_to(table.ids[:, None, :], z.shape), pos_b, axis=2
-    )
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        vals_b, ids_b = kops.dss_topk_grouped(
+            table.weights, table.ids, buf, g_buf, k
+        )  # (K, C, k) each — no per-block candidate spill
+    else:
+        z = jnp.einsum("kcd,kvd->kcv", buf, table.weights,
+                       preferred_element_type=jnp.float32)  # (K, C, V_pad)
+        z = constrain(z, None, None, "model")
+        z = z * g_buf[..., None]
+        z = jnp.where(table.ids[:, None, :] >= 0, z, NEG_INF)
+        vals_b, pos_b = jax.lax.top_k(z, k)  # (K, C, k)
+        ids_b = jnp.take_along_axis(
+            jnp.broadcast_to(table.ids[:, None, :], z.shape), pos_b, axis=2
+        )
     vals = vals_b[expert_idx, jnp.minimum(slot, capacity - 1)]  # (B, k)
     ids = ids_b[expert_idx, jnp.minimum(slot, capacity - 1)]
-
-    # Bounded exact fallback: the (few) capacity-overflow tokens take the
-    # gather path on a fixed O-slot buffer — cost O(O·V_pad·d), not B·V_pad·d.
-    O = capacity
-    over_idx = jnp.nonzero(~valid, size=O, fill_value=0)[0]  # (O,)
-    h_o = h[over_idx] * g[over_idx][:, None].astype(h.dtype)
-    w_o = table.weights[expert_idx[over_idx]]  # (O, V_pad, d)
-    ids_o = table.ids[expert_idx[over_idx]]
-    z_o = jnp.einsum("ovd,od->ov", w_o, h_o, preferred_element_type=jnp.float32)
-    z_o = jnp.where(ids_o >= 0, z_o, NEG_INF)
-    v_o, p_o = jax.lax.top_k(z_o, k)
-    i_o = jnp.take_along_axis(ids_o, p_o, axis=1)
-    use = (~valid)[over_idx][:, None]
-    vals = vals.at[over_idx].set(jnp.where(use, v_o, vals[over_idx]))
-    ids = ids.at[over_idx].set(jnp.where(use, i_o, ids[over_idx]))
-    return vals, ids
+    return _overflow_fixup(table, h, g, expert_idx, valid, vals, ids, k, capacity)
 
 
 def serve_full_probs(

@@ -329,3 +329,13 @@ def analyze_hlo(txt: str) -> dict:
     """→ per-device {flops, bytes, coll_operand_bytes, coll_wire_bytes,
     coll_counts, coll_bytes_by_kind}."""
     return HLOCost(txt).totals
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """XLA's own ``compiled.cost_analysis()``, normalized across JAX
+    versions: older releases return a one-dict-per-device *list*, newer ones
+    the dict directly. Always returns a (possibly empty) flat dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

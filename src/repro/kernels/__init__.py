@@ -6,6 +6,7 @@ is the compile target, the interpreter validates semantics).
 """
 from repro.kernels import ops, ref
 from repro.kernels.dss_topk import dss_topk
+from repro.kernels.dss_topk_grouped import dss_topk_grouped
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gate_top1 import gate_top1
 from repro.kernels.lasso_prune import lasso_prune
@@ -14,6 +15,7 @@ __all__ = [
     "ops",
     "ref",
     "dss_topk",
+    "dss_topk_grouped",
     "flash_attention",
     "gate_top1",
     "lasso_prune",

@@ -1,0 +1,26 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+JAX has renamed the TPU compiler-params dataclass across releases
+(``pltpu.CompilerParams`` ↔ ``pltpu.TPUCompilerParams``). Every kernel in
+this package goes through :func:`tpu_compiler_params` so both spellings
+work without version pins.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# Prefer the spelling present in the installed JAX; both carry the same
+# fields (dimension_semantics, vmem_limit_bytes, ...).
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "TPUCompilerParams", getattr(pltpu, "CompilerParams", None)
+)
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct TPU compiler params under either JAX API spelling."""
+    if _COMPILER_PARAMS_CLS is None:  # pragma: no cover - very old/new JAX
+        raise AttributeError(
+            "jax.experimental.pallas.tpu exposes neither TPUCompilerParams "
+            "nor CompilerParams"
+        )
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -1,14 +1,41 @@
-"""Fused DS-Softmax serving kernel (the paper's inference hot-spot on TPU).
+"""Fused DS-Softmax serving kernel — per-token streaming variant (legacy).
 
 Per token: gather the chosen expert's packed rows HBM→VMEM in blocks via a
 *scalar-prefetch index map* (the expert id steers the BlockSpec — no
 materialized (B, V_pad, d) gather), MXU matmul per block, pad-mask, and an
-in-VMEM per-block top-k. A tiny host-side merge over (n_blocks·k)
-candidates yields the exact global top-k.
+in-VMEM per-block top-k. A host-side merge over the spilled
+``(B, n_blocks, k)`` candidates yields the exact global top-k.
 
-Why this shape: serving is memory-bound — the win is reading only
-``V_pad·d`` expert bytes per *expert* (tokens sharing an expert hit the
-same blocks) instead of ``N·d``, and never spilling logits to HBM.
+Kernel-path matrix for ``core.dssoftmax.serve_topk`` (B tokens, K experts,
+V_pad packed rows/expert, d features, wb weight bytes/elem):
+
+    path            engine   expert-row HBM reads   extra HBM traffic
+    --------------  -------  ---------------------  ----------------------------
+    jnp             XLA      B·V_pad·d·wb (/token)  (B,V_pad,d) gather material.
+    grouped         XLA      K·V_pad·d·wb (/expert) (K,C,V_pad) fp32 logit spill
+    pallas (this)   Pallas   B·V_pad·d·wb (/token)  (B,n_blocks,k) candidates
+                                                    + second XLA top_k merge
+    pallas_grouped  Pallas   K·V_pad·d·wb (/expert) none — top-k carried in
+                                                    VMEM, only O(B·k) outputs
+
+Roofline argument: serving is memory-bound, so bytes-per-expert beats
+bytes-per-token as soon as tokens share experts (B > K, i.e. any real
+batch). This per-token kernel still re-reads each expert block once per
+token and runs a ``(block_v, d)×(d, 1)`` mat*vec* (~1/128 MXU utilization);
+it remains the right shape only for tiny/latency-critical batches (B ≲ K,
+every token on a different expert) where the grouped dispatch pre-pass
+would be pure overhead. For everything else use ``pallas_grouped``
+(``dss_topk_grouped.py``): expert-grouped token blocks, weight-stationary
+``(block_b, d)×(d, block_v)`` MXU matmuls, running top-k in VMEM scratch.
+
+When each path wins:
+
+* ``jnp`` — debugging oracle, any backend; never fastest.
+* ``grouped`` — CPU/GPU serving via plain XLA; beats ``jnp`` wall-clock
+  once B ≫ K (measured in ``benchmarks/serve_topk.py``), pays a
+  (K,C,V_pad) logit spill the fused kernel avoids.
+* ``pallas`` — TPU, B ≲ K decode edge case.
+* ``pallas_grouped`` — TPU production serving default (ServeEngine).
 """
 from __future__ import annotations
 

@@ -5,16 +5,33 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dss_topk import dss_topk as _dss_topk_kernel
+from repro.kernels.dss_topk_grouped import dss_topk_grouped as _dss_topk_grouped_kernel
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gate_top1 import gate_top1
 from repro.kernels.lasso_prune import lasso_prune
 
 
 def dss_topk(weights, ids, h, expert_idx, g, k: int = 8, **kw):
-    """Serve-path fused top-k. Matches core.dssoftmax.serve_topk semantics:
-    the gate value is folded into h (z = g·(W h) = W·(g h))."""
+    """Serve-path fused top-k (per-token streaming kernel). Matches
+    core.dssoftmax.serve_topk semantics: the gate value is folded into h
+    (z = g·(W h) = W·(g h))."""
     h_scaled = (h.astype(jnp.float32) * g[:, None]).astype(h.dtype)
     return _dss_topk_kernel(weights, ids, h_scaled, expert_idx, k, **kw)
 
 
-__all__ = ["dss_topk", "flash_attention", "gate_top1", "lasso_prune"]
+def dss_topk_grouped(weights, ids, buf, g_buf, k: int = 8, **kw):
+    """Expert-grouped streaming serve top-k. ``buf`` (K, C, d) holds the
+    tokens already dispatched to their top-1 expert (core.dssoftmax builds
+    it with ``dispatch_indices``); ``g_buf`` (K, C) the fp32 gate value per
+    slot. Returns (vals, ids) in the grouped (K, C, k) layout — only O(B·k)
+    bytes reach HBM, with the top-k carried in VMEM across vocab blocks."""
+    return _dss_topk_grouped_kernel(weights, ids, buf, g_buf, k, **kw)
+
+
+__all__ = [
+    "dss_topk",
+    "dss_topk_grouped",
+    "flash_attention",
+    "gate_top1",
+    "lasso_prune",
+]

@@ -32,16 +32,38 @@ class Request:
 
 class ServeEngine:
     """Single-sequence-batch engine (batch = n_slots identical-length
-    decodes; prompts padded to a shared length)."""
+    decodes; prompts padded to a shared length).
 
-    def __init__(self, bundle: ModelBundle, params, ds_state, *, greedy: bool = True):
+    ``serve_kernel`` selects the DS-head retrieval path for prefill AND
+    decode ('jnp' | 'grouped' | 'pallas' | 'pallas_grouped'). Default
+    (``None``): the expert-grouped streaming Pallas kernel — the
+    weight-stationary production path (``repro.kernels.dss_topk_grouped``)
+    — on TPU; its XLA twin ``'grouped'`` elsewhere, where the Pallas
+    kernel would run in interpret mode (~25× slower than XLA on CPU).
+    Pass ``serve_kernel='pallas_grouped'`` explicitly to force the kernel
+    (e.g. to validate interpret-mode semantics off-TPU)."""
+
+    def __init__(self, bundle: ModelBundle, params, ds_state, *, greedy: bool = True,
+                 serve_kernel: Optional[str] = None):
+        if serve_kernel is None:
+            serve_kernel = (
+                "pallas_grouped" if jax.default_backend() == "tpu" else "grouped"
+            )
+        if bundle.cfg.head == "ds" and bundle.cfg.ds.serve_kernel != serve_kernel:
+            from repro.models.model_zoo import build
+
+            cfg = bundle.cfg.replace(
+                ds=bundle.cfg.ds.replace(serve_kernel=serve_kernel)
+            )
+            bundle = build(cfg)
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.params = params
         self.greedy = greedy
         if self.cfg.head == "ds":
             self.table = ds.pack_experts(params["head"], ds_state)
-            log.info("packed serve table: V_pad=%d", self.table.v_pad)
+            log.info("packed serve table: V_pad=%d kernel=%s",
+                     self.table.v_pad, self.cfg.ds.serve_kernel)
         else:
             self.table = ds_state
         self._prefill = jax.jit(lambda p, t, b: bundle.prefill(p, t, b))

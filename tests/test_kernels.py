@@ -69,3 +69,160 @@ def test_dss_topk_kernel_equals_serve_topk_path():
     v2, i2 = ds.serve_topk(params["gate"], table, h, k=5, kernel="pallas")
     assert np.array_equal(np.asarray(i1), np.asarray(i2))
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Expert-grouped streaming serving kernel (dss_topk_grouped)
+# ---------------------------------------------------------------------------
+
+def _grouped_fixture(dtype, K=4, d=32, n_classes=900, keep=0.5):
+    from repro.configs.base import DSSoftmaxConfig
+    from repro.core import dssoftmax as ds
+
+    cfg = DSSoftmaxConfig(num_experts=K)
+    params, state = ds.init(jax.random.PRNGKey(0), d, n_classes, cfg, dtype=dtype)
+    mask = jax.random.uniform(jax.random.PRNGKey(2), (K, n_classes)) < keep
+    state = ds.DSState(mask=mask)
+    return params, ds.pack_experts(params, state)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B", [16, 256])
+@pytest.mark.parametrize("k", [1, 8, 64])
+def test_dss_topk_grouped_matches_jnp_oracle(B, k, dtype):
+    """Ids exactly equal; values equal up to f32 accumulation-order ulps
+    (the oracle is a batched matvec, the kernel an MXU block matmul — both
+    accumulate in fp32 over the same d axis)."""
+    from repro.core import dssoftmax as ds
+
+    params, table = _grouped_fixture(dtype)
+    h = jax.random.normal(jax.random.PRNGKey(1), (B, 32)).astype(dtype)
+    v1, i1 = ds.serve_topk(params["gate"], table, h, k=k, kernel="jnp")
+    v2, i2 = ds.serve_topk(params["gate"], table, h, k=k, kernel="pallas_grouped")
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("kern", ["grouped", "pallas_grouped"])
+@pytest.mark.parametrize("cf", [1.0, 0.25])
+@pytest.mark.parametrize("B", [16, 256])
+def test_dss_topk_grouped_capacity_overflow_exact(B, cf, kern):
+    """Small capacity factors force real overflow (verified below) — the
+    chunked fallback must keep ALL overflowed tokens exact vs the oracle,
+    even when the overflow far exceeds one fixup chunk (cf=0.25 overflows
+    most of the batch)."""
+    from repro.core import dssoftmax as ds
+    from repro.core.dispatch import dispatch_indices
+    from repro.core.gating import top1_gate
+
+    K = 4
+    params, table = _grouped_fixture(jnp.float32, K=K)
+    h = jax.random.normal(jax.random.PRNGKey(1), (B, 32))
+    eidx, _, _ = top1_gate(params["gate"], h)
+    capacity = int(max(1, round(B / K * cf)))
+    _, valid = dispatch_indices(eidx, K, capacity)
+    n_over = int(np.sum(~np.asarray(valid)))
+    assert n_over > 0, "fixture must actually overflow"
+    v1, i1 = ds.serve_topk(params["gate"], table, h, k=8, kernel="jnp")
+    v2, i2 = ds.serve_topk(params["gate"], table, h, k=8, kernel=kern,
+                           capacity_factor=cf)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dss_topk_grouped_kernel_writes_only_bk_outputs(dtype):
+    """The kernel's HBM outputs are the grouped (K, C, k) values/ids —
+    O(B·k) total, one row per dispatched slot. No (B, n_blocks, k)
+    candidate buffer exists (the top-k carry lives in VMEM scratch)."""
+    from repro.kernels import ops as kops
+
+    K, v_pad, d, C, k = 4, 512, 32, 16, 8
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, v_pad, d)).astype(dtype)
+    ids = jnp.where(
+        jax.random.uniform(jax.random.PRNGKey(1), (K, v_pad)) < 0.8,
+        jax.random.randint(jax.random.PRNGKey(2), (K, v_pad), 0, 10 * v_pad), -1,
+    ).astype(jnp.int32)
+    buf = jax.random.normal(jax.random.PRNGKey(3), (K, C, d)).astype(dtype)
+    g_buf = jax.random.uniform(jax.random.PRNGKey(4), (K, C))
+    vals, idxs = kops.dss_topk_grouped(w, ids, buf, g_buf, k)
+    assert vals.shape == (K, C, k) and vals.dtype == jnp.float32
+    assert idxs.shape == (K, C, k) and idxs.dtype == jnp.int32
+    # oracle over the same grouped buffers
+    z = jnp.einsum("kcd,kvd->kcv", buf, w, preferred_element_type=jnp.float32)
+    z = z * g_buf[..., None]
+    z = jnp.where(ids[:, None, :] >= 0, z, -1e9)
+    v_ref, pos = jax.lax.top_k(z, k)
+    i_ref = jnp.take_along_axis(jnp.broadcast_to(ids[:, None, :], z.shape), pos, axis=2)
+    assert np.array_equal(np.asarray(idxs), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(v_ref), rtol=1e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("kern", ["grouped", "pallas_grouped"])
+def test_dss_topk_grouped_overflow_last_token_exact(kern):
+    """Regression: when the LAST token overflows and shares a fixup chunk
+    with sentinel padding, the clamped sentinel scatter used to clobber its
+    corrected result with the stale slot value (observed as one request
+    receiving another request's top-k in ServeEngine decode)."""
+    from repro.core import dssoftmax as ds
+    from repro.core.gating import top1_gate
+
+    K, d = 4, 32
+    params, table = _grouped_fixture(jnp.float32, K=K, d=d)
+    # Steer every token to expert 0: capacity=2 at B=8/cf=1 → 6 overflow
+    # tokens, and the fixup chunks contain sentinels clamping to row B-1.
+    params = dict(params)
+    params["gate"] = jnp.zeros_like(params["gate"]).at[0].set(1.0)
+    h = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (8, d))) + 0.1
+    eidx, _, _ = top1_gate(params["gate"], h)
+    assert np.all(np.asarray(eidx) == 0)
+    v1, i1 = ds.serve_topk(params["gate"], table, h, k=8, kernel="jnp")
+    v2, i2 = ds.serve_topk(params["gate"], table, h, k=8, kernel=kern,
+                           capacity_factor=1.0)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6, atol=2e-6)
+
+
+def test_dss_topk_grouped_non_multiple_v_pad_exact():
+    """Regression: v_pad that no block size divides (e.g. explicit
+    serve_pad=192) must be padded inside the kernel wrapper, not floored —
+    flooring n_vb would silently skip the trailing packed rows."""
+    from repro.configs.base import DSSoftmaxConfig
+    from repro.core import dssoftmax as ds
+
+    cfg = DSSoftmaxConfig(num_experts=4)
+    params, state = ds.init(jax.random.PRNGKey(0), 32, 180, cfg)
+    table = ds.pack_experts(params, state, pad=192)
+    assert table.v_pad == 192  # not a multiple of the 128-row block
+    h = jax.random.normal(jax.random.PRNGKey(1), (16, 32))
+    v1, i1 = ds.serve_topk(params["gate"], table, h, k=8, kernel="jnp")
+    v2, i2 = ds.serve_topk(params["gate"], table, h, k=8, kernel="pallas_grouped")
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6, atol=2e-6)
+
+
+def test_serve_topk_rejects_unknown_kernel():
+    from repro.core import dssoftmax as ds
+
+    params, table = _grouped_fixture(jnp.float32)
+    h = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    with pytest.raises(ValueError, match="unknown serve kernel"):
+        ds.serve_topk(params["gate"], table, h, k=4, kernel="palas_grouped")
+
+
+def test_dss_topk_grouped_all_pruned_expert():
+    """An expert whose packed rows are all padding must yield NEG_INF values
+    and id -1 (matching lax.top_k over a fully masked row)."""
+    from repro.kernels import ops as kops
+
+    K, v_pad, d, C, k = 2, 128, 16, 8, 4
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, v_pad, d))
+    ids = jnp.stack([
+        jnp.arange(v_pad, dtype=jnp.int32),
+        jnp.full((v_pad,), -1, jnp.int32),  # expert 1: everything pruned
+    ])
+    buf = jax.random.normal(jax.random.PRNGKey(1), (K, C, d))
+    g_buf = jnp.ones((K, C))
+    vals, idxs = kops.dss_topk_grouped(w, ids, buf, g_buf, k)
+    assert np.all(np.asarray(vals[1]) == -1e9)
+    assert np.all(np.asarray(idxs[1]) == -1)
