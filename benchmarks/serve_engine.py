@@ -1,0 +1,143 @@
+"""Engine-level serving throughput: ServeSession under an open-loop
+Poisson-ish arrival trace with mixed prompt lengths.
+
+Where ``benchmarks/serve_topk.py`` measures the head kernel in isolation,
+this drives the WHOLE serving stack — chunked prefill-into-slots,
+mid-flight slot admit/release, the single jitted masked decode step, and
+per-call-site kernel selection ('auto' policy) — the way traffic actually
+arrives: requests appear at exponential inter-arrival times (seeded, so
+the trace is reproducible), prompt lengths and ``max_new_tokens`` are
+drawn from mixed buckets, and the session decodes whatever is resident
+while new prompts stream in.
+
+Metrics written to ``BENCH_serve_engine.json``:
+
+* ``tokens_per_s``     — emitted tokens / wall time (steady-state decode
+                         throughput, CPU numbers in CI via BENCH_FAST).
+* ``p50_ms``/``p95_ms``— per-token latency: first token measured from
+                         request *arrival* (queueing + prefill included),
+                         subsequent tokens from the previous emission.
+* ``slot_reuse``       — admissions / slots (> 1 proves continuous
+                         batching actually recycled slots mid-flight).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import FAST
+from repro.configs import get_config, reduce_config
+from repro.models import build
+from repro.train import Request, SamplingParams, ServeSession
+
+
+def build_trace(rng, n_requests, rate, prompt_lens, max_new_choices, vocab):
+    """Reproducible open-loop arrival trace (seconds are virtual until the
+    driver maps them onto the wall clock)."""
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    reqs = []
+    for t in arrivals:
+        S = int(rng.choice(prompt_lens))
+        reqs.append((float(t), Request(
+            prompt=rng.randint(0, vocab, S).astype(np.int32),
+            sampling=SamplingParams(max_new_tokens=int(rng.choice(max_new_choices))),
+        )))
+    return reqs
+
+
+def main():
+    if FAST:
+        n_requests, n_slots, rate = 10, 2, 50.0
+        prompt_lens, max_new = (4, 7, 12), (3, 6)
+        vocab = 512
+    else:
+        n_requests, n_slots, rate = 64, 8, 20.0
+        prompt_lens, max_new = (8, 16, 31, 64), (8, 16)
+        vocab = 2048
+
+    cfg = reduce_config(get_config("qwen2-1.5b"), vocab=vocab)
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+
+    arrival_time: dict[int, float] = {}
+    last_emit: dict[int, float] = {}
+    latencies: list[float] = []
+    t0 = [0.0]
+
+    def on_token(req, token):
+        now = time.perf_counter() - t0[0]
+        rid = id(req)
+        start = last_emit.get(rid, arrival_time[rid])
+        latencies.append(now - start)
+        last_emit[rid] = now
+
+    session = ServeSession(
+        bundle, params, ds_state, n_slots=n_slots,
+        max_seq_len=max(prompt_lens) + max(max_new),
+        prefill_chunk=8,           # one compiled prefill for every length
+        stream_cb=on_token,
+    )
+    trace = build_trace(np.random.RandomState(0), n_requests, rate,
+                        prompt_lens, max_new, vocab)
+
+    # Warmup: compile prefill/decode outside the timed window.
+    warm = Request(prompt=np.zeros(prompt_lens[0], np.int32),
+                   sampling=SamplingParams(max_new_tokens=1))
+    arrival_time[id(warm)] = 0.0
+    session.run([warm])
+    latencies.clear()
+    last_emit.clear()
+    session.requests.clear()
+    base = dict(session.stats)  # exclude warmup from the reported counters
+
+    t0[0] = time.perf_counter()
+    pending = list(trace)
+    while pending or session.scheduler.has_work():
+        now = time.perf_counter() - t0[0]
+        while pending and pending[0][0] <= now:
+            at, req = pending.pop(0)
+            arrival_time[id(req)] = at
+            session.submit(req)
+        if not session.scheduler.has_work():
+            # idle: jump to the next arrival instead of spinning
+            time.sleep(max(0.0, pending[0][0] - now))
+            continue
+        session.step()
+    wall = time.perf_counter() - t0[0]
+
+    n_tok = sum(len(r.out_tokens) for r in session.requests)
+    lat_ms = np.asarray(latencies) * 1e3
+    results = {
+        "config": {
+            "n_requests": n_requests, "n_slots": n_slots, "rate_hz": rate,
+            "prompt_lens": prompt_lens, "max_new": max_new, "vocab": vocab,
+            "fast": FAST, "backend": jax.default_backend(),
+        },
+        "tokens": n_tok,
+        "wall_s": wall,
+        "tokens_per_s": n_tok / wall,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p95_ms": float(np.percentile(lat_ms, 95)),
+        "decode_steps": session.stats["n_steps"] - base["n_steps"],
+        "admits": session.stats["n_admitted"] - base["n_admitted"],
+        "slot_reuse": (session.stats["n_admitted"] - base["n_admitted"]) / n_slots,
+    }
+    assert all(r.done for r in session.requests)
+    assert results["admits"] == n_requests
+    print(f"# serve engine: {n_tok} tokens in {wall:.2f}s "
+          f"({results['tokens_per_s']:.1f} tok/s), "
+          f"p50={results['p50_ms']:.1f}ms p95={results['p95_ms']:.1f}ms, "
+          f"slot_reuse={results['slot_reuse']:.1f}x")
+    out_path = os.environ.get("BENCH_OUT", "BENCH_serve_engine.json")
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=1)
+    print(f"# wrote {out_path}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -13,13 +13,13 @@ configuration, and writes ``BENCH_serve_topk.json`` with per-path µs/call
 plus the bytes-moved roofline model so the perf trajectory is tracked
 across PRs.
 
-Bytes-moved model (hb/wb = bytes per activation/weight element):
-    jnp             B·V_pad·d·wb   (expert rows re-read once per TOKEN)
-    grouped         K·V_pad·d·wb + 2·K·C·V_pad·4   (rows once per EXPERT,
-                    but XLA spills the (K,C,V_pad) fp32 logits to HBM)
-    pallas          B·V_pad·d·wb + B·n_blocks·k·8  (candidate spill + merge)
-    pallas_grouped  K·V_pad·d·wb + K·C·(d·hb + k·8)  (rows once per expert,
-                    logits never leave VMEM, only O(B·k) outputs)
+Bytes-moved model: the per-path formulas live in the kernel-policy
+registry (``repro.kernels.registry`` — the same model ``AutoPolicy``
+minimizes at trace time); this sweep reads them from each path's
+``KernelSpec`` so the roofline column and the selection policy can never
+drift apart. Note the jnp path's model counts its (B, V_pad, d) gather
+materialization (spill + re-read ≈ 2× the weight bytes) — PR 1's sweep
+under-counted it.
 
 The Pallas paths run under interpret=True here (CPU container) — their
 wall-clock is NOT the TPU story; the bytes model is. The XLA ``grouped``
@@ -39,25 +39,19 @@ import numpy as np
 from benchmarks.common import FAST, bench_us
 from benchmarks.table4_latency import build_ds_like
 from repro.core import dssoftmax as ds
+from repro.kernels.registry import KernelContext, get_spec, kernel_names
 
-PATHS = ("jnp", "grouped", "pallas", "pallas_grouped")
+PATHS = kernel_names()  # every registered serve path
 
 
 def bytes_moved(path: str, *, B: int, K: int, v_pad: int, d: int, k: int,
-                capacity: int, wbytes: int, hbytes: int = 4) -> int:
-    out = B * k * 8  # fp32 values + int32 ids
-    if path == "jnp":
-        return B * v_pad * d * wbytes + B * d * hbytes + out
-    if path == "grouped":
-        return (K * v_pad * d * wbytes + K * capacity * d * hbytes
-                + 2 * K * capacity * v_pad * 4 + out)
-    if path == "pallas":
-        n_blocks = max(1, v_pad // 128)
-        return B * v_pad * d * wbytes + B * d * hbytes + B * n_blocks * k * 8 + out
-    if path == "pallas_grouped":
-        return (K * v_pad * d * wbytes + K * capacity * d * hbytes
-                + K * capacity * k * 8 + out)
-    raise ValueError(path)
+                wbytes: int, hbytes: int = 4,
+                capacity_factor: float = 2.0) -> int:
+    """The registry's roofline model for one path at these shapes."""
+    ctx = KernelContext(B=B, d=d, K=K, v_pad=v_pad, k=k,
+                        capacity_factor=capacity_factor,
+                        wbytes=wbytes, hbytes=hbytes)
+    return get_spec(path).bytes_moved(ctx)
 
 
 def main():
@@ -81,7 +75,6 @@ def main():
     print("path,B,k,us_per_call,bytes_moved_model,exact_ids")
     for B in b_list:
         h = jax.random.normal(jax.random.PRNGKey(1), (B, d)).astype(jnp.float32)
-        capacity = int(max(1, round(B / K * 2.0)))
         iters = 3 if B >= 2048 else 10
         for k in k_list:
             oracle = jax.jit(lambda hh: ds.serve_topk(
@@ -89,7 +82,7 @@ def main():
             v_ref, i_ref = oracle(h)
             for path in PATHS:
                 nbytes = bytes_moved(path, B=B, K=K, v_pad=v_pad, d=d, k=k,
-                                     capacity=capacity, wbytes=wbytes)
+                                     wbytes=wbytes)
                 if path == "pallas" and B > 256:
                     # interpret-mode grid is (B, n_blocks) — prohibitive on
                     # CPU; the bytes model is still logged for the roofline.

@@ -26,12 +26,20 @@ class DSSoftmaxConfig:
     # Serving: padded active-set size per expert (static shape for TPU).
     # None => derived as max_k |v_k| rounded up to a multiple of 128.
     serve_pad: Optional[int] = None
-    # serve compute path: 'jnp' (per-token gather — paper-faithful baseline),
-    # 'grouped' (expert-batched weight-stationary XLA — beyond-paper),
+    # serve compute path: a kernel name registered in
+    # repro.kernels.registry — 'jnp' (per-token gather — paper-faithful
+    # baseline/oracle), 'grouped' (expert-batched weight-stationary XLA),
     # 'pallas' (legacy per-token streaming kernel), 'pallas_grouped'
-    # (expert-grouped streaming kernel with in-VMEM top-k carry — the
-    # production serving default in train.serve.ServeEngine)
-    serve_kernel: str = "jnp"
+    # (expert-grouped streaming kernel with in-VMEM top-k carry) — or a
+    # policy name. The default 'auto' resolves per call site from static
+    # shapes: cheapest feasible path by the registry's bytes-moved model,
+    # so prefill (large B) and decode (B = n_slots) may use different
+    # kernels inside one engine.
+    serve_kernel: str = "auto"
+    # Grouped serve paths: per-expert capacity = B/K * capacity_factor;
+    # tokens overflowing it fall back to the exact gather path, so this
+    # tunes overflow-fallback frequency (cost), never correctness.
+    capacity_factor: float = 2.0
     # Mitosis
     mitosis_start_experts: int = 2
     mitosis_noise: float = 1e-2

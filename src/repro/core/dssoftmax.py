@@ -28,10 +28,11 @@ rows are literally zero) or are excluded via ``-inf`` in ``'neg_inf'``
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import DSSoftmaxConfig
 from repro.core import losses as L
@@ -375,6 +376,10 @@ def _round_up(x: int, m: int = 128) -> int:
 def pack_experts(params, state: DSState, pad: Optional[int] = None) -> ServeTable:
     """Compact each expert's surviving rows into a padded static table.
 
+    ``pad`` must cover the largest expert (``pad >= max_k |v_k|``) —
+    a smaller pad would silently drop surviving classes from serving, so
+    it raises instead.
+
     NOTE: sizes come from the concrete mask, so this runs outside jit
     (it is a one-off packing step after training / checkpoint load).
     """
@@ -382,16 +387,43 @@ def pack_experts(params, state: DSState, pad: Optional[int] = None) -> ServeTabl
     w = jax.device_get(params["experts"])
     K, N, d = w.shape
     sizes = mask.sum(axis=1)
-    v_pad = int(pad) if pad else _round_up(max(1, int(sizes.max())))
-    import numpy as np
+    max_size = int(sizes.max())
+    if pad is not None and int(pad) < max_size:
+        raise ValueError(
+            f"pack_experts pad={int(pad)} is smaller than the largest "
+            f"expert's surviving-class count {max_size}; packing would "
+            "silently truncate surviving rows"
+        )
+    v_pad = int(pad) if pad else _round_up(max(1, max_size))
 
     ids = np.full((K, v_pad), -1, np.int32)
     weights = np.zeros((K, v_pad, d), w.dtype)
     for k in range(K):
-        idx = np.nonzero(mask[k])[0][:v_pad]
+        idx = np.nonzero(mask[k])[0]
         ids[k, : len(idx)] = idx
         weights[k, : len(idx)] = w[k, idx]
     return ServeTable(ids=jnp.asarray(ids), weights=jnp.asarray(weights))
+
+
+def serve_kernel_context(
+    table: ServeTable, h: jax.Array, k: int, capacity_factor: float = 2.0,
+):
+    """Static-shape :class:`~repro.kernels.registry.KernelContext` for one
+    ``serve_topk`` call site (shapes are trace-time constants, so policies
+    resolve per distinct call-site shape — prefill vs decode differ)."""
+    from repro.kernels.registry import KernelContext
+
+    return KernelContext(
+        B=h.shape[0],
+        d=h.shape[1],
+        K=table.ids.shape[0],
+        v_pad=table.ids.shape[1],
+        k=k,
+        backend=jax.default_backend(),
+        capacity_factor=capacity_factor,
+        wbytes=jnp.dtype(table.weights.dtype).itemsize,
+        hbytes=jnp.dtype(h.dtype).itemsize,
+    )
 
 
 def serve_topk(
@@ -400,10 +432,14 @@ def serve_topk(
     h: jax.Array,
     k: int,
     *,
-    kernel: str = "jnp",
+    kernel: Union[str, "KernelPolicy"] = "jnp",  # noqa: F821
     capacity_factor: float = 2.0,
 ) -> tuple[jax.Array, jax.Array]:
     """Top-k class retrieval (paper inference). h: (B, d) → values/ids (B, k).
+
+    ``kernel`` is a registered kernel name, a policy name, or a
+    ``repro.kernels.registry.KernelPolicy`` resolved **per call site**
+    from the static shapes (B, K, V_pad, d, k) and backend:
 
     kernel='jnp'     — per-token gather + matmul in plain jnp (the oracle;
                        XLA materializes the (B, V_pad, d) gather).
@@ -416,9 +452,20 @@ def serve_topk(
                        grouped dispatch feeds (block_b, d)×(d, block_v) MXU
                        matmuls with a running top-k carried in VMEM; only
                        O(B·k) values/ids reach HBM. Production serving path.
+    kernel='auto'    — ``AutoPolicy``: cheapest feasible path by the
+                       registry's bytes-moved model (per-token at B ≲ K,
+                       grouped at B ≫ K; Pallas paths only on TPU).
+
+    Unknown names raise ValueError. ``capacity_factor`` sizes the grouped
+    paths' per-expert buffers (overflow falls back exactly); propagate
+    ``DSSoftmaxConfig.capacity_factor`` from model call sites.
     """
     from repro.distributed.hints import BATCH, constrain, constrain_batch
+    from repro.kernels.registry import resolve_kernel
 
+    kernel = resolve_kernel(
+        kernel, serve_kernel_context(table, h, k, capacity_factor)
+    )
     h = constrain_batch(h)
     expert_idx, g, _ = top1_gate(gate_w, h)
     if kernel == "pallas":
@@ -431,9 +478,8 @@ def serve_topk(
             capacity_factor=capacity_factor, use_pallas=kernel == "pallas_grouped",
         )
     if kernel != "jnp":
-        raise ValueError(
-            f"unknown serve kernel {kernel!r} "
-            "(expected 'jnp' | 'grouped' | 'pallas' | 'pallas_grouped')"
+        raise NotImplementedError(
+            f"registered serve kernel {kernel!r} has no dispatch branch"
         )
     w_sel = constrain(table.weights[expert_idx], BATCH, "model", None)  # (B,V_pad,d)
     ids_sel = constrain(table.ids[expert_idx], BATCH, "model")  # (B, V_pad)

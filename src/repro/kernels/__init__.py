@@ -4,19 +4,34 @@ Each kernel ships with a pure-jnp oracle in ``ref.py``; tests sweep
 shapes/dtypes in ``interpret=True`` mode (this container is CPU-only — TPU
 is the compile target, the interpreter validates semantics).
 """
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, registry
 from repro.kernels.dss_topk import dss_topk
 from repro.kernels.dss_topk_grouped import dss_topk_grouped
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gate_top1 import gate_top1
 from repro.kernels.lasso_prune import lasso_prune
+from repro.kernels.registry import (
+    AutoPolicy,
+    FixedPolicy,
+    KernelContext,
+    KernelPolicy,
+    KernelSpec,
+    kernel_names,
+)
 
 __all__ = [
     "ops",
     "ref",
+    "registry",
     "dss_topk",
     "dss_topk_grouped",
     "flash_attention",
     "gate_top1",
     "lasso_prune",
+    "AutoPolicy",
+    "FixedPolicy",
+    "KernelContext",
+    "KernelPolicy",
+    "KernelSpec",
+    "kernel_names",
 ]

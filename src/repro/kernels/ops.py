@@ -1,4 +1,12 @@
-"""Jit'd public wrappers over the Pallas kernels (the API models call)."""
+"""Jit'd public wrappers over the Pallas kernels (the API models call).
+
+Serve-path selection does not import these wrappers directly: the serve
+kernels (including the two Pallas paths here) are described by
+``KernelSpec`` entries in ``repro.kernels.registry`` — capabilities,
+backend support, and the bytes-moved cost model that ``AutoPolicy`` uses
+to pick a path per call site. ``core.dssoftmax.serve_topk`` resolves the
+name through that registry and only then dispatches into these wrappers.
+"""
 from __future__ import annotations
 
 import jax

@@ -1,0 +1,248 @@
+"""Declarative kernel-policy registry for the serving top-k hot path.
+
+Every ``serve_topk`` compute path registers a :class:`KernelSpec` —
+capabilities (grouped dispatch? Pallas?), backend support, and a
+bytes-moved cost model lifted from the PR 1 roofline — and kernel
+selection becomes a first-class, testable object instead of a raw string
+fixed at engine init:
+
+* ``serve_topk(kernel="grouped")`` — a registered name, validated here
+  (unknown names raise, same message as before the registry existed).
+* ``serve_topk(kernel="auto")`` / ``kernel=AutoPolicy()`` — resolved
+  **per call site** from the static shapes (B, K, V_pad, d, k, dtype
+  bytes) and the runtime backend: the cheapest *feasible* path wins.
+  Prefill (large B) and decode (B = n_slots) inside one engine therefore
+  resolve to different kernels — the ROADMAP's batch-size-aware
+  selection open item.
+* ``serve_topk(kernel=MyPolicy())`` — any object with a
+  ``resolve(ctx) -> str`` method; the returned name is validated.
+
+The cost model is *bytes moved* because serving is memory-bound (see
+``benchmarks/serve_topk.py``, which reuses these exact formulas for its
+roofline column): per-token paths re-read the packed expert rows once per
+TOKEN, grouped paths once per EXPERT, so the grouped paths win as soon as
+B ≫ K and lose (dispatch + K-row overhead) when B ≲ K. The crossover sits
+near B ≈ K/2: the per-token ``jnp`` path pays its (B, V_pad, d) gather
+materialization twice (spill + re-read), the grouped paths pay the full
+K·V_pad·d table plus their per-slot spill. Pallas paths are only feasible
+on TPU — elsewhere they lower through the interpreter (~25× slower than
+XLA), so :class:`AutoPolicy` never selects them off-TPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+__all__ = [
+    "KernelContext",
+    "KernelSpec",
+    "KernelPolicy",
+    "FixedPolicy",
+    "AutoPolicy",
+    "register_kernel",
+    "get_spec",
+    "kernel_names",
+    "resolve_kernel",
+]
+
+
+@dataclass(frozen=True)
+class KernelContext:
+    """Static call-site shapes for kernel selection (all trace-time ints).
+
+    ``wbytes``/``hbytes`` are the per-element sizes of the packed expert
+    weights and the hidden states (bf16 serving => 2/2, fp32 oracle =>
+    4/4); ``backend`` is ``jax.default_backend()`` at trace time.
+    """
+
+    B: int                    # tokens in this serve_topk call
+    d: int                    # hidden size
+    K: int                    # experts
+    v_pad: int                # padded active rows per expert
+    k: int = 8                # top-k width
+    backend: str = "cpu"      # 'cpu' | 'gpu' | 'tpu'
+    capacity_factor: float = 2.0
+    wbytes: int = 4
+    hbytes: int = 4
+
+    @property
+    def capacity(self) -> int:
+        """Per-expert slot count of the grouped dispatch (mirrors
+        ``core.dssoftmax._serve_topk_grouped``)."""
+        return int(max(1, round(self.B / self.K * self.capacity_factor)))
+
+    @property
+    def out_bytes(self) -> int:
+        """fp32 values + int32 ids reaching HBM — every path pays this."""
+        return self.B * self.k * 8
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    """One registered serve path: capabilities + bytes-moved cost model."""
+
+    name: str
+    description: str
+    cost: Callable[[KernelContext], int] = field(compare=False)
+    grouped: bool = False          # uses the expert-grouped dispatch pre-pass
+    pallas: bool = False           # fused Pallas kernel (vs XLA lowering)
+    backends: Optional[Tuple[str, ...]] = None  # None => native everywhere
+
+    def supports(self, backend: str) -> bool:
+        return self.backends is None or backend in self.backends
+
+    def bytes_moved(self, ctx: KernelContext) -> int:
+        """HBM bytes the path moves for one call at ``ctx``'s shapes."""
+        return int(self.cost(ctx))
+
+
+_REGISTRY: dict[str, KernelSpec] = {}
+
+
+def register_kernel(spec: KernelSpec) -> KernelSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"serve kernel {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def kernel_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_spec(name: str) -> KernelSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown serve kernel {name!r} "
+            f"(expected one of {' | '.join(map(repr, _REGISTRY))}, "
+            "a policy name like 'auto', or a KernelPolicy)"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+class KernelPolicy:
+    """Resolves a kernel name from call-site static shapes (trace time)."""
+
+    def resolve(self, ctx: KernelContext) -> str:
+        raise NotImplementedError
+
+
+class FixedPolicy(KernelPolicy):
+    """Always the same (validated) kernel — a string with a type."""
+
+    def __init__(self, name: str):
+        self.name = get_spec(name).name
+
+    def resolve(self, ctx: KernelContext) -> str:
+        return self.name
+
+
+class AutoPolicy(KernelPolicy):
+    """Cheapest feasible path by the bytes-moved model.
+
+    Feasible = the spec supports ``ctx.backend`` natively (Pallas paths
+    are TPU-only; XLA paths run everywhere). Pass ``history=[]`` to record
+    ``(B, chosen)`` per *resolution* — i.e. once per jit trace, which is
+    exactly once per distinct call-site shape.
+    """
+
+    def __init__(self, history: Optional[List[Tuple[int, str]]] = None):
+        self.history = history
+
+    def resolve(self, ctx: KernelContext) -> str:
+        feasible = [s for s in _REGISTRY.values() if s.supports(ctx.backend)]
+        if not feasible:
+            raise ValueError(f"no serve kernel supports backend {ctx.backend!r}")
+        best = min(feasible, key=lambda s: (s.bytes_moved(ctx), s.name))
+        if self.history is not None:
+            self.history.append((ctx.B, best.name))
+        return best.name
+
+
+_POLICIES: dict[str, KernelPolicy] = {}
+
+
+def resolve_kernel(kernel, ctx: KernelContext) -> str:
+    """str | KernelPolicy → validated registered kernel name.
+
+    Strings naming a policy ('auto') resolve through it; strings naming a
+    registered kernel pass through; anything else raises the familiar
+    ``unknown serve kernel`` ValueError.
+    """
+    if isinstance(kernel, KernelPolicy):
+        return get_spec(kernel.resolve(ctx)).name
+    if isinstance(kernel, str):
+        if kernel in _POLICIES:
+            return get_spec(_POLICIES[kernel].resolve(ctx)).name
+        return get_spec(kernel).name
+    raise TypeError(
+        f"kernel must be a registered name, policy name, or KernelPolicy; "
+        f"got {type(kernel).__name__}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# The four serve paths (cost formulas shared with benchmarks/serve_topk.py).
+# wb/hb = weight/hidden bytes; every formula ends with the O(B·k) outputs.
+# ---------------------------------------------------------------------------
+
+def _cost_jnp(c: KernelContext) -> int:
+    # Expert rows re-read once per TOKEN, *plus* the (B, V_pad, d) gather
+    # XLA materializes in HBM before the matvec (write + re-read ≈ 2×).
+    return 2 * c.B * c.v_pad * c.d * c.wbytes + c.B * c.d * c.hbytes + c.out_bytes
+
+
+def _cost_grouped(c: KernelContext) -> int:
+    # Rows once per EXPERT + dispatch buffers, but XLA spills the
+    # (K, C, V_pad) fp32 logits to HBM (write + read for the top-k).
+    return (c.K * c.v_pad * c.d * c.wbytes + c.K * c.capacity * c.d * c.hbytes
+            + 2 * c.K * c.capacity * c.v_pad * 4 + c.out_bytes)
+
+
+def _cost_pallas(c: KernelContext) -> int:
+    # Streams rows per token (no gather spill) but spills per-block top-k
+    # candidates and re-merges.
+    n_blocks = max(1, c.v_pad // 128)
+    return (c.B * c.v_pad * c.d * c.wbytes + c.B * c.d * c.hbytes
+            + c.B * n_blocks * c.k * 8 + c.out_bytes)
+
+
+def _cost_pallas_grouped(c: KernelContext) -> int:
+    # Rows once per expert, logits + running top-k never leave VMEM.
+    return (c.K * c.v_pad * c.d * c.wbytes + c.K * c.capacity * c.d * c.hbytes
+            + c.K * c.capacity * c.k * 8 + c.out_bytes)
+
+
+register_kernel(KernelSpec(
+    name="jnp",
+    description="per-token gather + matvec in plain jnp (oracle/debug)",
+    cost=_cost_jnp,
+))
+register_kernel(KernelSpec(
+    name="grouped",
+    description="expert-batched weight-stationary XLA matmul",
+    cost=_cost_grouped,
+    grouped=True,
+))
+register_kernel(KernelSpec(
+    name="pallas",
+    description="legacy per-token streaming Pallas kernel",
+    cost=_cost_pallas,
+    pallas=True,
+    backends=("tpu",),
+))
+register_kernel(KernelSpec(
+    name="pallas_grouped",
+    description="expert-grouped streaming Pallas kernel, in-VMEM top-k carry",
+    cost=_cost_pallas_grouped,
+    grouped=True,
+    pallas=True,
+    backends=("tpu",),
+))
+
+_POLICIES["auto"] = AutoPolicy()

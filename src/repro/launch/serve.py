@@ -1,4 +1,9 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id> [--reduced]``."""
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [--reduced]``.
+
+Drives a continuous-batching :class:`~repro.train.ServeSession`: more
+requests than ``--slots`` exercises mid-flight slot reuse (finished
+requests free their slot, queued prompts prefill into it).
+"""
 import argparse
 import time
 
@@ -7,16 +12,19 @@ import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.models import build
-from repro.train import Request, ServeEngine
+from repro.train import Request, SamplingParams, ServeSession
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8, help="number of requests")
+    ap.add_argument("--slots", type=int, default=4, help="decode slots")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--kernel", default=None,
+                    help="serve kernel/policy name (default: cfg 'auto')")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -24,15 +32,24 @@ def main():
         cfg = reduce_config(cfg)
     bundle = build(cfg)
     params, ds_state = bundle.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(bundle, params, ds_state)
+    session = ServeSession(
+        bundle, params, ds_state,
+        n_slots=min(args.slots, args.batch),
+        max_seq_len=args.prompt_len + args.new_tokens,
+        kernel=args.kernel,
+    )
     rng = np.random.RandomState(0)
-    reqs = [Request(prompt=rng.randint(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.new_tokens) for _ in range(args.batch)]
+    reqs = [
+        Request(prompt=rng.randint(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+                sampling=SamplingParams(max_new_tokens=args.new_tokens))
+        for _ in range(args.batch)
+    ]
     t0 = time.time()
-    out = engine.generate(reqs)
+    out = session.run(reqs)
     dt = time.time() - t0
     n = sum(len(r.out_tokens) for r in out)
-    print(f"{n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+    print(f"{n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s; "
+          f"{session.stats['n_admitted']} admits over {session.n_slots} slots)")
 
 
 if __name__ == "__main__":

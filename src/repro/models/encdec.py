@@ -143,7 +143,8 @@ def train_loss(params, ds_state, cfg: ModelConfig, batch):
     return ce + aux["head_aux_total"], {"ce": ce, **aux}
 
 
-def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8):
+def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
+            kernel=None):
     memory = encode(params, cfg, batch["frames"].astype(cfg.jdtype))
     tokens = batch["tokens"]
     h, (sk, sv) = _decoder_hidden(params, cfg, tokens, memory)
@@ -159,15 +160,21 @@ def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8):
     cks, cvs = jax.vmap(cross_kv)(params["dec_layers"])
     vals, ids = heads.head_topk(
         params["head"], ds_state_or_table, cfg, h[:, -1], k,
-        embed_table=params["embed"]["table"],
+        embed_table=params["embed"]["table"], kernel=kernel,
     )
     return vals, ids, EncDecCache(self_k=sk, self_v=sv, cross_k=cks, cross_v=cvs)
 
 
-def decode_step(params, serve_table, cfg: ModelConfig, cache: EncDecCache, token, pos, k: int = 8):
-    x = embed(params["embed"], token)[:, None, :] + jax.lax.dynamic_slice_in_dim(
-        params["pos_embed"], pos, 1, axis=0
-    )[None]
+def decode_step(params, serve_table, cfg: ModelConfig, cache: EncDecCache, token, pos, k: int = 8,
+                kernel=None):
+    """pos: scalar shared position or (B,) per-slot positions (learned
+    absolute position embeddings are gathered per row in the vector case)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 1:
+        pe = jnp.take(params["pos_embed"], pos, axis=0)[:, None]  # (B,1,d)
+    else:
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, axis=0)[None]
+    x = embed(params["embed"], token)[:, None, :] + pe
 
     def body(carry, scanned):
         xc = carry
@@ -194,6 +201,7 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: EncDecCache, token
     )
     h = layernorm(params["dec_norm"], xf)[:, 0]
     vals, ids = heads.head_topk(
-        params["head"], serve_table, cfg, h, k, embed_table=params["embed"]["table"]
+        params["head"], serve_table, cfg, h, k,
+        embed_table=params["embed"]["table"], kernel=kernel,
     )
     return vals, ids, EncDecCache(self_k=nk, self_v=nv, cross_k=cache.cross_k, cross_v=cache.cross_v)

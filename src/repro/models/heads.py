@@ -112,12 +112,20 @@ def head_topk(
     h: jax.Array,
     k: int,
     embed_table: Optional[jax.Array] = None,
-    kernel: str = "jnp",
+    kernel=None,
 ):
-    """Top-k classes from hidden states h (B, d) → (values, ids) (B, k)."""
+    """Top-k classes from hidden states h (B, d) → (values, ids) (B, k).
+
+    ``kernel`` (a registered name, policy name, or KernelPolicy) overrides
+    ``cfg.ds.serve_kernel``; ``None`` uses the config value ('auto' by
+    default — per-call-site selection from static shapes).
+    """
     if cfg.head == "ds":
-        kern = kernel if kernel != "jnp" else cfg.ds.serve_kernel
-        return ds.serve_topk(head_params["gate"], serve_table, h, k, kernel=kern)
+        kern = kernel if kernel is not None else cfg.ds.serve_kernel
+        return ds.serve_topk(
+            head_params["gate"], serve_table, h, k, kernel=kern,
+            capacity_factor=cfg.ds.capacity_factor,
+        )
     w = embed_table if cfg.tie_embeddings else head_params["unembed"]
     z = jnp.einsum("bd,nd->bn", h.astype(jnp.float32), w.astype(jnp.float32))
     if w.shape[0] > cfg.vocab_size:  # mask TP-padding classes

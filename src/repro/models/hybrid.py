@@ -152,7 +152,8 @@ def train_loss(params, ds_state, cfg: ModelConfig, batch):
     return total, {"ce": ce, **aux}
 
 
-def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8):
+def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
+            kernel=None):
     tokens = batch["tokens"]
     B, S = tokens.shape
     x = embed(params["embed"], tokens)
@@ -160,12 +161,16 @@ def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8):
     h, cache = forward_hidden(params, cfg, x, positions, collect_state=True)
     vals, ids = heads.head_topk(
         params["head"], ds_state_or_table, cfg, h[:, -1], k,
-        embed_table=params["embed"]["table"],
+        embed_table=params["embed"]["table"], kernel=kernel,
     )
     return vals, ids, cache
 
 
-def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token, pos, k: int = 8):
+def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token, pos, k: int = 8,
+                kernel=None):
+    """pos: scalar shared position or (B,) per-slot positions (the SSM/conv
+    state update is position-free; only the periodic attention blocks and
+    rope consume it)."""
     x = embed(params["embed"], token)[:, None, :]
     n_groups, rem = _layout(cfg)
     p = cfg.attn_period if cfg.family == "hybrid" else cfg.n_layers
@@ -200,7 +205,8 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token
             new_av.append(nv)
     h = rmsnorm(params["final_norm"], x_cur)[:, 0]
     vals, ids = heads.head_topk(
-        params["head"], serve_table, cfg, h, k, embed_table=params["embed"]["table"]
+        params["head"], serve_table, cfg, h, k,
+        embed_table=params["embed"]["table"], kernel=kernel,
     )
     if new_ak:
         ak, av = jnp.stack(new_ak), jnp.stack(new_av)

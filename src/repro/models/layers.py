@@ -234,14 +234,24 @@ def attention_block(params, cfg: ModelConfig, x: jax.Array, positions, *, causal
 def attention_decode(params, cfg: ModelConfig, x, cache_k, cache_v, pos):
     """One-token decode against a (B, S_cache, KV, dh) cache.
 
-    x: (B, 1, d); pos: scalar int (current position; cache rows >= pos are
-    masked out). Returns (out (B,1,d), new_k, new_v) with the caches updated
-    in place at ``pos``.
+    x: (B, 1, d); pos: scalar int (one shared position; cache rows > pos
+    are masked out) or a (B,) int32 vector of **per-row** positions — the
+    continuous-batching case where every slot decodes at its own sequence
+    length. Returns (out (B,1,d), new_k, new_v) with the caches updated in
+    place at ``pos`` (row b at ``pos[b]`` for the vector form).
     """
     B = x.shape[0]
-    q, k_new, v_new = _project_qkv(params, cfg, x, jnp.full((B, 1), pos))
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+    pos = jnp.asarray(pos)
+    per_row = pos.ndim == 1
+    pos_b = pos if per_row else jnp.full((B,), pos)  # (B,)
+    q, k_new, v_new = _project_qkv(params, cfg, x, pos_b[:, None])
+    if per_row:
+        rows = jnp.arange(B)
+        cache_k = cache_k.at[rows, pos_b].set(k_new[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, pos_b].set(v_new[:, 0].astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
     from repro.distributed.hints import BATCH, constrain
 
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -254,13 +264,54 @@ def attention_decode(params, cfg: ModelConfig, x, cache_k, cache_v, pos):
         "bkgd,bckd->bkgc", qg, cache_k, preferred_element_type=jnp.float32
     ) / math.sqrt(dh)
     s = constrain(s, BATCH, None, None, "model")
-    valid = jnp.arange(S)[None, None, None, :] <= pos
+    valid = jnp.arange(S)[None, None, None, :] <= pos_b[:, None, None, None]
     s = jnp.where(valid, s, -1e9)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgc,bckd->bkgd", p.astype(cache_v.dtype), cache_v,
                    preferred_element_type=jnp.float32)
     out = jnp.einsum("be,ed->bd", o.reshape(B, H * dh).astype(x.dtype), params["wo"])
     return out[:, None, :], cache_k, cache_v
+
+
+def attention_prefill_chunk(params, cfg: ModelConfig, x, cache_k, cache_v, pos0):
+    """Cache-context chunked prefill: C new tokens against a partially
+    filled (B, S_max, KV, dh) cache.
+
+    x: (B, C, d) chunk embeddings at positions ``pos0 .. pos0+C-1``
+    (scalar ``pos0`` shared across B — one slot is prefilled at a time).
+    K/V are written into the cache and each query attends causally to
+    every cache position ≤ its own, so running a prompt through
+    consecutive chunks is mathematically identical to one full-prompt
+    prefill (masked positions contribute exact zeros to the softmax).
+    Padding rows at the chunk tail write K/V at positions that stay
+    masked until a later real token overwrites them.
+    """
+    from repro.distributed.hints import BATCH, constrain
+
+    B, C, _ = x.shape
+    positions = jnp.broadcast_to(pos0 + jnp.arange(C)[None, :], (B, C))
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), pos0, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), pos0, axis=1)
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    S = cache_k.shape[1]
+    k = jnp.repeat(cache_k, G, axis=2) if G > 1 else cache_k
+    v = jnp.repeat(cache_v, G, axis=2) if G > 1 else cache_v
+    # Same einsum/dtype conventions as full_attention so chunked prefill is
+    # bit-identical to the whole-prompt path row-for-row.
+    s = jnp.einsum("bqhd,bchd->bqhc", q, k,
+                   preferred_element_type=jnp.float32) * (1.0 / math.sqrt(dh))
+    s = constrain(s, BATCH, None, "model", None)
+    valid = (pos0 + jnp.arange(C))[:, None] >= jnp.arange(S)[None, :]  # (C, S)
+    s = jnp.where(valid[None, :, None, :], s, -1e9)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhc,bchd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, C, -1), params["wo"])
+    return out, cache_k, cache_v
 
 
 def cross_attention_block(params, cfg: ModelConfig, x, memory):

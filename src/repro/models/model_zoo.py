@@ -25,6 +25,11 @@ class ModelBundle:
     train_loss: Callable[..., Any]
     prefill: Callable[..., Any]
     decode_step: Callable[..., Any]
+    # Chunked prefill into an existing decode cache (continuous batching:
+    # one compile serves every prompt length). None where the family has
+    # no cache-context prefill implementation (ssm/hybrid/encdec fall back
+    # to whole-prompt prefill in the serving scheduler).
+    prefill_chunk: Optional[Callable[..., Any]] = None
 
     def abstract_params(self):
         return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
@@ -43,14 +48,28 @@ def build(cfg: ModelConfig) -> ModelBundle:
         init = lambda key: encdec.init_params(key, cfg, max_target_len=MAX_TARGET_LEN)
     else:
         raise ValueError(f"unknown family {fam!r}")
+    # ``kernel`` (None | registered name | policy name | KernelPolicy)
+    # overrides the DS head's serve path per call; policies resolve from
+    # each call site's static shapes, so prefill and decode may lower to
+    # different kernels inside one engine.
+    chunk = None
+    if fam in ("dense", "moe", "vlm"):
+        chunk = lambda p, t, cache, tokens, pos0, n_valid, k=8, kernel=None: (
+            transformer.prefill_chunk(
+                p, t, cfg, cache, tokens, pos0, n_valid, k=k, kernel=kernel
+            )
+        )
     return ModelBundle(
         cfg=cfg,
         init=init,
         train_loss=lambda p, s, batch: mod.train_loss(p, s, cfg, batch),
-        prefill=lambda p, t, batch, k=8: mod.prefill(p, t, cfg, batch, k=k),
-        decode_step=lambda p, t, cache, tok, pos, k=8: mod.decode_step(
-            p, t, cfg, cache, tok, pos, k=k
+        prefill=lambda p, t, batch, k=8, kernel=None: mod.prefill(
+            p, t, cfg, batch, k=k, kernel=kernel
         ),
+        decode_step=lambda p, t, cache, tok, pos, k=8, kernel=None: mod.decode_step(
+            p, t, cfg, cache, tok, pos, k=k, kernel=kernel
+        ),
+        prefill_chunk=chunk,
     )
 
 
@@ -108,6 +127,20 @@ def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
         kv = jax.ShapeDtypeStruct((L, B, S, cfg.n_kv_heads, cfg.hd), cfg.jdtype)
         ckv = jax.ShapeDtypeStruct((L, B, F, cfg.n_kv_heads, cfg.hd), cfg.jdtype)
         return encdec.EncDecCache(self_k=kv, self_v=kv, cross_k=ckv, cross_v=ckv)
+    raise ValueError(cfg.family)
+
+
+def cache_seq_axes(cfg: ModelConfig):
+    """Per-leaf *sequence* axis of a decode cache (-1 = position-free
+    state, fully replaced on slot admission). Batch axis is 1 for every
+    family's cache leaves — the serving scheduler uses this map to insert
+    a freshly prefilled request into its slot of the shared cache."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.DecodeCache(k=2, v=2)
+    if cfg.family in ("ssm", "hybrid"):
+        return hybrid.HybridCache(conv=-1, ssm=-1, attn_k=2, attn_v=2)
+    if cfg.family == "encdec":
+        return encdec.EncDecCache(self_k=2, self_v=2, cross_k=-1, cross_v=-1)
     raise ValueError(cfg.family)
 
 

@@ -17,6 +17,7 @@ from repro.models import heads, layers, moe
 from repro.models.layers import (
     attention_block,
     attention_decode,
+    attention_prefill_chunk,
     embed,
     init_attention,
     init_embedding,
@@ -136,11 +137,13 @@ def train_loss(params, ds_state, cfg: ModelConfig, batch):
 # Serving
 # ---------------------------------------------------------------------------
 
-def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8):
+def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
+            kernel=None):
     """Run the full prompt; returns (topk_vals, topk_ids, DecodeCache).
 
     The cache is built to ``S_max = prompt length`` (the dry-run decode cells
-    size it to seq_len per the assignment).
+    size it to seq_len per the assignment). ``kernel`` overrides the DS
+    head's serve path (name or KernelPolicy; None => cfg.ds.serve_kernel).
     """
     x, positions, _ = embed_inputs(params, cfg, batch)
 
@@ -160,13 +163,61 @@ def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8):
     xf, (ck, cv) = jax.lax.scan(body, x, params["layers"])
     h = rmsnorm(params["final_norm"], xf)[:, -1]  # last position
     vals, ids = heads.head_topk(
-        params["head"], ds_state_or_table, cfg, h, k, embed_table=params["embed"]["table"]
+        params["head"], ds_state_or_table, cfg, h, k,
+        embed_table=params["embed"]["table"], kernel=kernel,
     )
     return vals, ids, DecodeCache(k=ck, v=cv)
 
 
-def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token, pos, k: int = 8):
-    """One-token decode. token: (B,) int32; pos: scalar position.
+def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
+                  tokens, pos0, n_valid, k: int = 8, kernel=None):
+    """Prefill one chunk of a prompt into an existing decode cache.
+
+    tokens: (B, C) int32 at positions ``pos0 .. pos0+C-1`` (B=1 in the
+    serving scheduler — one slot is prefilled at a time); rows ≥ ``n_valid``
+    are right-padding (their K/V writes land at positions that stay masked
+    until later real tokens overwrite them). Returns (vals, ids, cache)
+    with the head applied to the hidden state of token ``n_valid-1`` —
+    only the final chunk's top-k is meaningful.
+
+    Every chunk call has the same static shapes, so chunked
+    prefill-into-slots compiles ONCE for all prompt lengths (vs one
+    whole-prompt compile per distinct length). Exactness: identical math
+    to :func:`prefill` for dense/vlm-text models; MoE backbones drop
+    tokens per expert-capacity computed over the chunk rather than the
+    full prompt, so chunked and whole-prompt prefill can differ there.
+    """
+    x = embed(params["embed"], tokens)  # (B, C, d)
+
+    def body(carry, scanned):
+        xc = carry
+        layer_params, ck, cv = scanned
+        h, nk, nv = attention_prefill_chunk(
+            layer_params["attn"], cfg, rmsnorm(layer_params["ln1"], xc), ck, cv, pos0
+        )
+        xc = xc + h
+        xn = rmsnorm(layer_params["ln2"], xc)
+        if cfg.moe is not None:
+            y, _ = moe.moe_block(layer_params["moe"], cfg, xn)
+        else:
+            y = mlp(layer_params["mlp"], cfg, xn)
+        return xc + y, (nk, nv)
+
+    xf, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    h = rmsnorm(params["final_norm"], xf)  # (B, C, d)
+    B = h.shape[0]
+    h_last = h[jnp.arange(B), n_valid - 1]  # (B, d)
+    vals, ids = heads.head_topk(
+        params["head"], serve_table, cfg, h_last, k,
+        embed_table=params["embed"]["table"], kernel=kernel,
+    )
+    return vals, ids, DecodeCache(k=nk, v=nv)
+
+
+def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token, pos, k: int = 8,
+                kernel=None):
+    """One-token decode. token: (B,) int32; pos: scalar position shared by
+    the batch, or (B,) int32 per-slot positions (continuous batching).
     Returns (vals, ids, new_cache)."""
     x = embed(params["embed"], token)[:, None, :]  # (B,1,d)
 
@@ -187,6 +238,7 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token
     xf, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
     h = rmsnorm(params["final_norm"], xf)[:, 0]
     vals, ids = heads.head_topk(
-        params["head"], serve_table, cfg, h, k, embed_table=params["embed"]["table"]
+        params["head"], serve_table, cfg, h, k,
+        embed_table=params["embed"]["table"], kernel=kernel,
     )
     return vals, ids, DecodeCache(k=nk, v=nv)

@@ -1,5 +1,20 @@
 from repro.train.train_step import TrainState, make_train_step
 from repro.train.trainer import Trainer
-from repro.train.serve import Request, ServeEngine
+from repro.train.serve import (
+    Request,
+    SamplingParams,
+    Scheduler,
+    ServeEngine,
+    ServeSession,
+)
 
-__all__ = ["TrainState", "make_train_step", "Trainer", "Request", "ServeEngine"]
+__all__ = [
+    "TrainState",
+    "make_train_step",
+    "Trainer",
+    "Request",
+    "SamplingParams",
+    "Scheduler",
+    "ServeEngine",
+    "ServeSession",
+]

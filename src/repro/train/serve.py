@@ -1,108 +1,424 @@
-"""Batched serving engine: prefill + decode with packed DS-Softmax experts.
+"""Continuous-batching serving: ``ServeSession`` + ``Scheduler``.
 
-Slot-based continuous batching (vLLM-lite): a fixed number of decode slots;
-finished requests release their slot, queued prompts are prefilled into it.
-On the dry-run meshes the same ``decode_step``/``prefill`` functions are
-lowered; here they run concretely for the examples/benchmarks.
+True slot-based continuous batching (vLLM-style): a fixed number of
+decode slots share one KV/state cache and one jitted decode step; every
+slot carries its **own** sequence position (the per-row ``pos`` vector
+threaded through ``attention_decode``), so finished requests release
+their slot mid-flight and queued prompts are prefilled into the freed
+slot while the other slots keep decoding. Per-request
+:class:`SamplingParams` control ``max_new_tokens``, ``eos_id`` and
+greedy/temperature sampling exactly per request; a ``stream_cb`` hook
+observes every emitted token.
+
+Prefill-into-slot has two flavors:
+
+* whole-prompt (default) — one ``bundle.prefill`` at the exact prompt
+  length (a compile per distinct length), bit-identical to a standalone
+  B=1 prefill;
+* chunked (``prefill_chunk=C``) — the prompt streams through
+  ``bundle.prefill_chunk`` in fixed (1, C) chunks against the slot's
+  cache region, so every prompt length shares ONE compiled prefill
+  (the tail chunk is right-padded and masked). Transformer families
+  only; identical math to whole-prompt prefill for dense models.
+
+Kernel choice is no longer a string frozen at engine init: ``kernel``
+accepts a registered name, a policy name, or a
+``repro.kernels.registry.KernelPolicy`` — the default (``None`` →
+``cfg.ds.serve_kernel`` = ``'auto'``) resolves per call site, so the
+B=1 prefill head and the B=n_slots decode head can lower to different
+serve kernels inside one session.
+
+``ServeEngine`` remains as a thin deprecated shim over ``ServeSession``
+for the existing examples/benchmarks.
 """
 from __future__ import annotations
 
+import collections
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Callable, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ShapeConfig
 from repro.core import dssoftmax as ds
-from repro.models.model_zoo import ModelBundle
+from repro.models.model_zoo import ModelBundle, cache_seq_axes, cache_specs
 from repro.utils import get_logger
 
 log = get_logger("serve")
 
 
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding controls.
+
+    ``temperature <= 0`` is greedy; otherwise tokens are sampled from the
+    softmax over the head's top-k candidates (top-k sampling — the DS
+    head already returns the k best classes). ``eos_id`` stops the
+    request the moment it is emitted (the eos token IS appended).
+    """
+
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+    seed: int = 0
+
+
 @dataclass
 class Request:
     prompt: np.ndarray          # (S,) int32
-    max_new_tokens: int = 16
+    max_new_tokens: int = 16    # legacy field; ignored when ``sampling`` is set
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    sampling: Optional[SamplingParams] = None
+
+    @property
+    def sampling_params(self) -> SamplingParams:
+        if self.sampling is not None:
+            return self.sampling
+        return SamplingParams(max_new_tokens=self.max_new_tokens)
+
+
+@dataclass
+class _Slot:
+    """Host-side state of one occupied decode slot."""
+
+    req: Request
+    prompt_len: int
+    n_emitted: int = 0
+
+    @property
+    def pos(self) -> int:
+        """Cache position the next decode step writes for this slot (the
+        last emitted token is fed back there)."""
+        return self.prompt_len + self.n_emitted - 1
+
+
+class Scheduler:
+    """FIFO admission queue + slot map (pure host-side bookkeeping).
+
+    ``admit``/``release`` are the continuous-batching core: a finished
+    request frees its slot immediately and the next queued prompt is
+    prefilled into it while the remaining slots keep decoding.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = n_slots
+        self.queue: Deque[Request] = collections.deque()
+        self.slots: List[Optional[_Slot]] = [None] * n_slots
+        self.n_admitted = 0
+        self.n_released = 0
+
+    def submit(self, req: Request) -> None:
+        if req.sampling_params.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        self.queue.append(req)
+
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def active(self) -> List[tuple[int, _Slot]]:
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def admit(self, i: int, req: Request, prompt_len: int) -> _Slot:
+        assert self.slots[i] is None
+        slot = _Slot(req=req, prompt_len=prompt_len)
+        self.slots[i] = slot
+        self.n_admitted += 1
+        return slot
+
+    def release(self, i: int) -> None:
+        assert self.slots[i] is not None
+        self.slots[i] = None
+        self.n_released += 1
+
+
+class ServeSession:
+    """Continuous-batching serving session over one model bundle.
+
+    Args:
+        bundle/params: the model (``repro.models.build``).
+        ds_state_or_table: the DS mask state, an already-packed
+            :class:`~repro.core.dssoftmax.ServeTable`, or the head state
+            for non-DS heads.
+        n_slots: decode slots (the jitted decode batch size).
+        max_seq_len: shared cache length; every request must satisfy
+            ``prompt_len + max_new_tokens - 1 <= max_seq_len``.
+        k: top-k width returned by the head (candidates for sampling).
+        kernel: serve-kernel override (name, policy name, or
+            KernelPolicy); ``None`` uses ``cfg.ds.serve_kernel``.
+        prefill_chunk: if set, prompts prefill through
+            ``bundle.prefill_chunk`` in (1, C) chunks — one compile for
+            all prompt lengths (transformer families only).
+        stream_cb: ``cb(request, token)`` called for every emitted token.
+    """
+
+    def __init__(self, bundle: ModelBundle, params, ds_state_or_table, *,
+                 n_slots: int = 8, max_seq_len: int = 256, k: int = 8,
+                 kernel=None, prefill_chunk: Optional[int] = None,
+                 stream_cb: Optional[Callable[[Request, int], None]] = None):
+        cfg = bundle.cfg
+        if cfg.family == "encdec":
+            raise ValueError(
+                "ServeSession drives token-only prompts; the encdec family "
+                "needs per-request encoder frames"
+            )
+        if prefill_chunk is not None and bundle.prefill_chunk is None:
+            raise ValueError(
+                f"family {cfg.family!r} has no chunked prefill; "
+                "use whole-prompt prefill (prefill_chunk=None)"
+            )
+        self.bundle = bundle
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq_len = max_seq_len
+        self.k = k
+        self.prefill_chunk = prefill_chunk
+        self.stream_cb = stream_cb
+        self.requests: List[Request] = []
+        self.n_steps = 0
+
+        if cfg.head == "ds":
+            if isinstance(ds_state_or_table, ds.ServeTable):
+                self.table = ds_state_or_table
+            else:
+                self.table = ds.pack_experts(params["head"], ds_state_or_table)
+            log.info("packed serve table: V_pad=%d kernel=%s n_slots=%d",
+                     self.table.v_pad, kernel or cfg.ds.serve_kernel, n_slots)
+        else:
+            self.table = ds_state_or_table
+        self._kernel = kernel
+
+        shape = ShapeConfig(name="serve", seq_len=max_seq_len,
+                            global_batch=n_slots, kind="decode")
+        specs = cache_specs(cfg, shape)
+        self._cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+        if prefill_chunk is not None:
+            self._row_zero = jax.tree.map(
+                lambda s: jnp.zeros((s.shape[0], 1) + s.shape[2:], s.dtype), specs
+            )
+        axes = cache_seq_axes(cfg)
+        self.scheduler = Scheduler(n_slots)
+        self._tok = np.zeros(n_slots, np.int32)
+        self._pos = np.zeros(n_slots, np.int32)
+
+        self._prefill_fn = jax.jit(
+            lambda p, t, b: bundle.prefill(p, t, b, k=k, kernel=self._kernel)
+        )
+        self._decode_fn = jax.jit(
+            lambda p, t, c, tok, pos: bundle.decode_step(
+                p, t, c, tok, pos, k=k, kernel=self._kernel
+            )
+        )
+        if prefill_chunk is not None:
+            self._chunk_fn = jax.jit(
+                lambda p, t, c, toks, pos0, nv: bundle.prefill_chunk(
+                    p, t, c, toks, pos0, nv, k=k, kernel=self._kernel
+                )
+            )
+
+        def _insert(shared, row, slot):
+            # Write a (·, 1, S, ·) prefilled request cache into slot
+            # ``slot`` of the (·, n_slots, S_max, ·) shared cache. Leaves
+            # with a sequence axis keep positions >= S stale — they stay
+            # masked (arange <= pos) until the slot's own decode steps
+            # overwrite them; state leaves (ssm/conv) are fully replaced.
+            def put(sh, r, ax):
+                if ax == 2:
+                    return sh.at[:, slot, : r.shape[2]].set(r[:, 0].astype(sh.dtype))
+                return sh.at[:, slot].set(r[:, 0].astype(sh.dtype))
+
+            return jax.tree.map(put, shared, row, axes)
+
+        self._insert_fn = jax.jit(_insert)
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Enqueue a request (admitted into a slot on the next step).
+
+        All shape validation happens HERE, before the request enters the
+        queue — a bad request must never abort a mid-flight decode step
+        (or vanish half-admitted) for the residents.
+        """
+        S = len(np.asarray(req.prompt, np.int32).reshape(-1))
+        sp = req.sampling_params
+        if S < 1:
+            raise ValueError("empty prompt")
+        if S + sp.max_new_tokens - 1 > self.max_seq_len:
+            raise ValueError(
+                f"prompt_len ({S}) + max_new_tokens ({sp.max_new_tokens})"
+                f" - 1 exceeds max_seq_len ({self.max_seq_len})"
+            )
+        if self.prefill_chunk is not None:
+            # The tail chunk writes a full `prefill_chunk` rows (padding
+            # included); a write past the cache end would be start-clamped
+            # by dynamic_update_slice and silently corrupt earlier K/V.
+            cp = self.prefill_chunk
+            needed = -(-S // cp) * cp
+            if needed > self.max_seq_len:
+                raise ValueError(
+                    f"chunked prefill rounds the prompt up to a multiple of"
+                    f" prefill_chunk ({cp}): needs {needed} cache rows >"
+                    f" max_seq_len ({self.max_seq_len}); raise max_seq_len"
+                    " or lower prefill_chunk"
+                )
+        self.scheduler.submit(req)
+        self.requests.append(req)
+
+    def step(self) -> bool:
+        """Admit queued prompts into free slots, then run ONE jitted decode
+        step over the slot batch. Returns True while work remains."""
+        self._admit()
+        act = self.scheduler.active()
+        if not act:
+            return self.scheduler.has_work()
+        vals, ids, self._cache = self._decode_fn(
+            self.params, self.table, self._cache,
+            jnp.asarray(self._tok), jnp.asarray(self._pos),
+        )
+        self.n_steps += 1
+        vals, ids = np.asarray(vals), np.asarray(ids)
+        for i, slot in act:
+            t = self._sample(vals[i], ids[i], slot.req.sampling_params,
+                             slot.n_emitted)
+            self._emit(i, slot, t)
+        return self.scheduler.has_work()
+
+    def run(self, requests: Optional[List[Request]] = None) -> List[Request]:
+        """Submit ``requests`` (if given) and step until the queue drains.
+        Returns every request this session has served."""
+        for r in requests or ():
+            self.submit(r)
+        while self.step():
+            pass
+        return self.requests
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "n_admitted": self.scheduler.n_admitted,
+            "n_released": self.scheduler.n_released,
+            "n_steps": self.n_steps,
+            "n_queued": len(self.scheduler.queue),
+            "n_active": len(self.scheduler.active()),
+        }
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self) -> None:
+        sched = self.scheduler
+        while sched.queue:
+            i = sched.free_slot()
+            if i is None:
+                return
+            req = sched.queue.popleft()
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            S = len(prompt)  # validated in submit()
+            sp = req.sampling_params
+            vals, ids = self._prefill_into_slot(prompt, i)
+            slot = sched.admit(i, req, S)
+            t0 = self._sample(np.asarray(vals)[0], np.asarray(ids)[0], sp, 0)
+            self._emit(i, slot, t0)
+
+    def _prefill_into_slot(self, prompt: np.ndarray, i: int):
+        S = len(prompt)
+        if self.prefill_chunk is None:
+            vals, ids, row = self._prefill_fn(
+                self.params, self.table, {"tokens": jnp.asarray(prompt[None])}
+            )
+        else:
+            cp = self.prefill_chunk
+            row = self._row_zero
+            for lo in range(0, S, cp):
+                tail = prompt[lo: lo + cp]
+                buf = np.zeros(cp, np.int32)
+                buf[: len(tail)] = tail
+                vals, ids, row = self._chunk_fn(
+                    self.params, self.table, row, jnp.asarray(buf[None]),
+                    lo, len(tail),
+                )
+        self._cache = self._insert_fn(self._cache, row, i)
+        return vals, ids
+
+    def _sample(self, vals: np.ndarray, ids: np.ndarray, sp: SamplingParams,
+                n_emitted: int) -> int:
+        """One token from the head's (k,) top-k candidates. Depends only on
+        (vals, ids, sp, n_emitted) — a request samples identically whether
+        it runs solo or batched with others (token-identity invariant)."""
+        if sp.temperature <= 0.0:
+            return int(ids[0])
+        key = jax.random.fold_in(jax.random.PRNGKey(sp.seed), n_emitted)
+        logits = jnp.asarray(vals, jnp.float32) / sp.temperature
+        return int(ids[int(jax.random.categorical(key, logits))])
+
+    def _emit(self, i: int, slot: _Slot, token: int) -> None:
+        req = slot.req
+        sp = req.sampling_params
+        req.out_tokens.append(token)
+        slot.n_emitted += 1
+        if self.stream_cb is not None:
+            self.stream_cb(req, token)
+        finished = (sp.eos_id is not None and token == sp.eos_id) \
+            or slot.n_emitted >= sp.max_new_tokens
+        if finished:
+            req.done = True
+            self.scheduler.release(i)
+            self._tok[i] = 0
+            self._pos[i] = 0
+        else:
+            self._tok[i] = token
+            self._pos[i] = slot.pos
 
 
 class ServeEngine:
-    """Single-sequence-batch engine (batch = n_slots identical-length
-    decodes; prompts padded to a shared length).
+    """DEPRECATED compatibility shim over :class:`ServeSession`.
 
-    ``serve_kernel`` selects the DS-head retrieval path for prefill AND
-    decode ('jnp' | 'grouped' | 'pallas' | 'pallas_grouped'). Default
-    (``None``): the expert-grouped streaming Pallas kernel — the
-    weight-stationary production path (``repro.kernels.dss_topk_grouped``)
-    — on TPU; its XLA twin ``'grouped'`` elsewhere, where the Pallas
-    kernel would run in interpret mode (~25× slower than XLA on CPU).
-    Pass ``serve_kernel='pallas_grouped'`` explicitly to force the kernel
-    (e.g. to validate interpret-mode semantics off-TPU)."""
+    The original ``ServeEngine`` marched every request in lock-step to the
+    batch-max ``max_new_tokens`` (its docstring claimed slot-based
+    continuous batching it never implemented) and froze the serve kernel
+    as a raw string at engine init. ``generate`` now delegates to a
+    ``ServeSession`` sized to the request list: per-request
+    ``max_new_tokens``/``eos_id`` are honored exactly, prompts are
+    prefilled unpadded (the old engine left-padded to a shared length and
+    *attended the padding*), and ``serve_kernel=None`` resolves through
+    the kernel-policy registry ('auto') per call site instead of a
+    backend-only default. Prefer ``ServeSession`` directly for new code.
+    """
 
     def __init__(self, bundle: ModelBundle, params, ds_state, *, greedy: bool = True,
-                 serve_kernel: Optional[str] = None):
-        if serve_kernel is None:
-            serve_kernel = (
-                "pallas_grouped" if jax.default_backend() == "tpu" else "grouped"
-            )
-        if bundle.cfg.head == "ds" and bundle.cfg.ds.serve_kernel != serve_kernel:
-            from repro.models.model_zoo import build
-
-            cfg = bundle.cfg.replace(
-                ds=bundle.cfg.ds.replace(serve_kernel=serve_kernel)
-            )
-            bundle = build(cfg)
+                 serve_kernel=None):
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.params = params
         self.greedy = greedy
+        self._serve_kernel = serve_kernel
         if self.cfg.head == "ds":
             self.table = ds.pack_experts(params["head"], ds_state)
             log.info("packed serve table: V_pad=%d kernel=%s",
-                     self.table.v_pad, self.cfg.ds.serve_kernel)
+                     self.table.v_pad, serve_kernel or self.cfg.ds.serve_kernel)
         else:
             self.table = ds_state
-        self._prefill = jax.jit(lambda p, t, b: bundle.prefill(p, t, b))
-        self._decode = jax.jit(
-            lambda p, t, c, tok, pos: bundle.decode_step(p, t, c, tok, pos)
-        )
 
     def generate(self, requests: List[Request]) -> List[Request]:
-        B = len(requests)
-        S = max(len(r.prompt) for r in requests)
-        prompts = np.zeros((B, S), np.int32)
-        for i, r in enumerate(requests):
-            prompts[i, S - len(r.prompt):] = r.prompt  # left-pad
-        batch = {"tokens": jnp.asarray(prompts)}
-        vals, ids, cache = self._prefill(self.params, self.table, batch)
-        tok = ids[:, 0]
-
-        # grow caches to S + max_new (static shape for the decode loop)
-        max_new = max(r.max_new_tokens for r in requests)
-        cache = jax.tree.map(
-            lambda c: jnp.concatenate(
-                [c, jnp.zeros(c.shape[:2] + (max_new,) + c.shape[3:], c.dtype)], axis=2
-            )
-            if c.ndim == 5
-            else c,
-            cache,
+        if not requests:
+            return requests
+        smax = max(len(np.asarray(r.prompt).reshape(-1))
+                   + r.sampling_params.max_new_tokens for r in requests)
+        session = ServeSession(
+            self.bundle, self.params, self.table,
+            n_slots=len(requests), max_seq_len=smax,
+            kernel=self._serve_kernel,
         )
-        for r, t in zip(requests, np.asarray(tok)):
-            r.out_tokens.append(int(t))
-
-        for step in range(1, max_new):
-            pos = S + step - 1
-            vals, ids, cache = self._decode(self.params, self.table, cache, tok, pos)
-            tok = ids[:, 0]
-            for r, t in zip(requests, np.asarray(tok)):
-                if not r.done and len(r.out_tokens) < r.max_new_tokens:
-                    r.out_tokens.append(int(t))
-                else:
-                    r.done = True
-        for r in requests:
-            r.done = True
+        session.run(requests)
         return requests

@@ -210,6 +210,110 @@ def test_serve_topk_rejects_unknown_kernel():
         ds.serve_topk(params["gate"], table, h, k=4, kernel="palas_grouped")
 
 
+# ---------------------------------------------------------------------------
+# Kernel-policy registry: per-call-site auto selection
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_serve_paths():
+    from repro.kernels.registry import get_spec, kernel_names
+
+    assert set(kernel_names()) == {"jnp", "grouped", "pallas", "pallas_grouped"}
+    # Pallas paths are native only on TPU; XLA paths run everywhere.
+    for name in kernel_names():
+        spec = get_spec(name)
+        assert spec.supports("tpu")
+        assert spec.supports("cpu") == (not spec.pallas)
+
+
+@pytest.mark.parametrize("B,expected", [
+    (1, "jnp"), (8, "jnp"),         # decode-scale: B ≲ K → per-token path
+    (512, "grouped"), (2048, "grouped"),  # prefill-scale: B ≫ K → grouped
+])
+def test_auto_policy_cpu_batch_size_selection(B, expected):
+    """On CPU the feasible paths are jnp/grouped; the bytes-moved model
+    puts the crossover near B ≈ K/2 (ROADMAP open item closed)."""
+    from repro.kernels.registry import AutoPolicy, KernelContext
+
+    ctx = KernelContext(B=B, d=128, K=32, v_pad=1024, k=8, backend="cpu")
+    assert AutoPolicy().resolve(ctx) == expected
+
+
+@pytest.mark.parametrize("B,expected", [
+    (8, "pallas"),                  # small decode batch: per-token streaming
+    (2048, "pallas_grouped"),       # production batch: expert-grouped
+])
+def test_auto_policy_tpu_prefers_fused_paths(B, expected):
+    """On TPU the Pallas paths dominate their XLA twins (no gather/logit
+    spill), and the per-token/grouped crossover tracks B vs K."""
+    from repro.kernels.registry import AutoPolicy, KernelContext
+
+    ctx = KernelContext(B=B, d=128, K=32, v_pad=1024, k=8, backend="tpu")
+    assert AutoPolicy().resolve(ctx) == expected
+
+
+def test_auto_policy_prefill_vs_decode_same_engine():
+    """Acceptance: the SAME policy object resolves a B=2048 prefill and a
+    B=8 decode against the same packed table to different kernels, each
+    agreeing exactly with the jnp oracle."""
+    from repro.configs.base import DSSoftmaxConfig
+    from repro.core import dssoftmax as ds
+    from repro.kernels.registry import AutoPolicy
+
+    K, d = 32, 32
+    cfg = DSSoftmaxConfig(num_experts=K)
+    params, state = ds.init(jax.random.PRNGKey(0), d, 512, cfg)
+    mask = jax.random.uniform(jax.random.PRNGKey(2), (K, 512)) < 0.5
+    table = ds.pack_experts(params, ds.DSState(mask=mask))
+
+    policy = AutoPolicy(history=[])
+    for B in (2048, 8):
+        h = jax.random.normal(jax.random.PRNGKey(1), (B, d))
+        v_ref, i_ref = ds.serve_topk(params["gate"], table, h, k=8, kernel="jnp")
+        v, i = ds.serve_topk(params["gate"], table, h, k=8, kernel=policy)
+        assert np.array_equal(np.asarray(i), np.asarray(i_ref))
+        np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref),
+                                   rtol=1e-6, atol=2e-6)
+    assert policy.history == [(2048, "grouped"), (8, "jnp")]
+
+
+def test_all_registered_kernels_agree_with_oracle():
+    """Every KernelSpec's compute path matches the jnp oracle (Pallas
+    paths under interpret=True on this CPU container)."""
+    from repro.core import dssoftmax as ds
+    from repro.kernels.registry import kernel_names
+
+    params, table = _grouped_fixture(jnp.float32)
+    h = jax.random.normal(jax.random.PRNGKey(1), (16, 32))
+    v_ref, i_ref = ds.serve_topk(params["gate"], table, h, k=8, kernel="jnp")
+    for name in kernel_names():
+        v, i = ds.serve_topk(params["gate"], table, h, k=8, kernel=name)
+        assert np.array_equal(np.asarray(i), np.asarray(i_ref)), name
+        # 'pallas' folds g into h before the matmul (g·h)·W vs g·(h·W):
+        # same ids, values equal to accumulation-order tolerance.
+        np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref),
+                                   rtol=1e-3, atol=1e-4, err_msg=name)
+
+
+def test_fixed_policy_validates_name():
+    from repro.kernels.registry import FixedPolicy
+
+    assert FixedPolicy("grouped").name == "grouped"
+    with pytest.raises(ValueError, match="unknown serve kernel"):
+        FixedPolicy("goruped")
+
+
+def test_pack_experts_rejects_truncating_pad():
+    """pad smaller than the largest expert used to silently truncate
+    surviving rows at idx[:v_pad]; it must raise instead."""
+    from repro.configs.base import DSSoftmaxConfig
+    from repro.core import dssoftmax as ds
+
+    cfg = DSSoftmaxConfig(num_experts=2)
+    params, state = ds.init(jax.random.PRNGKey(0), 8, 64, cfg)  # all 64 survive
+    with pytest.raises(ValueError, match="truncate"):
+        ds.pack_experts(params, state, pad=32)
+
+
 def test_dss_topk_grouped_all_pruned_expert():
     """An expert whose packed rows are all padding must yield NEG_INF values
     and id -1 (matching lax.top_k over a fully masked row)."""

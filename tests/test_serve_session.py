@@ -1,0 +1,242 @@
+"""Continuous-batching ServeSession: slot reuse, per-request termination,
+eos, streaming, and the token-identity invariant — a mixed workload
+(heterogeneous prompt lengths / max_new_tokens / eos stops) served through
+shared slots must emit exactly the tokens each request would get from a
+standalone sequential generation with the jnp oracle kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core import dssoftmax as ds
+from repro.models import build
+from repro.train import Request, SamplingParams, ServeEngine, ServeSession
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduce_config(get_config("qwen2-1.5b"), vocab=128).replace(
+        ds=get_config("qwen2-1.5b").ds.replace(num_experts=4)
+    )
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    table = ds.pack_experts(params["head"], ds_state)
+    return bundle, params, ds_state, table
+
+
+def _mixed_requests(n=6, seed=0):
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, 128, rng.randint(3, 10)).astype(np.int32)
+               for _ in range(n)]
+    max_news = [2, 5, 3, 7, 4, 6][:n]
+    return prompts, max_news
+
+
+def _sequential_reference(bundle, params, table, prompt, max_new):
+    """Per-request generation with the jnp oracle kernel: whole-prompt
+    B=1 prefill + B=1 greedy decode (no batching, no shared cache)."""
+    from repro.models.model_zoo import cache_seq_axes
+
+    pre = jax.jit(lambda p, t, b: bundle.prefill(p, t, b, kernel="jnp"))
+    dec = jax.jit(lambda p, t, c, tok, pos: bundle.decode_step(
+        p, t, c, tok, pos, kernel="jnp"))
+    S = len(prompt)
+    _, ids, cache = pre(params, table, {"tokens": jnp.asarray(prompt[None])})
+    # grow the sequence axis of seq-bearing cache leaves by max_new
+    cache = jax.tree.map(
+        lambda c, ax: jnp.concatenate(
+            [c, jnp.zeros(c.shape[:2] + (max_new,) + c.shape[3:], c.dtype)],
+            axis=2) if ax == 2 else c,
+        cache, cache_seq_axes(bundle.cfg),
+    )
+    out = [int(np.asarray(ids)[0, 0])]
+    tok = ids[:, 0]
+    for n in range(1, max_new):
+        _, ids, cache = dec(params, table, cache, tok, S + n - 1)
+        tok = ids[:, 0]
+        out.append(int(np.asarray(tok)[0]))
+    return out
+
+
+@pytest.fixture(scope="module")
+def reference_outputs(tiny):
+    bundle, params, ds_state, table = tiny
+    prompts, max_news = _mixed_requests()
+    return [
+        _sequential_reference(bundle, params, table, p, m)
+        for p, m in zip(prompts, max_news)
+    ]
+
+
+@pytest.mark.parametrize("prefill_chunk", [None, 4])
+def test_mixed_workload_token_identical_with_slot_reuse(
+        tiny, reference_outputs, prefill_chunk):
+    """Acceptance: 6 requests through 2 slots (so slots are reused
+    mid-flight), heterogeneous prompts and max_new_tokens, both prefill
+    flavors — token-identical to per-request sequential generation."""
+    bundle, params, ds_state, table = tiny
+    prompts, max_news = _mixed_requests()
+    sess = ServeSession(bundle, params, table, n_slots=2, max_seq_len=32,
+                        kernel="jnp", prefill_chunk=prefill_chunk)
+    reqs = [Request(prompt=p, sampling=SamplingParams(max_new_tokens=m))
+            for p, m in zip(prompts, max_news)]
+    sess.run(reqs)
+    for r, expected in zip(reqs, reference_outputs):
+        assert r.done
+        assert r.out_tokens == expected
+    # continuous batching actually recycled slots
+    assert sess.stats["n_admitted"] == 6 > sess.n_slots
+    assert sess.stats["n_released"] == 6
+
+
+def test_heterogeneous_max_new_exact_lengths(tiny, reference_outputs):
+    """Regression (old ServeEngine bug): a request with max_new_tokens
+    below the batch max kept stale append-then-drop semantics and its
+    `done` flag only flipped on the NEXT step. Lengths must now be exact
+    per request and every request marked done, through the engine shim."""
+    bundle, params, ds_state, table = tiny
+    prompts, max_news = _mixed_requests()
+    eng = ServeEngine(bundle, params, ds_state, serve_kernel="jnp")
+    reqs = [Request(prompt=p, max_new_tokens=m)
+            for p, m in zip(prompts, max_news)]
+    eng.generate(reqs)
+    for r, m, expected in zip(reqs, max_news, reference_outputs):
+        assert r.done
+        assert len(r.out_tokens) == m
+        assert r.out_tokens == expected
+
+
+def test_eos_stops_request_early(tiny, reference_outputs):
+    """eos_id emitted mid-stream terminates exactly there (eos included),
+    freeing the slot for the next queued request."""
+    bundle, params, ds_state, table = tiny
+    prompts, max_news = _mixed_requests()
+    # pick the 4th request's 3rd greedy token as its eos
+    eos = reference_outputs[3][2]
+    reqs = [Request(prompt=p, sampling=SamplingParams(
+                max_new_tokens=m, eos_id=eos if i == 3 else None))
+            for i, (p, m) in enumerate(zip(prompts, max_news))]
+    sess = ServeSession(bundle, params, table, n_slots=2, max_seq_len=32,
+                        kernel="jnp")
+    sess.run(reqs)
+    assert reqs[3].out_tokens == reference_outputs[3][:3]
+    assert reqs[3].done
+    for i, r in enumerate(reqs):
+        if i != 3:
+            assert r.out_tokens == reference_outputs[i]
+
+
+def test_stream_cb_observes_every_token(tiny):
+    bundle, params, ds_state, table = tiny
+    prompts, max_news = _mixed_requests(n=3)
+    seen = {}
+
+    def cb(req, token):
+        seen.setdefault(id(req), []).append(token)
+
+    sess = ServeSession(bundle, params, table, n_slots=2, max_seq_len=32,
+                        kernel="jnp", stream_cb=cb)
+    reqs = [Request(prompt=p, sampling=SamplingParams(max_new_tokens=m))
+            for p, m in zip(prompts, max_news)]
+    sess.run(reqs)
+    for r in reqs:
+        assert seen[id(r)] == r.out_tokens
+
+
+def test_temperature_sampling_is_seed_deterministic(tiny):
+    """Top-k temperature sampling depends only on (seed, step) — the same
+    request reproduces exactly across sessions and slot layouts."""
+    bundle, params, ds_state, table = tiny
+    prompt = np.arange(5, dtype=np.int32)
+    sp = SamplingParams(max_new_tokens=6, temperature=0.8, seed=7)
+    outs = []
+    for n_slots in (1, 3):
+        r = Request(prompt=prompt.copy(), sampling=sp)
+        ServeSession(bundle, params, table, n_slots=n_slots, max_seq_len=32,
+                     kernel="jnp").run([r])
+        outs.append(r.out_tokens)
+    assert outs[0] == outs[1]
+    assert len(outs[0]) == 6
+
+
+def test_session_auto_policy_resolves_per_call_site(tiny):
+    """Inside ONE session the default AutoPolicy picks the per-token path
+    for the B=1 prefill head and the grouped path for the B=n_slots
+    decode head (K=4, 8 slots ⇒ decode is B ≫ K)."""
+    from repro.kernels.registry import AutoPolicy
+
+    bundle, params, ds_state, table = tiny
+    policy = AutoPolicy(history=[])
+    sess = ServeSession(bundle, params, table, n_slots=8, max_seq_len=32,
+                        kernel=policy)
+    reqs = [Request(prompt=np.arange(4, dtype=np.int32) + i,
+                    sampling=SamplingParams(max_new_tokens=3))
+            for i in range(8)]
+    sess.run(reqs)
+    chosen = dict(policy.history)  # {B: kernel} — one entry per trace
+    assert chosen[1] == "jnp"        # prefill head: B=1 ≲ K=4
+    assert chosen[8] == "grouped"    # decode head: B=8 ≫ K=4
+    for r in reqs:
+        assert len(r.out_tokens) == 3
+
+
+def test_hybrid_family_session_token_identical():
+    """Per-slot positions also thread through the SSM + periodic shared
+    attention decode path; conv/ssm state leaves are position-free and
+    fully replaced on slot admission (whole-prompt prefill fallback —
+    hybrids have no chunked prefill)."""
+    cfg = reduce_config(get_config("zamba2-7b"), vocab=96).replace(
+        ds=get_config("zamba2-7b").ds.replace(num_experts=4)
+    )
+    bundle = build(cfg)
+    assert bundle.prefill_chunk is None
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    table = ds.pack_experts(params["head"], ds_state)
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(0, 96, S).astype(np.int32) for S in (4, 7, 5, 6)]
+    max_news = [3, 5, 2, 4]
+    expected = [_sequential_reference(bundle, params, table, p, m)
+                for p, m in zip(prompts, max_news)]
+    sess = ServeSession(bundle, params, table, n_slots=2, max_seq_len=16,
+                        kernel="jnp")
+    reqs = [Request(prompt=p, sampling=SamplingParams(max_new_tokens=m))
+            for p, m in zip(prompts, max_news)]
+    sess.run(reqs)
+    for r, e in zip(reqs, expected):
+        assert r.done and r.out_tokens == e
+    assert sess.stats["n_admitted"] == 4 > sess.n_slots
+
+
+def test_session_rejects_oversized_request_at_submit(tiny):
+    """Shape validation happens at submit — a bad request must never abort
+    a mid-flight decode step for the resident slots."""
+    bundle, params, ds_state, table = tiny
+    sess = ServeSession(bundle, params, table, n_slots=1, max_seq_len=8)
+    with pytest.raises(ValueError, match="max_seq_len"):
+        sess.submit(Request(prompt=np.arange(6, dtype=np.int32),
+                            sampling=SamplingParams(max_new_tokens=8)))
+    assert not sess.scheduler.has_work()
+
+
+def test_chunked_prefill_tail_past_cache_end_rejected(tiny):
+    """Regression: a tail chunk extending past max_seq_len would be
+    start-clamped by dynamic_update_slice and silently overwrite earlier
+    K/V (observed as wrong tokens); it must be rejected at submit."""
+    bundle, params, ds_state, table = tiny
+    sess = ServeSession(bundle, params, table, n_slots=1, max_seq_len=9,
+                        prefill_chunk=8)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        sess.submit(Request(prompt=np.arange(9, dtype=np.int32),
+                            sampling=SamplingParams(max_new_tokens=1)))
+    # the same prompt fits once the cache covers the rounded-up chunks
+    sess2 = ServeSession(bundle, params, table, n_slots=1, max_seq_len=16,
+                         prefill_chunk=8)
+    sess3 = ServeSession(bundle, params, table, n_slots=1, max_seq_len=16)
+    r2 = Request(prompt=np.arange(9, dtype=np.int32),
+                 sampling=SamplingParams(max_new_tokens=2))
+    r3 = Request(prompt=np.arange(9, dtype=np.int32),
+                 sampling=SamplingParams(max_new_tokens=2))
+    sess2.run([r2])
+    sess3.run([r3])
+    assert r2.out_tokens == r3.out_tokens  # chunked == whole-prompt
