@@ -19,6 +19,12 @@ Metrics written to ``BENCH_serve_engine.json``:
                          subsequent tokens from the previous emission.
 * ``slot_reuse``       — admissions / slots (> 1 proves continuous
                          batching actually recycled slots mid-flight).
+* ``ssm_hybrid_chunked`` — per-family (ssm + hybrid) state-passing
+                         chunked-prefill variant: tokens/s and the
+                         PREFILL COMPILE COUNT across distinct prompt
+                         lengths (1 proves every length shares one
+                         compiled chunked prefill; whole-prompt prefill
+                         pays one XLA compile per distinct length).
 """
 from __future__ import annotations
 
@@ -47,6 +53,63 @@ def build_trace(rng, n_requests, rate, prompt_lens, max_new_choices, vocab):
             sampling=SamplingParams(max_new_tokens=int(rng.choice(max_new_choices))),
         )))
     return reqs
+
+
+def run_ssm_hybrid_chunked(fast: bool) -> dict:
+    """ssm/hybrid chunked-prefill throughput across DISTINCT prompt
+    lengths (multiples of the chunk and padded tails). The headline
+    number is ``prefill_compiles``: the state-passing chunked path keeps
+    it at 1 no matter how many lengths arrive."""
+    if fast:
+        n_requests, n_slots, chunk = 8, 2, 8
+        prompt_lens, max_new = (4, 7, 12, 16), (3, 6)
+        vocab = 512
+    else:
+        n_requests, n_slots, chunk = 32, 4, 16
+        prompt_lens, max_new = (8, 16, 23, 31, 64), (8, 16)
+        vocab = 2048
+    out = {}
+    for arch in ("mamba2-130m", "zamba2-7b"):
+        cfg = reduce_config(get_config(arch), vocab=vocab)
+        bundle = build(cfg)
+        params, ds_state = bundle.init(jax.random.PRNGKey(0))
+        session = ServeSession(
+            bundle, params, ds_state, n_slots=n_slots,
+            max_seq_len=-(-max(prompt_lens) // chunk) * chunk + max(max_new),
+            prefill_chunk=chunk,
+        )
+        rng = np.random.RandomState(0)
+        reqs = [Request(prompt=rng.randint(0, vocab, int(rng.choice(prompt_lens))).astype(np.int32),
+                        sampling=SamplingParams(max_new_tokens=int(rng.choice(max_new))))
+                for _ in range(n_requests)]
+        # warmup compiles off the clock: one chunked prefill + one decode
+        # (max_new_tokens=2 — the first token comes from the prefill head,
+        # only the second actually traces the decode step)
+        session.run([Request(prompt=np.zeros(prompt_lens[0], np.int32),
+                             sampling=SamplingParams(max_new_tokens=2))])
+        session.requests.clear()
+        t0 = time.perf_counter()
+        session.run(reqs)
+        wall = time.perf_counter() - t0
+        n_tok = sum(len(r.out_tokens) for r in reqs)
+        assert all(r.done for r in reqs)
+        out[arch] = {
+            "family": cfg.family,
+            "n_requests": n_requests,
+            "prompt_lens": prompt_lens,
+            "prefill_chunk": chunk,
+            "tokens": n_tok,
+            "wall_s": wall,
+            "tokens_per_s": n_tok / wall,
+            "prefill_compiles": session._chunk_fn._cache_size(),
+        }
+        assert out[arch]["prefill_compiles"] == 1, \
+            f"{arch}: chunked prefill re-traced across prompt lengths"
+        print(f"# {arch} ({cfg.family}) chunked prefill: {n_tok} tokens "
+              f"in {wall:.2f}s ({n_tok / wall:.1f} tok/s), "
+              f"prefill_compiles={out[arch]['prefill_compiles']} "
+              f"across {len(prompt_lens)} prompt lengths")
+    return out
 
 
 def main():
@@ -125,6 +188,7 @@ def main():
         "decode_steps": session.stats["n_steps"] - base["n_steps"],
         "admits": session.stats["n_admitted"] - base["n_admitted"],
         "slot_reuse": (session.stats["n_admitted"] - base["n_admitted"]) / n_slots,
+        "ssm_hybrid_chunked": run_ssm_hybrid_chunked(FAST),
     }
     assert all(r.done for r in session.requests)
     assert results["admits"] == n_requests

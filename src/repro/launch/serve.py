@@ -25,6 +25,9 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--kernel", default=None,
                     help="serve kernel/policy name (default: cfg 'auto')")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill-into-slots: one compiled prefill "
+                         "for every prompt length (all families but encdec)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -32,11 +35,16 @@ def main():
         cfg = reduce_config(cfg)
     bundle = build(cfg)
     params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    smax = args.prompt_len + args.new_tokens
+    if args.prefill_chunk:
+        # tail chunks write a full chunk of (masked) rows into the cache
+        smax = max(smax, -(-args.prompt_len // args.prefill_chunk) * args.prefill_chunk)
     session = ServeSession(
         bundle, params, ds_state,
         n_slots=min(args.slots, args.batch),
-        max_seq_len=args.prompt_len + args.new_tokens,
+        max_seq_len=smax,
         kernel=args.kernel,
+        prefill_chunk=args.prefill_chunk,
     )
     rng = np.random.RandomState(0)
     reqs = [

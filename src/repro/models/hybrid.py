@@ -20,6 +20,7 @@ from repro.models import heads
 from repro.models.layers import (
     attention_block,
     attention_decode,
+    attention_prefill_chunk,
     embed,
     init_attention,
     init_embedding,
@@ -28,7 +29,12 @@ from repro.models.layers import (
     mlp,
     rmsnorm,
 )
-from repro.models.mamba2 import init_mamba2, mamba2_block, mamba2_decode
+from repro.models.mamba2 import (
+    init_mamba2,
+    mamba2_block,
+    mamba2_decode,
+    mamba2_prefill_chunk,
+)
 
 
 class HybridCache(NamedTuple):
@@ -166,56 +172,114 @@ def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
     return vals, ids, cache
 
 
+def _group_walk(params, cfg: ModelConfig, cache: HybridCache, x, mamba_body, attn_op):
+    """Shared serving scaffold: scan the mamba stack in attn_period groups
+    against the cache's per-layer conv/ssm leaves (``mamba_body`` is the
+    lax.scan body over (layer_params, conv, ssm)), applying the shared
+    attention block via ``attn_op(x, app_index) -> (x, new_k, new_v)``
+    between groups. Returns (x, reassembled HybridCache)."""
+    n_groups, rem = _layout(cfg)
+    p = cfg.attn_period if cfg.family == "hybrid" else cfg.n_layers
+    groups = [p] * n_groups + ([rem] if rem else []) if cfg.family == "hybrid" else [cfg.n_layers]
+    new_conv, new_ssm, new_ak, new_av = [], [], [], []
+    idx = 0
+    for gi, glen in enumerate(groups):
+        grp = _tree_slice(params["layers"], idx, idx + glen)
+        x, (nc, ns) = jax.lax.scan(
+            mamba_body, x, (grp, cache.conv[idx : idx + glen], cache.ssm[idx : idx + glen])
+        )
+        new_conv.append(nc)
+        new_ssm.append(ns)
+        idx += glen
+        if cfg.family == "hybrid" and gi < n_groups:
+            x, nk, nv = attn_op(x, gi)
+            new_ak.append(nk)
+            new_av.append(nv)
+    if new_ak:
+        ak, av = jnp.stack(new_ak), jnp.stack(new_av)
+    else:
+        ak, av = cache.attn_k, cache.attn_v
+    return x, HybridCache(
+        conv=jnp.concatenate(new_conv, axis=0),
+        ssm=jnp.concatenate(new_ssm, axis=0),
+        attn_k=ak,
+        attn_v=av,
+    )
+
+
+def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
+                  tokens, pos0, n_valid, k: int = 8, kernel=None):
+    """State-passing chunked prefill: one prompt chunk against an existing
+    :class:`HybridCache` (mirrors ``transformer.prefill_chunk``).
+
+    tokens: (B, C) int32 at positions ``pos0 .. pos0+C-1`` (B=1 in the
+    serving scheduler); rows ≥ ``n_valid`` are right-padding. Per-layer
+    conv/ssm state is threaded THROUGH the cache row: each chunk seeds
+    the SSD recurrence from ``cache.ssm`` and the conv left context from
+    ``cache.conv`` (zeros on the first chunk) and writes back the state
+    after its last valid row, so every chunk call has one static shape —
+    chunked prefill-into-slots compiles ONCE for all prompt lengths.
+    Shared attention blocks (hybrid) reuse ``attention_prefill_chunk``
+    against the cache's attn_k/attn_v regions. Returns (vals, ids, cache)
+    with the head applied to the hidden state of token ``n_valid - 1`` —
+    only the final chunk's top-k is meaningful.
+    """
+    B, C = tokens.shape
+    x = embed(params["embed"], tokens)  # (B, C, d)
+
+    def mamba_body(carry, scanned):
+        lp, conv, ssm = scanned
+        out, nconv, nssm = mamba2_prefill_chunk(
+            lp["mamba"], cfg, rmsnorm(lp["ln"], carry), conv, ssm, n_valid
+        )
+        return carry + out, (nconv, nssm)
+
+    def attn_op(xc, gi):
+        sa = params["shared_attn"]
+        h, nk, nv = attention_prefill_chunk(
+            sa["attn"], cfg, rmsnorm(sa["ln1"], xc),
+            cache.attn_k[gi], cache.attn_v[gi], pos0,
+        )
+        xc = xc + h
+        xc = xc + mlp(sa["mlp"], cfg, rmsnorm(sa["ln2"], xc))
+        return xc, nk, nv
+
+    x, new_cache = _group_walk(params, cfg, cache, x, mamba_body, attn_op)
+    h = rmsnorm(params["final_norm"], x)  # (B, C, d)
+    h_last = h[jnp.arange(B), n_valid - 1]
+    vals, ids = heads.head_topk(
+        params["head"], serve_table, cfg, h_last, k,
+        embed_table=params["embed"]["table"], kernel=kernel,
+    )
+    return vals, ids, new_cache
+
+
 def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token, pos, k: int = 8,
                 kernel=None):
     """pos: scalar shared position or (B,) per-slot positions (the SSM/conv
     state update is position-free; only the periodic attention blocks and
     rope consume it)."""
     x = embed(params["embed"], token)[:, None, :]
-    n_groups, rem = _layout(cfg)
-    p = cfg.attn_period if cfg.family == "hybrid" else cfg.n_layers
 
     def mamba_body(carry, scanned):
-        xc = carry
         lp, conv, ssm = scanned
-        out, nconv, nssm = mamba2_decode(lp["mamba"], cfg, rmsnorm(lp["ln"], xc), conv, ssm)
-        return xc + out, (nconv, nssm)
+        out, nconv, nssm = mamba2_decode(lp["mamba"], cfg, rmsnorm(lp["ln"], carry), conv, ssm)
+        return carry + out, (nconv, nssm)
 
-    new_conv, new_ssm, new_ak, new_av = [], [], [], []
-    idx = 0
-    x_cur = x
-    groups = [p] * n_groups + ([rem] if rem else []) if cfg.family == "hybrid" else [cfg.n_layers]
-    for gi, glen in enumerate(groups):
-        grp = _tree_slice(params["layers"], idx, idx + glen)
-        conv_g = cache.conv[idx : idx + glen]
-        ssm_g = cache.ssm[idx : idx + glen]
-        x_cur, (nc, ns) = jax.lax.scan(mamba_body, x_cur, (grp, conv_g, ssm_g))
-        new_conv.append(nc)
-        new_ssm.append(ns)
-        idx += glen
-        if cfg.family == "hybrid" and gi < n_groups:
-            sa = params["shared_attn"]
-            h, nk, nv = attention_decode(
-                sa["attn"], cfg, rmsnorm(sa["ln1"], x_cur),
-                cache.attn_k[gi], cache.attn_v[gi], pos,
-            )
-            x_cur = x_cur + h
-            x_cur = x_cur + mlp(sa["mlp"], cfg, rmsnorm(sa["ln2"], x_cur))
-            new_ak.append(nk)
-            new_av.append(nv)
-    h = rmsnorm(params["final_norm"], x_cur)[:, 0]
+    def attn_op(xc, gi):
+        sa = params["shared_attn"]
+        h, nk, nv = attention_decode(
+            sa["attn"], cfg, rmsnorm(sa["ln1"], xc),
+            cache.attn_k[gi], cache.attn_v[gi], pos,
+        )
+        xc = xc + h
+        xc = xc + mlp(sa["mlp"], cfg, rmsnorm(sa["ln2"], xc))
+        return xc, nk, nv
+
+    x, new_cache = _group_walk(params, cfg, cache, x, mamba_body, attn_op)
+    h = rmsnorm(params["final_norm"], x)[:, 0]
     vals, ids = heads.head_topk(
         params["head"], serve_table, cfg, h, k,
         embed_table=params["embed"]["table"], kernel=kernel,
-    )
-    if new_ak:
-        ak, av = jnp.stack(new_ak), jnp.stack(new_av)
-    else:
-        ak, av = cache.attn_k, cache.attn_v
-    new_cache = HybridCache(
-        conv=jnp.concatenate(new_conv, axis=0),
-        ssm=jnp.concatenate(new_ssm, axis=0),
-        attn_k=ak,
-        attn_v=av,
     )
     return vals, ids, new_cache

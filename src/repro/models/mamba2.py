@@ -59,22 +59,34 @@ def _in_proj(params, cfg: ModelConfig, u: jax.Array):
 
 
 def _conv1d(w, b, x):
-    """Depthwise causal conv, width W. x: (B, S, C) → (B, S, C)."""
+    """Depthwise causal conv, width W. The first W-1 rows of ``x`` are the
+    left context — the previous chunk's pre-conv tail, or zeros for a cold
+    start — and are dropped from the output: (B, W-1+S, C) → (B, S, C)."""
     W = w.shape[0]
-    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
-    out = sum(pads[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    S_out = x.shape[1] - (W - 1)
+    out = sum(x[:, i : i + S_out] * w[i] for i in range(W))
     return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
 
 
-def ssd_chunked(x, dt, A, B, C, chunk: int):
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
     """Chunked SSD. x: (b,S,H,P), dt: (b,S,H) (post-softplus), A: (H,) (<0),
-    B,C: (b,S,G,N). Returns y: (b,S,H,P) and final state (b,H,P,N)."""
+    B,C: (b,S,G,N). Returns y: (b,S,H,P) and final state (b,H,P,N).
+
+    ``initial_state`` (b,H,P,N) seeds the inter-chunk recurrence (state
+    passing across prompt chunks); None means a zero state. When S is not
+    a chunk multiple the tail is padded with ``dt = 0`` steps — exact
+    no-ops in the recurrence (decay exp(0·A)=1, dt-scaled B·x input
+    vanishes) — so the intra-chunk dual form stays O(S·Q·H) instead of
+    silently collapsing to ONE O(S²·H) quadratic chunk."""
     b, S, H, P = x.shape
     G, N = B.shape[2], B.shape[3]
     Q = min(chunk, S)
-    if S % Q:
-        Q = S
-    nc = S // Q
+    pad = (-S) % Q
+    if pad:
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, dt, B, C = zpad(x), zpad(dt), zpad(B), zpad(C)
+    Sp = S + pad
+    nc = Sp // Q
     rep = H // G
 
     from repro.distributed.hints import constrain
@@ -138,7 +150,10 @@ def ssd_chunked(x, dt, A, B, C, chunk: int):
         new = carry * jnp.exp(tot_c)[..., None, None] + st_c
         return new, carry  # emit state ENTERING this chunk
 
-    init = jnp.zeros((b, H, P, N), jnp.float32)
+    if initial_state is None:
+        init = jnp.zeros((b, H, P, N), jnp.float32)
+    else:
+        init = initial_state.astype(jnp.float32)
     final, prev_states = jax.lax.scan(
         body, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total_r, 1, 0))
     )
@@ -147,8 +162,8 @@ def ssd_chunked(x, dt, A, B, C, chunk: int):
     # --- inter-chunk contribution: y_off_i = (C_i · state_in) * exp(cum_i) ---
     Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=-2)  # (b,nc,Q,H,N)
     y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, jnp.exp(cum))
-    y = (y_diag + y_off).reshape(b, S, H, P)
-    return y, final
+    y = (y_diag + y_off).reshape(b, Sp, H, P)
+    return y[:, :S], final
 
 
 def ssd_reference(x, dt, A, B, C):
@@ -185,31 +200,60 @@ def mamba2_block(params, cfg: ModelConfig, u: jax.Array, *, return_state: bool =
     With ``return_state``, also returns ``(conv_tail, ssm_state)`` for
     prefill→decode handoff: conv_tail (B, W-1, conv_dim) is the pre-conv
     input tail, ssm_state (B, H, P, N) the final recurrent state.
+
+    A whole sequence is the degenerate chunk: zero incoming state and
+    every row valid (the zero conv left context reproduces the cold-start
+    causal padding, including the S < W-1 conv-tail case).
     """
     Bsz, S, _ = u.shape
     H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    conv_dim = cfg.d_inner + 2 * G * N
+    conv0 = jnp.zeros((Bsz, cfg.ssm_conv_width - 1, conv_dim), u.dtype)
+    ssm0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    out, conv_tail, final = mamba2_prefill_chunk(params, cfg, u, conv0, ssm0, S)
+    if return_state:
+        return out, (conv_tail, final)
+    return out
+
+
+def mamba2_prefill_chunk(params, cfg: ModelConfig, u, conv_state, ssm_state, n_valid):
+    """One fixed-shape prompt chunk with incoming state (chunked prefill).
+
+    u: (B, C, d) chunk inputs; conv_state: (B, W-1, conv_dim) — the
+    previous chunk's pre-conv tail (zeros for the first chunk), used as
+    the conv left context instead of zero padding; ssm_state: (B, H, P, N)
+    fp32 recurrent state entering the chunk. Rows ≥ ``n_valid`` are
+    right-padding: their post-softplus ``dt`` is masked to 0 (an exact
+    no-op in the SSD recurrence) and the returned conv tail is sliced
+    ending at the last *valid* row, so arbitrary prompt lengths stream
+    through chunks of one static shape. Outputs at padded rows are
+    garbage and must be ignored by the caller (the serving head reads row
+    ``n_valid - 1``). Returns (out, new_conv_state, new_ssm_state).
+    """
+    Bsz, Cn, _ = u.shape
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    W = cfg.ssm_conv_width
     z, x, Bc, Cc, dt = _in_proj(params, cfg, u)
     xBC_pre = jnp.concatenate([x, Bc, Cc], axis=-1)
-    xBC = _conv1d(params["conv_w"], params["conv_b"], xBC_pre)
-    x = xBC[..., : cfg.d_inner].reshape(Bsz, S, H, P)
-    Bc = xBC[..., cfg.d_inner : cfg.d_inner + G * N].reshape(Bsz, S, G, N)
-    Cc = xBC[..., cfg.d_inner + G * N :].reshape(Bsz, S, G, N)
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
-    A = -jnp.exp(params["A_log"])  # (H,) < 0
-    y, final = ssd_chunked(x, dt, A, Bc, Cc, cfg.ssm_chunk)
+    full = jnp.concatenate([conv_state.astype(xBC_pre.dtype), xBC_pre], axis=1)
+    xBC = _conv1d(params["conv_w"], params["conv_b"], full)
+    x = xBC[..., : cfg.d_inner].reshape(Bsz, Cn, H, P)
+    Bc = xBC[..., cfg.d_inner : cfg.d_inner + G * N].reshape(Bsz, Cn, G, N)
+    Cc = xBC[..., cfg.d_inner + G * N :].reshape(Bsz, Cn, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,C,H)
+    dt = jnp.where((jnp.arange(Cn) < n_valid)[None, :, None], dt, 0.0)
+    A = -jnp.exp(params["A_log"])
+    y, final = ssd_chunked(x, dt, A, Bc, Cc, cfg.ssm_chunk, initial_state=ssm_state)
     y = y + x.astype(jnp.float32) * params["D"][None, None, :, None]
-    y = y.reshape(Bsz, S, cfg.d_inner)
-    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y.reshape(Bsz, Cn, cfg.d_inner)
     y = y * jax.nn.silu(z.astype(jnp.float32))
     y = rmsnorm({"scale": params["norm_scale"]}, y.astype(u.dtype), cfg.norm_eps)
     out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
-    if return_state:
-        W = cfg.ssm_conv_width
-        conv_tail = xBC_pre[:, S - (W - 1) :, :] if S >= W - 1 else jnp.pad(
-            xBC_pre, ((0, 0), (W - 1 - S, 0), (0, 0))
-        )
-        return out, (conv_tail, final)
-    return out
+    # ``full`` row W-1+i is chunk row i, so the W-1 rows ending at the last
+    # valid row start at full index ``n_valid`` (covers n_valid < W-1 via
+    # the incoming conv_state rows).
+    new_conv = jax.lax.dynamic_slice_in_dim(full, n_valid, W - 1, axis=1)
+    return out, new_conv, final
 
 
 def mamba2_decode(params, cfg: ModelConfig, u, conv_state, ssm_state):

@@ -26,9 +26,11 @@ class ModelBundle:
     prefill: Callable[..., Any]
     decode_step: Callable[..., Any]
     # Chunked prefill into an existing decode cache (continuous batching:
-    # one compile serves every prompt length). None where the family has
-    # no cache-context prefill implementation (ssm/hybrid/encdec fall back
-    # to whole-prompt prefill in the serving scheduler).
+    # one compile serves every prompt length). Transformer families run
+    # fixed-shape chunks against the KV cache; ssm/hybrid thread the
+    # per-layer conv/ssm recurrent state through the cache row (state-
+    # passing chunked SSD prefill). None only for encdec (per-request
+    # encoder frames — falls back to whole-prompt prefill).
     prefill_chunk: Optional[Callable[..., Any]] = None
 
     def abstract_params(self):
@@ -56,6 +58,12 @@ def build(cfg: ModelConfig) -> ModelBundle:
     if fam in ("dense", "moe", "vlm"):
         chunk = lambda p, t, cache, tokens, pos0, n_valid, k=8, kernel=None: (
             transformer.prefill_chunk(
+                p, t, cfg, cache, tokens, pos0, n_valid, k=k, kernel=kernel
+            )
+        )
+    elif fam in ("ssm", "hybrid"):
+        chunk = lambda p, t, cache, tokens, pos0, n_valid, k=8, kernel=None: (
+            hybrid.prefill_chunk(
                 p, t, cfg, cache, tokens, pos0, n_valid, k=k, kernel=kernel
             )
         )
@@ -182,8 +190,11 @@ def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
     elif cfg.family == "hybrid":
         total += cfg.n_layers * mamba_params()
         napps = hybrid.n_attn_apps(cfg)
-        # shared block params counted once, but FLOPs paid per application:
-        total += napps * (attn + mlp) if not active_only else napps * (attn + mlp)
+        # The shared block's params exist ONCE no matter how often it is
+        # applied; each of the ``napps`` applications touches them again,
+        # so only the per-token path (active_only, the FLOPs input of
+        # launch.dryrun._model_flops) pays per application.
+        total += napps * (attn + mlp) if active_only else (attn + mlp)
     elif cfg.family == "encdec":
         total += cfg.n_encoder_layers * (attn + mlp)
         total += cfg.n_layers * (2 * attn + mlp)  # self + cross

@@ -18,8 +18,12 @@ Prefill-into-slot has two flavors:
 * chunked (``prefill_chunk=C``) — the prompt streams through
   ``bundle.prefill_chunk`` in fixed (1, C) chunks against the slot's
   cache region, so every prompt length shares ONE compiled prefill
-  (the tail chunk is right-padded and masked). Transformer families
-  only; identical math to whole-prompt prefill for dense models.
+  (the tail chunk is right-padded and masked). Covers every decoder
+  family this session serves: transformers run chunks against the KV
+  cache; ssm/hybrid carry the per-layer conv/ssm recurrent state
+  through the cache row (state-passing chunked SSD prefill — padded
+  tail rows are exact ``dt = 0`` no-ops in the recurrence). Only
+  encdec has no chunked path (per-request encoder frames).
 
 Kernel choice is no longer a string frozen at engine init: ``kernel``
 accepts a registered name, a policy name, or a
@@ -158,7 +162,7 @@ class ServeSession:
             KernelPolicy); ``None`` uses ``cfg.ds.serve_kernel``.
         prefill_chunk: if set, prompts prefill through
             ``bundle.prefill_chunk`` in (1, C) chunks — one compile for
-            all prompt lengths (transformer families only).
+            all prompt lengths (every family except encdec).
         stream_cb: ``cb(request, token)`` called for every emitted token.
     """
 
@@ -173,10 +177,14 @@ class ServeSession:
                 "needs per-request encoder frames"
             )
         if prefill_chunk is not None and bundle.prefill_chunk is None:
+            # only encdec lands here: every token-only decoder family
+            # (transformer, ssm, hybrid) has a chunked prefill path.
             raise ValueError(
                 f"family {cfg.family!r} has no chunked prefill; "
                 "use whole-prompt prefill (prefill_chunk=None)"
             )
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.bundle = bundle
         self.cfg = cfg
         self.params = params
@@ -393,7 +401,10 @@ class ServeEngine:
     prefilled unpadded (the old engine left-padded to a shared length and
     *attended the padding*), and ``serve_kernel=None`` resolves through
     the kernel-policy registry ('auto') per call site instead of a
-    backend-only default. Prefer ``ServeSession`` directly for new code.
+    backend-only default. Sessions are cached per ``(n_slots, bucketed
+    max_seq_len)`` so repeated ``generate()`` calls reuse the jitted
+    prefill/decode closures instead of re-tracing every call. Prefer
+    ``ServeSession`` directly for new code.
     """
 
     def __init__(self, bundle: ModelBundle, params, ds_state, *, greedy: bool = True,
@@ -403,6 +414,7 @@ class ServeEngine:
         self.params = params
         self.greedy = greedy
         self._serve_kernel = serve_kernel
+        self._sessions: dict[tuple[int, int], ServeSession] = {}
         if self.cfg.head == "ds":
             self.table = ds.pack_experts(params["head"], ds_state)
             log.info("packed serve table: V_pad=%d kernel=%s",
@@ -410,15 +422,37 @@ class ServeEngine:
         else:
             self.table = ds_state
 
+    @staticmethod
+    def _bucket_seq_len(n: int) -> int:
+        """Round the required cache length up to the next power of two
+        (min 32) so nearby request sizes share one compiled session."""
+        b = 32
+        while b < n:
+            b *= 2
+        return b
+
     def generate(self, requests: List[Request]) -> List[Request]:
         if not requests:
             return requests
         smax = max(len(np.asarray(r.prompt).reshape(-1))
                    + r.sampling_params.max_new_tokens for r in requests)
-        session = ServeSession(
-            self.bundle, self.params, self.table,
-            n_slots=len(requests), max_seq_len=smax,
-            kernel=self._serve_kernel,
-        )
+        key = (len(requests), self._bucket_seq_len(smax))
+        session = self._sessions.pop(key, None)
+        if session is None:
+            session = ServeSession(
+                self.bundle, self.params, self.table,
+                n_slots=key[0], max_seq_len=key[1],
+                kernel=self._serve_kernel,
+            )
         session.run(requests)
+        # the session is long-lived across generate() calls: drop its
+        # served-request history so prompts/outputs aren't retained forever
+        session.requests.clear()
+        # (re-)cache only AFTER a clean run — an exception above leaves
+        # queued/resident state that must not replay into a later call
+        self._sessions[key] = session
+        while len(self._sessions) > 8:
+            # each session pins a full (L, n_slots, seq, ...) device cache;
+            # evict the least recently used so a shape sweep can't hoard HBM
+            self._sessions.pop(next(iter(self._sessions)))
         return requests

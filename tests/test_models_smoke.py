@@ -74,3 +74,28 @@ def test_param_count_analytic_sane():
     total = model_zoo.count_params_analytic(moe_cfg)
     active = model_zoo.count_params_analytic(moe_cfg, active_only=True)
     assert active < total / 2
+
+
+def test_hybrid_shared_attention_counted_once():
+    """Regression: the hybrid shared-attention block was multiplied by the
+    number of applications in the PARAM count (identical ternary branches).
+    The params exist once in the pytree — the analytic count must add
+    exactly the actual leaf sizes of the shared block ONCE; only the
+    per-token/FLOPs count (active_only) pays per application."""
+    from repro.models import hybrid
+
+    cfg = reduce_config(get_config("zamba2-7b"))
+    napps = hybrid.n_attn_apps(cfg)
+    assert napps > 1  # reduced zamba2: attn_period=1, n_layers=3
+    params, _ = build(cfg).init(jax.random.PRNGKey(0))
+    sa = params["shared_attn"]
+    shared_actual = sum(
+        int(np.prod(x.shape))
+        for x in jax.tree.leaves({"attn": sa["attn"], "mlp": sa["mlp"]})
+    )
+    ssm_cfg = cfg.replace(family="ssm")  # same backbone minus the shared block
+    delta = model_zoo.count_params_analytic(cfg) - model_zoo.count_params_analytic(ssm_cfg)
+    assert delta == shared_actual  # counted once, matching the real leaves
+    delta_active = (model_zoo.count_params_analytic(cfg, active_only=True)
+                    - model_zoo.count_params_analytic(ssm_cfg, active_only=True))
+    assert delta_active == napps * shared_actual  # FLOPs path: per application

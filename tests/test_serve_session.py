@@ -184,13 +184,11 @@ def test_session_auto_policy_resolves_per_call_site(tiny):
 def test_hybrid_family_session_token_identical():
     """Per-slot positions also thread through the SSM + periodic shared
     attention decode path; conv/ssm state leaves are position-free and
-    fully replaced on slot admission (whole-prompt prefill fallback —
-    hybrids have no chunked prefill)."""
+    fully replaced on slot admission (whole-prompt prefill flavor)."""
     cfg = reduce_config(get_config("zamba2-7b"), vocab=96).replace(
         ds=get_config("zamba2-7b").ds.replace(num_experts=4)
     )
     bundle = build(cfg)
-    assert bundle.prefill_chunk is None
     params, ds_state = bundle.init(jax.random.PRNGKey(0))
     table = ds.pack_experts(params["head"], ds_state)
     rng = np.random.RandomState(1)
@@ -206,6 +204,63 @@ def test_hybrid_family_session_token_identical():
     for r, e in zip(reqs, expected):
         assert r.done and r.out_tokens == e
     assert sess.stats["n_admitted"] == 4 > sess.n_slots
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "zamba2-7b"])
+def test_ssm_hybrid_chunked_prefill_token_identical(arch):
+    """Tentpole acceptance: state-passing chunked SSD prefill. A mixed
+    workload (heterogeneous prompt lengths — multiples of prefill_chunk
+    AND tail chunks — through 2 slots, so freed slots admit mid-flight)
+    is token-identical between chunked and whole-prompt prefill on both
+    the pure-ssm and hybrid families, with exactly ONE compiled prefill
+    across every distinct prompt length."""
+    cfg = reduce_config(get_config(arch), vocab=96)
+    bundle = build(cfg)
+    assert bundle.prefill_chunk is not None
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    table = ds.pack_experts(params["head"], ds_state)
+    rng = np.random.RandomState(2)
+    # 4 == prefill_chunk, 8 = two full chunks, 7/5/6 exercise padded tails
+    prompts = [rng.randint(0, 96, S).astype(np.int32) for S in (4, 7, 5, 6, 8)]
+    max_news = [3, 4, 2, 5, 3]
+
+    def run(prefill_chunk):
+        sess = ServeSession(bundle, params, table, n_slots=2, max_seq_len=16,
+                            kernel="jnp", prefill_chunk=prefill_chunk)
+        reqs = [Request(prompt=p, sampling=SamplingParams(max_new_tokens=m))
+                for p, m in zip(prompts, max_news)]
+        sess.run(reqs)
+        return sess, reqs
+
+    _, whole = run(None)
+    sess_c, chunked = run(4)
+    for rw, rc in zip(whole, chunked):
+        assert rc.done
+        assert rc.out_tokens == rw.out_tokens
+    # mid-flight admits into freed slots actually happened ...
+    assert sess_c.stats["n_admitted"] == 5 > sess_c.n_slots
+    # ... and every prompt length shared ONE compiled prefill
+    assert sess_c._chunk_fn._cache_size() == 1
+    assert sess_c._prefill_fn._cache_size() == 0  # whole-prompt path unused
+
+
+def test_engine_generate_reuses_cached_session(tiny):
+    """Regression: ``ServeEngine.generate`` built a fresh ServeSession
+    (new jit closures → full re-trace) on every call. Sessions are now
+    cached on (n_slots, bucketed max_seq_len): a second call with nearby
+    shapes reuses the SAME session and compiles nothing new."""
+    bundle, params, ds_state, table = tiny
+    eng = ServeEngine(bundle, params, ds_state, serve_kernel="jnp")
+    eng.generate([Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=3)])
+    assert len(eng._sessions) == 1
+    sess = next(iter(eng._sessions.values()))
+    assert sess._decode_fn._cache_size() == 1
+    n_prefill = sess._prefill_fn._cache_size()
+    # same prompt length again: zero new compiles anywhere
+    eng.generate([Request(prompt=np.arange(5, dtype=np.int32) + 1, max_new_tokens=4)])
+    assert next(iter(eng._sessions.values())) is sess
+    assert sess._decode_fn._cache_size() == 1
+    assert sess._prefill_fn._cache_size() == n_prefill
 
 
 def test_session_rejects_oversized_request_at_submit(tiny):

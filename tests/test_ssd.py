@@ -30,6 +30,126 @@ def test_ssd_chunked_matches_reference(chunk, groups):
     np.testing.assert_allclose(np.asarray(st_ref), np.asarray(st_chk), rtol=1e-3, atol=1e-3)
 
 
+def _rand_ssd(S, H=8, P=8, N=16, G=2, b=2, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(seed + 2), (b, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(seed + 3), (H,)))
+    B = jax.random.normal(jax.random.PRNGKey(seed + 4), (b, S, G, N))
+    C = jax.random.normal(jax.random.PRNGKey(seed + 5), (b, S, G, N))
+    return x, dt, A, B, C
+
+
+def _assert_close_to_reference(y_ref, st_ref, y_chk, st_chk, st_tol=1e-3):
+    y_ref, y_chk = np.asarray(y_ref), np.asarray(y_chk)
+    rms = float(np.sqrt(np.mean(y_ref ** 2)))
+    assert float(np.sqrt(np.mean((y_ref - y_chk) ** 2))) < 0.02 * rms
+    assert float(np.max(np.abs(y_ref - y_chk))) < 0.15 * max(1.0, rms)
+    np.testing.assert_allclose(np.asarray(st_ref), np.asarray(st_chk),
+                               rtol=st_tol, atol=st_tol)
+
+
+@pytest.mark.parametrize("S", [7, 37, 257])
+def test_ssd_chunked_non_multiple_no_quadratic_fallback(S):
+    """Regression: ``S % chunk != 0`` used to silently collapse to ONE
+    quadratic chunk (O(S²·H) intra-chunk tensors). The tail is now padded
+    with dt=0 no-op steps: still equivalent to the sequential oracle, and
+    no intermediate in the jaxpr carries an (S, S) block."""
+    chunk = 8
+    x, dt, A, B, C = _rand_ssd(S)
+    y_ref, st_ref = m.ssd_reference(x, dt, A, B, C)
+    y_chk, st_chk = m.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    _assert_close_to_reference(y_ref, st_ref, y_chk, st_chk)
+    if S <= chunk:
+        return  # single sub-chunk case: (S, S) is the intended dual form
+
+    def all_avals(jaxpr):
+        # duck-typed traversal (scan/cond nest Jaxprs/ClosedJaxprs in
+        # eqn.params) — jax.core helpers for this moved across versions
+        for eqn in jaxpr.eqns:
+            yield from (v.aval for v in eqn.outvars)
+            for val in eqn.params.values():
+                for sub in (val if isinstance(val, (list, tuple)) else (val,)):
+                    inner = getattr(sub, "jaxpr", sub)
+                    if hasattr(inner, "eqns"):
+                        yield from all_avals(inner)
+
+    jaxpr = jax.make_jaxpr(lambda *a: m.ssd_chunked(*a, chunk=chunk))(x, dt, A, B, C)
+    quadratic = [a.shape for a in all_avals(jaxpr.jaxpr)
+                 if hasattr(a, "shape") and sum(d >= S for d in a.shape) >= 2]
+    assert not quadratic, f"O(S²) intermediates materialized: {quadratic}"
+
+
+@pytest.mark.parametrize("split", [1, 5, 16, 36])
+def test_ssd_initial_state_carry_matches_unsplit(split):
+    """Tentpole invariant: splitting a sequence at an arbitrary point and
+    seeding the second scan from the first's final state equals one unsplit
+    scan (vs the sequential oracle — state passing is what lets arbitrary
+    prompts stream through fixed-shape prefill chunks)."""
+    S = 37
+    x, dt, A, B, C = _rand_ssd(S)
+    y_ref, st_ref = m.ssd_reference(x, dt, A, B, C)
+    y1, s1 = m.ssd_chunked(x[:, :split], dt[:, :split], A, B[:, :split],
+                           C[:, :split], chunk=8)
+    y2, s2 = m.ssd_chunked(x[:, split:], dt[:, split:], A, B[:, split:],
+                           C[:, split:], chunk=8, initial_state=s1)
+    ycat = jnp.concatenate([y1, y2], axis=1)
+    _assert_close_to_reference(y_ref, st_ref, ycat, s2, st_tol=2e-3)
+
+
+def test_ssd_split_state_property_hypothesis():
+    """Property form of the split invariant: ANY split point of ANY length
+    equals the unsplit scan."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 48), st.data())
+    def prop(S, data):
+        split = data.draw(st.integers(1, S - 1))
+        x, dt, A, B, C = _rand_ssd(S, seed=S)
+        y_ref, st_ref = m.ssd_reference(x, dt, A, B, C)
+        y1, s1 = m.ssd_chunked(x[:, :split], dt[:, :split], A, B[:, :split],
+                               C[:, :split], chunk=8)
+        y2, s2 = m.ssd_chunked(x[:, split:], dt[:, split:], A, B[:, split:],
+                               C[:, split:], chunk=8, initial_state=s1)
+        _assert_close_to_reference(
+            y_ref, st_ref, jnp.concatenate([y1, y2], axis=1), s2, st_tol=2e-3)
+
+    prop()
+
+
+def test_mamba2_prefill_chunk_streams_match_block():
+    """Streaming a prompt through fixed-shape ``mamba2_prefill_chunk``
+    calls (zero initial state, right-padded tail chunk) reproduces the
+    whole-prompt ``mamba2_block`` outputs AND hands off the same
+    (conv_tail, ssm_state) the block returns for decode."""
+    cfg = ModelConfig(d_model=32, ssm_state=16, ssm_headdim=8, ssm_expand=2,
+                      ssm_chunk=8, ssm_ngroups=2)
+    params = m.init_mamba2(jax.random.PRNGKey(0), cfg)
+    b, S, C = 2, 13, 4  # 13 % 4 != 0: last chunk has 1 valid row + 3 pad
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    W = cfg.ssm_conv_width
+    conv_dim = cfg.d_inner + 2 * G * N
+    u = jax.random.normal(jax.random.PRNGKey(7), (b, S, cfg.d_model)).astype(jnp.float32)
+    out_full, (conv_full, ssm_full) = m.mamba2_block(params, cfg, u, return_state=True)
+    cs = jnp.zeros((b, W - 1, conv_dim))
+    ss = jnp.zeros((b, H, P, N), jnp.float32)
+    outs = []
+    for lo in range(0, S, C):
+        tail = u[:, lo : lo + C]
+        nv = tail.shape[1]
+        buf = jnp.zeros((b, C, cfg.d_model)).at[:, :nv].set(tail)
+        o, cs, ss = m.mamba2_prefill_chunk(params, cfg, buf, cs, ss, nv)
+        outs.append(np.asarray(o)[:, :nv])
+    np.testing.assert_allclose(np.concatenate(outs, axis=1),
+                               np.asarray(out_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(conv_full),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(ssm_full),
+                               rtol=2e-3, atol=2e-3)
+
+
 def test_block_decode_matches_full_forward():
     cfg = ModelConfig(d_model=32, ssm_state=16, ssm_headdim=8, ssm_expand=2,
                       ssm_chunk=8, ssm_ngroups=2)
