@@ -112,6 +112,65 @@ def run_ssm_hybrid_chunked(fast: bool) -> dict:
     return out
 
 
+def run_sharded(fast: bool) -> dict:
+    """Expert-parallel ServeSession sweep over 1/2/4/8-way (1, ep) subset
+    meshes (needs XLA_FLAGS=--xla_force_host_platform_device_count=8 for
+    the full ladder; a 1-device container reports only ep=1). The check
+    that matters: every ep emits the SAME tokens (bit-identical ids) and
+    keeps decode at one compile; tokens/s rows track the shard_map
+    overhead on fake devices (wall clock on CPU is NOT the TPU story —
+    the roofline columns in BENCH_serve_topk.json are)."""
+    from repro.launch.mesh import parse_mesh
+
+    if fast:
+        n_requests, n_slots = 6, 2
+        prompt_lens, max_new, vocab = (4, 7, 12), (3, 6), 512
+    else:
+        n_requests, n_slots = 16, 4
+        prompt_lens, max_new, vocab = (8, 16, 31), (8, 16), 2048
+    cfg = reduce_config(get_config("qwen2-1.5b"), vocab=vocab)
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    proto = [(rng.randint(0, vocab, int(rng.choice(prompt_lens))).astype(np.int32),
+              int(rng.choice(max_new))) for _ in range(n_requests)]
+    ndev = len(jax.devices())
+    out, ref_tokens = {}, None
+    for ep in (1, 2, 4, 8):
+        if ep > ndev:
+            continue
+        mesh = parse_mesh(f"1x{ep}")
+        session = ServeSession(
+            bundle, params, ds_state, n_slots=n_slots,
+            max_seq_len=max(prompt_lens) + max(max_new), mesh=mesh,
+        )
+        # warmup compiles off the clock
+        session.run([Request(prompt=np.zeros(prompt_lens[0], np.int32),
+                             sampling=SamplingParams(max_new_tokens=2))])
+        session.requests.clear()
+        reqs = [Request(prompt=p, sampling=SamplingParams(max_new_tokens=m))
+                for p, m in proto]
+        t0 = time.perf_counter()
+        session.run(reqs)
+        wall = time.perf_counter() - t0
+        toks = [r.out_tokens for r in reqs]
+        if ref_tokens is None:
+            ref_tokens = toks
+        assert toks == ref_tokens, f"ep={ep} diverged from ep=1 tokens"
+        n_tok = sum(len(t) for t in toks)
+        out[f"ep{ep}"] = {
+            "mesh": f"1x{ep}",
+            "tokens": n_tok,
+            "wall_s": wall,
+            "tokens_per_s": n_tok / wall,
+            "decode_compiles": session._decode_fn._cache_size(),
+        }
+        assert out[f"ep{ep}"]["decode_compiles"] == 1
+        print(f"# sharded ep={ep}: {n_tok} tokens in {wall:.2f}s "
+              f"({n_tok / wall:.1f} tok/s, token-identical to ep=1)")
+    return out
+
+
 def main():
     if FAST:
         n_requests, n_slots, rate = 10, 2, 50.0
@@ -189,6 +248,7 @@ def main():
         "admits": session.stats["n_admitted"] - base["n_admitted"],
         "slot_reuse": (session.stats["n_admitted"] - base["n_admitted"]) / n_slots,
         "ssm_hybrid_chunked": run_ssm_hybrid_chunked(FAST),
+        "sharded": run_sharded(FAST),
     }
     assert all(r.done for r in session.requests)
     assert results["admits"] == n_requests

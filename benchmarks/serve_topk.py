@@ -39,9 +39,16 @@ import numpy as np
 from benchmarks.common import FAST, bench_us
 from benchmarks.table4_latency import build_ds_like
 from repro.core import dssoftmax as ds
-from repro.kernels.registry import KernelContext, get_spec, kernel_names
+from repro.kernels.registry import (
+    AutoPolicy,
+    KernelContext,
+    get_spec,
+    kernel_names,
+    load_bench_calibration,
+)
 
-PATHS = kernel_names()  # every registered serve path
+PATHS = tuple(n for n in kernel_names() if not get_spec(n).sharded)
+EP_SWEEP = (1, 2, 4, 8)  # fake-device expert-parallel degrees (subset meshes)
 
 
 def bytes_moved(path: str, *, B: int, K: int, v_pad: int, d: int, k: int,
@@ -117,6 +124,55 @@ def main():
                                             id_mismatch_frac=mm_frac))
                 print(f"{path},{B},{k},{us:.1f},{nbytes},{exact}")
 
+    # --- expert-parallel sharded sweep (1/2/4/8-way subset meshes) --------
+    # Each ep-way mesh splits the packed table K → model; rows carry the
+    # sharded spec's roofline (per-device HBM at K/ep + the O(B·k) ICI
+    # merge) next to measured wall clock. On a 1-device container only the
+    # ep=1 row appears; the 8-fake-device CI job sweeps the full ladder.
+    from repro.launch.mesh import parse_mesh
+
+    ndev = len(jax.devices())
+    results["sharded_rows"] = []
+    ref_cache = {}  # (B, local) → unsharded reference; ep-independent
+    for ep in EP_SWEEP:
+        if ep > ndev:
+            print(f"# sharded sweep: skipping ep={ep} ({ndev} devices)")
+            continue
+        mesh = parse_mesh(f"1x{ep}")
+        stab = ds.shard_table(table, mesh)
+        for B in b_list:
+            h = jax.random.normal(jax.random.PRNGKey(1), (B, d)).astype(jnp.float32)
+            kk = max(k_list)
+            for local in ("jnp", "grouped"):
+                # sharding must change NOTHING: compare against the SAME
+                # local kernel unsharded, so ids are bit-identical (the
+                # grouped-vs-jnp ulp-tie tolerance above is a different,
+                # pre-existing cross-kernel story)
+                if (B, local) not in ref_cache:
+                    ref_cache[(B, local)] = tuple(map(np.asarray, jax.jit(
+                        lambda hh, _l=local: ds.serve_topk(
+                            params["gate"], table, hh, kk, kernel=_l))(h)))
+                v_ref, i_ref = ref_cache[(B, local)]
+                spec = get_spec(f"{local}_ep")
+                ctx = KernelContext(B=B, d=d, K=stab.ids.shape[0],
+                                    v_pad=v_pad, k=kk, wbytes=wbytes,
+                                    ep=ep, ndata=1)
+                f = jax.jit(lambda hh, _l=local, _m=mesh, _t=stab:
+                            ds.serve_topk_sharded(params["gate"], _t, hh, kk,
+                                                  mesh=_m, kernel=_l))
+                v, i = map(np.asarray, f(h))
+                assert np.array_equal(i, i_ref), (ep, B, local)
+                np.testing.assert_allclose(v, v_ref, rtol=1e-6, atol=2e-6,
+                                           err_msg=f"ep={ep} B={B} {local}")
+                us = bench_us(f, h, iters=3 if B >= 2048 else 10)
+                row = dict(path=f"{local}_ep", ep=ep, B=B, k=kk, us=us,
+                           hbm_bytes_model=spec.bytes_moved(ctx),
+                           ici_bytes_model=spec.ici_bytes(ctx),
+                           exact_ids=True)
+                results["sharded_rows"].append(row)
+                print(f"{local}_ep,{ep},{B},{kk},{us:.1f},"
+                      f"{row['hbm_bytes_model']},{row['ici_bytes_model']}")
+
     # speedup summary: grouped vs jnp at the largest batch (the criterion
     # that the expert-grouped dispatch wins once tokens share experts)
     big = max(b_list)
@@ -128,9 +184,36 @@ def main():
             results.setdefault("summary", {})[f"grouped_vs_jnp_B{big}_k{k}"] = sp
             print(f"# grouped speedup vs jnp @B={big},k={k}: {sp:.2f}x")
 
+    # --- AutoPolicy calibration (ROADMAP open item) -----------------------
+    # Measured µs/byte per path from THIS sweep; report where a calibrated
+    # policy's pick diverges from the modeled-bytes pick at the swept call
+    # sites (the registry only switches scales when every feasible path is
+    # calibrated — modeled bytes stay the fallback).
     out_path = os.environ.get("BENCH_OUT", "BENCH_serve_topk.json")
     with open(out_path, "w") as fh:
         json.dump(results, fh, indent=1)
+    calib = load_bench_calibration(out_path)
+    if calib:
+        results["calibration"] = {
+            f"{be}/{path}": upb for (be, path), upb in sorted(calib.items())
+        }
+        modeled, measured = AutoPolicy(), AutoPolicy(calibration=calib)
+        diverged = {}
+        for B in b_list:
+            for k in k_list:
+                # backend must match the calibration's key (the sweep's own
+                # backend), else the all-paths-calibrated check never passes
+                ctx = KernelContext(B=B, d=d, K=K, v_pad=v_pad, k=k,
+                                    wbytes=wbytes,
+                                    backend=jax.default_backend())
+                a, b = modeled.resolve(ctx), measured.resolve(ctx)
+                if a != b:
+                    diverged[f"B{B}_k{k}"] = {"modeled": a, "calibrated": b}
+        results["calibration_divergence"] = diverged
+        print(f"# calibration: {len(calib)} path rates, "
+              f"{len(diverged)} call sites diverge from the bytes model")
+        with open(out_path, "w") as fh:
+            json.dump(results, fh, indent=1)
     print(f"# wrote {out_path}")
     return results
 

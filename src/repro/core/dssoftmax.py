@@ -25,6 +25,37 @@ top-1 gate value (inverse temperature, Eq. 2); pruned classes contribute
 ``exp(0)`` to the train normalizer in ``mask_mode='zero'`` (faithful — the
 rows are literally zero) or are excluded via ``-inf`` in ``'neg_inf'``
 (beyond-paper alignment of train and serve normalizers).
+
+Expert-parallel sharded serving (``serve_topk_sharded``)
+--------------------------------------------------------
+
+Top-1 retrieval only ever touches the rows of the ONE expert a token
+routes to, which makes the packed :class:`ServeTable` naturally shardable
+by expert. :func:`shard_table` (or ``table.shard(mesh)``) pads ``K`` to a
+multiple of the mesh's ``model`` axis and places ``K → model``; the
+``data``/``pod`` axes shard the *token batch* (slots), never the weight
+columns — an FSDP-style ``d → data`` split of the serve weights would
+re-gather ``K/ep·V_pad·d`` bytes across the interconnect on every call,
+destroying the O(B·k) wire bound below.
+
+The merge protocol inside :func:`serve_topk_sharded` (one ``shard_map``
+over the whole mesh):
+
+1. **Gating replicated.** Each device computes ``top1_gate`` for its
+   B/n_data token rows (the gate matrix ``U`` (K, d) is tiny and
+   replicated), so every model-shard agrees on ``expert_idx``/``g``.
+2. **Owner-local retrieval.** The shard owning experts
+   ``[lo, lo + K/ep)`` runs the *existing* single-device kernel (any
+   registered path: ``jnp`` / ``grouped`` / ``pallas_grouped``,
+   unchanged) over its local table slice for the tokens it owns;
+   non-owned tokens are excluded from the grouped dispatch and the
+   bounded overflow fixup, and their outputs forced to (NEG_INF, -1).
+3. **O(B·k) cross-device merge.** A single ``all_gather`` over ``model``
+   moves only the (ep, B/n_data, k) value/id carries — never logits,
+   never V_pad-sized rows — and each token selects its owner's row
+   (``owner = expert_idx // (K/ep)``). Exactly one shard owns each
+   token, so the merge is a pure select: outputs are token-identical
+   (bit-identical ids) to the single-device oracle.
 """
 from __future__ import annotations
 
@@ -359,6 +390,11 @@ class ServeTable(NamedTuple):
 
     ids:     (K, V_pad) int32 — class id per packed row; -1 for padding.
     weights: (K, V_pad, d)    — gathered active rows (zeros for padding).
+
+    ``K`` may include all-padding dummy experts appended by
+    :func:`shard_table` so the expert axis divides the mesh's ``model``
+    axis; gating is computed over the real gate matrix only and never
+    routes a token to them.
     """
 
     ids: jax.Array
@@ -367,6 +403,10 @@ class ServeTable(NamedTuple):
     @property
     def v_pad(self) -> int:
         return self.ids.shape[1]
+
+    def shard(self, mesh) -> "ServeTable":
+        """Expert-parallel placement over ``mesh`` (see :func:`shard_table`)."""
+        return shard_table(self, mesh)
 
 
 def _round_up(x: int, m: int = 128) -> int:
@@ -389,9 +429,13 @@ def pack_experts(params, state: DSState, pad: Optional[int] = None) -> ServeTabl
     sizes = mask.sum(axis=1)
     max_size = int(sizes.max())
     if pad is not None and int(pad) < max_size:
+        over = np.nonzero(sizes > int(pad))[0]
+        listing = ", ".join(
+            f"expert {int(e)}: {int(sizes[e])} rows" for e in over[:8]
+        ) + (f", … ({len(over)} experts total)" if len(over) > 8 else "")
         raise ValueError(
-            f"pack_experts pad={int(pad)} is smaller than the largest "
-            f"expert's surviving-class count {max_size}; packing would "
+            f"pack_experts pad={int(pad)} is smaller than the surviving-class "
+            f"count of {len(over)}/{K} experts ({listing}); packing would "
             "silently truncate surviving rows"
         )
     v_pad = int(pad) if pad else _round_up(max(1, max_size))
@@ -407,10 +451,13 @@ def pack_experts(params, state: DSState, pad: Optional[int] = None) -> ServeTabl
 
 def serve_kernel_context(
     table: ServeTable, h: jax.Array, k: int, capacity_factor: float = 2.0,
+    ep: int = 1, ndata: int = 1,
 ):
     """Static-shape :class:`~repro.kernels.registry.KernelContext` for one
     ``serve_topk`` call site (shapes are trace-time constants, so policies
-    resolve per distinct call-site shape — prefill vs decode differ)."""
+    resolve per distinct call-site shape — prefill vs decode differ).
+    ``ep``/``ndata`` are the expert-parallel and batch-shard degrees of a
+    sharded call site (1 on a single device)."""
     from repro.kernels.registry import KernelContext
 
     return KernelContext(
@@ -423,6 +470,8 @@ def serve_kernel_context(
         capacity_factor=capacity_factor,
         wbytes=jnp.dtype(table.weights.dtype).itemsize,
         hbytes=jnp.dtype(h.dtype).itemsize,
+        ep=ep,
+        ndata=ndata,
     )
 
 
@@ -460,35 +509,70 @@ def serve_topk(
     paths' per-expert buffers (overflow falls back exactly); propagate
     ``DSSoftmaxConfig.capacity_factor`` from model call sites.
     """
-    from repro.distributed.hints import BATCH, constrain, constrain_batch
-    from repro.kernels.registry import resolve_kernel
+    from repro.distributed.hints import constrain_batch
+    from repro.kernels.registry import get_spec, resolve_kernel
 
     kernel = resolve_kernel(
         kernel, serve_kernel_context(table, h, k, capacity_factor)
     )
+    if get_spec(kernel).sharded:
+        raise ValueError(
+            f"serve kernel {kernel!r} is an expert-parallel path; call "
+            "serve_topk_sharded(..., mesh=...) (or shard the ServeTable and "
+            "pass a mesh through ServeSession)"
+        )
     h = constrain_batch(h)
     expert_idx, g, _ = top1_gate(gate_w, h)
+    return _serve_topk_local(
+        table, h, expert_idx, g, k, kernel, capacity_factor=capacity_factor
+    )
+
+
+def _serve_topk_local(
+    table: ServeTable, h: jax.Array, expert_idx: jax.Array, g: jax.Array,
+    k: int, kernel: str, *, capacity_factor: float = 2.0,
+    owned: Optional[jax.Array] = None, n_experts_global: Optional[int] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Single-device retrieval over (possibly local) experts, shared by
+    ``serve_topk`` and each ``serve_topk_sharded`` shard.
+
+    ``expert_idx`` is already LOCAL to ``table`` (clipped into range by the
+    sharded caller). ``owned`` (B,) bool marks tokens this shard is
+    responsible for: non-owned tokens are excluded from the grouped
+    dispatch and the overflow fixup, and their outputs are (NEG_INF, -1).
+    ``n_experts_global`` sizes the grouped capacity by the GLOBAL expert
+    count so per-expert buffers match the expected per-expert load (the
+    local shard sees the same tokens-per-expert as the global run).
+    """
+    from repro.distributed.hints import BATCH, constrain
+
     if kernel == "pallas":
         from repro.kernels import ops as kops
 
-        return kops.dss_topk(table.weights, table.ids, h, expert_idx, g, k)
-    if kernel in ("grouped", "pallas_grouped"):
-        return _serve_topk_grouped(
+        vals, ids = kops.dss_topk(table.weights, table.ids, h, expert_idx, g, k)
+    elif kernel in ("grouped", "pallas_grouped"):
+        vals, ids = _serve_topk_grouped(
             table, h, expert_idx, g, k,
-            capacity_factor=capacity_factor, use_pallas=kernel == "pallas_grouped",
+            capacity_factor=capacity_factor,
+            use_pallas=kernel == "pallas_grouped",
+            owned=owned, n_experts_global=n_experts_global,
         )
-    if kernel != "jnp":
+    elif kernel != "jnp":
         raise NotImplementedError(
             f"registered serve kernel {kernel!r} has no dispatch branch"
         )
-    w_sel = constrain(table.weights[expert_idx], BATCH, "model", None)  # (B,V_pad,d)
-    ids_sel = constrain(table.ids[expert_idx], BATCH, "model")  # (B, V_pad)
-    z = jnp.einsum("bvd,bd->bv", w_sel, h, preferred_element_type=jnp.float32)
-    z = constrain(z, BATCH, "model")
-    z = z * g[:, None]
-    z = jnp.where(ids_sel >= 0, z, NEG_INF)
-    vals, pos = jax.lax.top_k(z, k)
-    ids = jnp.take_along_axis(ids_sel, pos, axis=1)
+    else:
+        w_sel = constrain(table.weights[expert_idx], BATCH, "model", None)  # (B,V_pad,d)
+        ids_sel = constrain(table.ids[expert_idx], BATCH, "model")  # (B, V_pad)
+        z = jnp.einsum("bvd,bd->bv", w_sel, h, preferred_element_type=jnp.float32)
+        z = constrain(z, BATCH, "model")
+        z = z * g[:, None]
+        z = jnp.where(ids_sel >= 0, z, NEG_INF)
+        vals, pos = jax.lax.top_k(z, k)
+        ids = jnp.take_along_axis(ids_sel, pos, axis=1)
+    if owned is not None:
+        vals = jnp.where(owned[:, None], vals, NEG_INF)
+        ids = jnp.where(owned[:, None], ids, -1)
     return vals, ids
 
 
@@ -557,6 +641,7 @@ def _overflow_fixup(table: ServeTable, h, g, expert_idx, valid, vals, ids, k,
 def _serve_topk_grouped(
     table: ServeTable, h: jax.Array, expert_idx: jax.Array, g: jax.Array, k: int,
     capacity_factor: float = 2.0, use_pallas: bool = False,
+    owned: Optional[jax.Array] = None, n_experts_global: Optional[int] = None,
 ):
     """Beyond-paper batched serving: tokens grouped by expert, one
     weight-stationary (C, d)×(d, V_pad) contraction per expert — the packed
@@ -568,13 +653,24 @@ def _serve_topk_grouped(
     across vocab blocks and only the (K, C, k) grouped outputs reach HBM.
     Tokens overflowing an expert's capacity fall back to the gather path
     (rare with the load-balance loss; exactness preserved).
+
+    ``owned`` (sharded serving): non-owned tokens are routed to the
+    out-of-range expert id K before dispatch, so the ``mode='drop'``
+    scatters keep them out of every capacity buffer, and they are masked
+    valid for the fixup (a non-owned token must never trigger the gather
+    fallback on this shard). ``n_experts_global`` sizes ``capacity`` by
+    the global expert count: the shard sees ~B/ep of the tokens spread
+    over K/ep experts — the same per-expert load as the global run.
     """
     from repro.distributed.hints import constrain
 
     B, d = h.shape
     K, v_pad, _ = table.weights.shape
-    capacity = int(max(1, round(B / K * capacity_factor)))
-    buf, g_buf, slot, valid = _group_tokens(h, g, expert_idx, K, capacity)
+    capacity = int(max(1, round(B / (n_experts_global or K) * capacity_factor)))
+    e_disp = expert_idx if owned is None else jnp.where(owned, expert_idx, K)
+    buf, g_buf, slot, valid = _group_tokens(h, g, e_disp, K, capacity)
+    if owned is not None:
+        valid = valid | ~owned  # never fix up a token another shard owns
 
     if use_pallas:
         from repro.kernels import ops as kops
@@ -595,6 +691,134 @@ def _serve_topk_grouped(
     vals = vals_b[expert_idx, jnp.minimum(slot, capacity - 1)]  # (B, k)
     ids = ids_b[expert_idx, jnp.minimum(slot, capacity - 1)]
     return _overflow_fixup(table, h, g, expert_idx, valid, vals, ids, k, capacity)
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel sharded serving (see module docstring for the protocol)
+# ---------------------------------------------------------------------------
+
+def _pad_table_experts(table: ServeTable, ep: int) -> ServeTable:
+    """Append all-padding dummy experts so K divides ``ep`` (static shapes;
+    gating never routes to them — the gate matrix keeps the real K rows)."""
+    K = table.ids.shape[0]
+    K_pad = ((K + ep - 1) // ep) * ep
+    if K_pad == K:
+        return table
+    n = K_pad - K
+    return ServeTable(
+        ids=jnp.concatenate(
+            [table.ids, jnp.full((n, table.v_pad), -1, table.ids.dtype)]
+        ),
+        weights=jnp.concatenate(
+            [table.weights,
+             jnp.zeros((n,) + table.weights.shape[1:], table.weights.dtype)]
+        ),
+    )
+
+
+def _mesh_degrees(mesh) -> tuple[int, int]:
+    """(ep, ndata): expert-parallel degree (``model`` axis) and batch-shard
+    degree (product of ``pod``/``data`` axes) of ``mesh``."""
+    ep = int(mesh.shape.get("model", 1))
+    ndata = 1
+    for a in ("pod", "data"):
+        ndata *= int(mesh.shape.get(a, 1))
+    return ep, ndata
+
+
+def shard_table(table: ServeTable, mesh) -> ServeTable:
+    """Expert-parallel placement of a packed :class:`ServeTable`.
+
+    Pads K to a multiple of the ``model`` axis and places experts
+    ``K → model`` (each device stores K/ep experts' packed rows — the
+    serve-table analogue of the MoE EP rule in
+    ``distributed.sharding``). The ``data``/``pod`` axes shard tokens at
+    call time, so the table replicates over them: its second dim stays
+    whole per device, keeping every per-device kernel unchanged and the
+    wire traffic at the O(B·k) merge carries.
+    """
+    from repro.distributed.sharding import serve_table_ep_shardings
+
+    ep, _ = _mesh_degrees(mesh)
+    table = _pad_table_experts(table, ep)
+    return jax.device_put(table, serve_table_ep_shardings(mesh, table))
+
+
+def serve_topk_sharded(
+    gate_w: jax.Array,
+    table: ServeTable,
+    h: jax.Array,
+    k: int,
+    *,
+    mesh,
+    kernel: Union[str, "KernelPolicy"] = "auto",  # noqa: F821
+    capacity_factor: float = 2.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Mesh-sharded top-k retrieval: experts over ``model``, tokens over
+    ``data``/``pod``, one O(B·k) all-gather merge. h: (B, d) → (B, k).
+
+    Token-identical (bit-identical ids) to the single-device
+    :func:`serve_topk`: gating is computed replicated, exactly one shard
+    owns each token's expert, and that shard runs the same local kernel
+    math over the same packed rows. ``kernel`` resolves through the
+    registry with the call site's (ep, ndata) — ``'auto'`` picks among
+    the ``*_ep`` sharded specs (HBM + ICI cost); a base name
+    (``'grouped'``) forces that local per-device path.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.registry import get_spec, resolve_kernel
+
+    if "model" not in mesh.axis_names:
+        return serve_topk(gate_w, table, h, k, kernel=kernel,
+                          capacity_factor=capacity_factor)
+    ep, ndata = _mesh_degrees(mesh)
+    B = h.shape[0]
+    table = _pad_table_experts(table, ep)
+    K_pad = table.ids.shape[0]
+    K_loc = K_pad // ep
+    b_split = ndata if (ndata > 1 and B % ndata == 0) else 1
+
+    name = resolve_kernel(
+        kernel,
+        serve_kernel_context(table, h, k, capacity_factor,
+                             ep=ep, ndata=b_split),
+    )
+    spec = get_spec(name)
+    local_kernel = spec.local_name or spec.name
+
+    def body(gate_w, ids, weights, h):
+        tbl = ServeTable(ids=ids, weights=weights)
+        # 1. gating replicated (per data-shard rows; agrees across model)
+        expert_idx, g, _ = top1_gate(gate_w, h)
+        lo = jax.lax.axis_index("model") * K_loc
+        owned = (expert_idx >= lo) & (expert_idx < lo + K_loc)
+        e_loc = jnp.clip(expert_idx - lo, 0, K_loc - 1)
+        # 2. owner-local retrieval with the unchanged per-device kernel
+        vals, ids_out = _serve_topk_local(
+            tbl, h, e_loc, g, k, local_kernel,
+            capacity_factor=capacity_factor, owned=owned,
+            n_experts_global=K_pad,
+        )
+        # 3. O(B·k) merge: gather the carries, select each token's owner
+        vals_all = jax.lax.all_gather(vals, "model")      # (ep, B_loc, k)
+        ids_all = jax.lax.all_gather(ids_out, "model")
+        owner = expert_idx // K_loc
+        rows = jnp.arange(h.shape[0])
+        return vals_all[owner, rows], ids_all[owner, rows]
+
+    batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = batch_ax if (batch_ax and b_split > 1) else None
+    out = P(bspec, None)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P("model", None), P("model", None, None),
+                  P(bspec, None)),
+        out_specs=(out, out),
+        check_rep=False,
+    )
+    return fn(gate_w, table.ids, table.weights, h)
 
 
 def serve_full_probs(

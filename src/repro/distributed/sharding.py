@@ -183,11 +183,53 @@ def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache: Any, shape: ShapeConfig
 
 
 def serve_table_shardings(mesh: Mesh, table) -> Any:
-    """ServeTable: ids (K, V_pad) + weights (K, V_pad, d): V_pad → model."""
+    """ServeTable: ids (K, V_pad) + weights (K, V_pad, d): V_pad → model.
+
+    This is the TRAIN-style vocab-TP layout (dry-run memory estimates).
+    The expert-parallel serving path uses :func:`serve_table_ep_shardings`.
+    """
     return type(table)(
         ids=NamedSharding(mesh, P(None, "model")),
         weights=NamedSharding(mesh, P(None, "model", "data")),
     )
+
+
+def serve_table_ep_shardings(mesh: Mesh, table) -> Any:
+    """Expert-parallel serving layout: experts K → model (each device
+    stores K/ep experts' packed rows — the serve analogue of the MoE EP
+    rule above); replicated over the batch axes, which shard tokens at
+    call time. K must already divide the model axis
+    (``core.dssoftmax.shard_table`` pads it)."""
+    return type(table)(
+        ids=NamedSharding(mesh, P("model", None)),
+        weights=NamedSharding(mesh, P("model", None, None)),
+    )
+
+
+def serve_cache_shardings(mesh: Mesh, cfg: ModelConfig, cache: Any,
+                          n_slots: int) -> Any:
+    """Serving decode caches: ONLY the slot (batch) axis is sharded, over
+    the (pod, data) axes. Unlike :func:`cache_shardings` (train dry-run:
+    split-KV over model), the sequence axis stays whole per device so
+    per-slot decode math is bit-identical to the single-device session —
+    the model axis' job in serving is the expert-sharded head."""
+    # Canonical specs only (no size-1 axes, single names unwrapped, P()
+    # when fully replicated): the session pins the cache to this sharding
+    # every step, and a spec that GSPMD would rewrite (e.g. ('data',) on a
+    # 1-wide axis → P()) costs one spurious decode recompile.
+    ba = tuple(a for a in batch_axes(mesh) if mesh.shape[a] > 1)
+    nb = batch_size_on(mesh)
+    b_ok = ba and nb > 1 and n_slots % nb == 0
+    b_ax = (ba[0] if len(ba) == 1 else ba) if b_ok else None
+
+    def leaf(path, x):
+        if b_ax is None or len(x.shape) < 2:
+            return NamedSharding(mesh, P())
+        # trailing Nones trimmed: GSPMD reports P(None, 'data'), and the
+        # pinned spec must round-trip exactly
+        return NamedSharding(mesh, P(None, b_ax))
+
+    return map_with_path(leaf, cache)
 
 
 def topk_out_shardings(mesh: Mesh, global_batch: int):

@@ -27,11 +27,32 @@ materialization twice (spill + re-read), the grouped paths pay the full
 K·V_pad·d table plus their per-slot spill. Pallas paths are only feasible
 on TPU — elsewhere they lower through the interpreter (~25× slower than
 XLA), so :class:`AutoPolicy` never selects them off-TPU.
+
+Sharded (expert-parallel) variants register as first-class ``*_ep``
+specs: their HBM model is the base path evaluated at the PER-DEVICE
+shapes (K/ep experts, B/ndata tokens) and they carry a second cost term —
+**ICI bytes**, the O(B·k) all-gather merge traffic of
+``core.dssoftmax.serve_topk_sharded``. :class:`AutoPolicy` trades HBM
+reads against gather traffic with a per-byte ICI:HBM penalty (interconnect
+bandwidth is ~16× scarcer than HBM on a v5e-class part), so a call site
+picks the sharded path exactly when the per-device table-read savings
+beat the merge cost. Sharded specs are feasible only at ``ctx.ep > 1``
+(and base specs only at ``ctx.ep == 1``), so a policy can never hand a
+sharded name to the single-device ``serve_topk`` or vice versa.
+
+Calibration (closing the ROADMAP open item): pass
+``AutoPolicy(calibration=load_bench_calibration())`` to replace the unit
+bytes-are-time assumption with measured µs/byte per (backend, path) from
+``BENCH_serve_topk.json``. Scores switch to estimated µs only when every
+feasible path is calibrated — mixing measured and modeled scales would be
+incoherent — and modeled bytes remain the fallback.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Tuple
+import json
+import os
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Tuple
 
 __all__ = [
     "KernelContext",
@@ -43,7 +64,14 @@ __all__ = [
     "get_spec",
     "kernel_names",
     "resolve_kernel",
+    "load_bench_calibration",
+    "ICI_HBM_BYTE_RATIO",
 ]
+
+# Per-byte cost of interconnect traffic relative to HBM traffic (v5e-class:
+# ~819 GB/s HBM vs ~50 GB/s per ICI direction). Used by AutoPolicy to fold
+# the sharded paths' all-gather term into one comparable scalar.
+ICI_HBM_BYTE_RATIO = 16.0
 
 
 @dataclass(frozen=True)
@@ -64,6 +92,8 @@ class KernelContext:
     capacity_factor: float = 2.0
     wbytes: int = 4
     hbytes: int = 4
+    ep: int = 1               # expert-parallel degree (mesh 'model' axis)
+    ndata: int = 1            # batch-shard degree (mesh 'pod'×'data' axes)
 
     @property
     def capacity(self) -> int:
@@ -76,10 +106,34 @@ class KernelContext:
         """fp32 values + int32 ids reaching HBM — every path pays this."""
         return self.B * self.k * 8
 
+    def local(self) -> "KernelContext":
+        """The per-device view of a sharded call site: K/ep experts,
+        B/ndata token rows, degrees reset to 1 (what one shard's kernel
+        actually sees inside ``serve_topk_sharded``'s shard_map).
+        ``capacity_factor`` is scaled by 1/ep so the derived ``capacity``
+        matches the runtime's: the sharded grouped dispatch sizes its
+        buffers by the GLOBAL expert count (B_loc/(K_loc·ep)·cf), not by
+        the local one — without the rescale the modeled dispatch/spill
+        terms would be ep× the bytes actually moved."""
+        return replace(
+            self,
+            B=-(-self.B // self.ndata),
+            K=-(-self.K // self.ep),
+            capacity_factor=self.capacity_factor / self.ep,
+            ep=1,
+            ndata=1,
+        )
+
 
 @dataclass(frozen=True)
 class KernelSpec:
-    """One registered serve path: capabilities + bytes-moved cost model."""
+    """One registered serve path: capabilities + bytes-moved cost model.
+
+    ``cost`` is per-device HBM bytes; ``ici`` is per-device interconnect
+    bytes (0 for single-device paths). ``sharded`` specs describe the
+    expert-parallel execution of the base path named ``local_name`` and
+    are only feasible at sharded call sites (``ctx.ep > 1``).
+    """
 
     name: str
     description: str
@@ -87,13 +141,27 @@ class KernelSpec:
     grouped: bool = False          # uses the expert-grouped dispatch pre-pass
     pallas: bool = False           # fused Pallas kernel (vs XLA lowering)
     backends: Optional[Tuple[str, ...]] = None  # None => native everywhere
+    ici: Callable[[KernelContext], int] = field(compare=False,
+                                                default=lambda c: 0)
+    sharded: bool = False          # expert-parallel shard_map execution
+    local_name: Optional[str] = None  # per-device kernel a sharded spec runs
 
     def supports(self, backend: str) -> bool:
         return self.backends is None or backend in self.backends
 
+    def feasible(self, ctx: KernelContext) -> bool:
+        """Runnable at this call site: backend-native AND matching the
+        call's sharding (sharded specs need ep > 1; base specs need the
+        single-device path)."""
+        return self.supports(ctx.backend) and self.sharded == (ctx.ep > 1)
+
     def bytes_moved(self, ctx: KernelContext) -> int:
-        """HBM bytes the path moves for one call at ``ctx``'s shapes."""
+        """Per-device HBM bytes the path moves for one call at ``ctx``."""
         return int(self.cost(ctx))
+
+    def ici_bytes(self, ctx: KernelContext) -> int:
+        """Per-device interconnect bytes (the cross-device merge traffic)."""
+        return int(self.ici(ctx))
 
 
 _REGISTRY: dict[str, KernelSpec] = {}
@@ -143,25 +211,89 @@ class FixedPolicy(KernelPolicy):
 
 
 class AutoPolicy(KernelPolicy):
-    """Cheapest feasible path by the bytes-moved model.
+    """Cheapest feasible path by the cost model (HBM + weighted ICI bytes).
 
     Feasible = the spec supports ``ctx.backend`` natively (Pallas paths
-    are TPU-only; XLA paths run everywhere). Pass ``history=[]`` to record
-    ``(B, chosen)`` per *resolution* — i.e. once per jit trace, which is
-    exactly once per distinct call-site shape.
+    are TPU-only; XLA paths run everywhere) AND matches the call site's
+    sharding (``*_ep`` specs at ep > 1, base specs otherwise). Pass
+    ``history=[]`` to record ``(B, chosen)`` per *resolution* — i.e. once
+    per jit trace, which is exactly once per distinct call-site shape.
+
+    ``calibration`` maps ``(backend, base_path) -> measured µs/byte``
+    (build one with :func:`load_bench_calibration`). When EVERY feasible
+    path at a call site is calibrated, scores become estimated µs
+    (measured HBM rate per path + the ICI penalty on the merge bytes);
+    otherwise modeled bytes remain the fallback for all of them — mixing
+    measured and modeled scales would make the comparison incoherent.
     """
 
-    def __init__(self, history: Optional[List[Tuple[int, str]]] = None):
+    def __init__(self, history: Optional[List[Tuple[int, str]]] = None,
+                 calibration: Optional[Dict[Tuple[str, str], float]] = None):
         self.history = history
+        self.calibration = calibration
+
+    def _score(self, spec: KernelSpec, ctx: KernelContext,
+               upb_ici: Optional[float]) -> float:
+        hbm, ici = spec.bytes_moved(ctx), spec.ici_bytes(ctx)
+        if upb_ici is not None:
+            upb = self.calibration[(ctx.backend, spec.local_name or spec.name)]
+            return hbm * upb + ici * upb_ici
+        return hbm + ici * ICI_HBM_BYTE_RATIO
 
     def resolve(self, ctx: KernelContext) -> str:
-        feasible = [s for s in _REGISTRY.values() if s.supports(ctx.backend)]
+        feasible = [s for s in _REGISTRY.values() if s.feasible(ctx)]
         if not feasible:
             raise ValueError(f"no serve kernel supports backend {ctx.backend!r}")
-        best = min(feasible, key=lambda s: (s.bytes_moved(ctx), s.name))
+        upb_ici = None
+        if self.calibration is not None and all(
+            (ctx.backend, s.local_name or s.name) in self.calibration
+            for s in feasible
+        ):
+            # One interconnect rate for everyone: the merge traffic is the
+            # same wire bytes whichever local kernel runs, so price it off
+            # the backend's fastest measured HBM rate (the hardware-peak
+            # proxy), never off each path's own — a slow local kernel must
+            # not have identical ICI bytes scored as costlier.
+            upb_ici = ICI_HBM_BYTE_RATIO * min(
+                upb for (be, _), upb in self.calibration.items()
+                if be == ctx.backend
+            )
+        best = min(feasible,
+                   key=lambda s: (self._score(s, ctx, upb_ici), s.name))
         if self.history is not None:
             self.history.append((ctx.B, best.name))
         return best.name
+
+
+def load_bench_calibration(
+    path: str = "BENCH_serve_topk.json",
+) -> Optional[Dict[Tuple[str, str], float]]:
+    """Measured µs/byte per (backend, path) from a serve_topk sweep.
+
+    Reads the benchmark's rows (each carries ``us`` wall time and the
+    registry's own ``bytes_model`` for identical shapes) and returns the
+    median µs/byte per path — the per-backend read-rate calibration the
+    ROADMAP asked to feed back into :class:`AutoPolicy`. Returns ``None``
+    when the file is absent or holds no timed rows (modeled bytes stay
+    the fallback), so callers can pass the result straight through:
+    ``AutoPolicy(calibration=load_bench_calibration())``.
+    """
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except (OSError, ValueError):
+        return None
+    backend = data.get("config", {}).get("backend", "cpu")
+    rates: Dict[Tuple[str, str], List[float]] = {}
+    for row in data.get("rows", []):
+        us, nbytes = row.get("us"), row.get("bytes_model")
+        if us and nbytes:
+            rates.setdefault((backend, row["path"]), []).append(us / nbytes)
+    if not rates:
+        return None
+    return {key: sorted(v)[len(v) // 2] for key, v in rates.items()}
 
 
 _POLICIES: dict[str, KernelPolicy] = {}
@@ -244,5 +376,36 @@ register_kernel(KernelSpec(
     pallas=True,
     backends=("tpu",),
 ))
+
+
+# --- expert-parallel sharded variants (serve_topk_sharded execution) -------
+#
+# HBM model: the base path at the PER-DEVICE shapes (ctx.local(): K/ep
+# experts, B/ndata token rows — per-token local paths still stream all
+# local rows, owned or not, which the local() view captures). ICI model:
+# the O(B·k) merge — each device receives the other ep-1 shards' (B_loc, k)
+# fp32 value + int32 id carries from the ring all-gather.
+
+def _ici_merge(c: KernelContext) -> int:
+    return (c.ep - 1) * -(-c.B // c.ndata) * c.k * 8
+
+
+def _register_sharded(base: KernelSpec) -> None:
+    register_kernel(KernelSpec(
+        name=f"{base.name}_ep",
+        description=f"expert-parallel shard_map over '{base.name}' "
+                    "(K/ep experts per device, O(B·k) all-gather merge)",
+        cost=lambda c, _b=base: _b.cost(c.local()),
+        grouped=base.grouped,
+        pallas=base.pallas,
+        backends=base.backends,
+        ici=_ici_merge,
+        sharded=True,
+        local_name=base.name,
+    ))
+
+
+for _base in list(_REGISTRY.values()):
+    _register_sharded(_base)
 
 _POLICIES["auto"] = AutoPolicy()

@@ -28,8 +28,18 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill-into-slots: one compiled prefill "
                          "for every prompt length (all families but encdec)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="expert-parallel serving mesh, e.g. 1x8: slots "
+                         "shard over data, the DS expert table over model "
+                         "(CPU: set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before launch)")
     args = ap.parse_args()
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh
+
+        mesh = parse_mesh(args.mesh)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_config(cfg)
@@ -44,6 +54,7 @@ def main():
         n_slots=min(args.slots, args.batch),
         max_seq_len=smax,
         kernel=args.kernel,
+        mesh=mesh,
         prefill_chunk=args.prefill_chunk,
     )
     rng = np.random.RandomState(0)

@@ -144,7 +144,7 @@ def train_loss(params, ds_state, cfg: ModelConfig, batch):
 
 
 def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
-            kernel=None):
+            kernel=None, mesh=None):
     memory = encode(params, cfg, batch["frames"].astype(cfg.jdtype))
     tokens = batch["tokens"]
     h, (sk, sv) = _decoder_hidden(params, cfg, tokens, memory)
@@ -160,13 +160,13 @@ def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
     cks, cvs = jax.vmap(cross_kv)(params["dec_layers"])
     vals, ids = heads.head_topk(
         params["head"], ds_state_or_table, cfg, h[:, -1], k,
-        embed_table=params["embed"]["table"], kernel=kernel,
+        embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
     )
     return vals, ids, EncDecCache(self_k=sk, self_v=sv, cross_k=cks, cross_v=cvs)
 
 
 def decode_step(params, serve_table, cfg: ModelConfig, cache: EncDecCache, token, pos, k: int = 8,
-                kernel=None):
+                kernel=None, mesh=None):
     """pos: scalar shared position or (B,) per-slot positions (learned
     absolute position embeddings are gathered per row in the vector case)."""
     pos = jnp.asarray(pos)
@@ -202,6 +202,6 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: EncDecCache, token
     h = layernorm(params["dec_norm"], xf)[:, 0]
     vals, ids = heads.head_topk(
         params["head"], serve_table, cfg, h, k,
-        embed_table=params["embed"]["table"], kernel=kernel,
+        embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
     )
     return vals, ids, EncDecCache(self_k=nk, self_v=nv, cross_k=cache.cross_k, cross_v=cache.cross_v)

@@ -113,15 +113,23 @@ def head_topk(
     k: int,
     embed_table: Optional[jax.Array] = None,
     kernel=None,
+    mesh=None,
 ):
     """Top-k classes from hidden states h (B, d) → (values, ids) (B, k).
 
     ``kernel`` (a registered name, policy name, or KernelPolicy) overrides
     ``cfg.ds.serve_kernel``; ``None`` uses the config value ('auto' by
-    default — per-call-site selection from static shapes).
+    default — per-call-site selection from static shapes). ``mesh`` routes
+    the DS head through the expert-parallel ``serve_topk_sharded`` (experts
+    over the mesh's ``model`` axis, O(B·k) cross-device merge).
     """
     if cfg.head == "ds":
         kern = kernel if kernel is not None else cfg.ds.serve_kernel
+        if mesh is not None:
+            return ds.serve_topk_sharded(
+                head_params["gate"], serve_table, h, k, mesh=mesh,
+                kernel=kern, capacity_factor=cfg.ds.capacity_factor,
+            )
         return ds.serve_topk(
             head_params["gate"], serve_table, h, k, kernel=kern,
             capacity_factor=cfg.ds.capacity_factor,

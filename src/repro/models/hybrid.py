@@ -159,7 +159,7 @@ def train_loss(params, ds_state, cfg: ModelConfig, batch):
 
 
 def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
-            kernel=None):
+            kernel=None, mesh=None):
     tokens = batch["tokens"]
     B, S = tokens.shape
     x = embed(params["embed"], tokens)
@@ -167,7 +167,7 @@ def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
     h, cache = forward_hidden(params, cfg, x, positions, collect_state=True)
     vals, ids = heads.head_topk(
         params["head"], ds_state_or_table, cfg, h[:, -1], k,
-        embed_table=params["embed"]["table"], kernel=kernel,
+        embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
     )
     return vals, ids, cache
 
@@ -208,7 +208,7 @@ def _group_walk(params, cfg: ModelConfig, cache: HybridCache, x, mamba_body, att
 
 
 def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
-                  tokens, pos0, n_valid, k: int = 8, kernel=None):
+                  tokens, pos0, n_valid, k: int = 8, kernel=None, mesh=None):
     """State-passing chunked prefill: one prompt chunk against an existing
     :class:`HybridCache` (mirrors ``transformer.prefill_chunk``).
 
@@ -249,13 +249,13 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
     h_last = h[jnp.arange(B), n_valid - 1]
     vals, ids = heads.head_topk(
         params["head"], serve_table, cfg, h_last, k,
-        embed_table=params["embed"]["table"], kernel=kernel,
+        embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
     )
     return vals, ids, new_cache
 
 
 def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token, pos, k: int = 8,
-                kernel=None):
+                kernel=None, mesh=None):
     """pos: scalar shared position or (B,) per-slot positions (the SSM/conv
     state update is position-free; only the periodic attention blocks and
     rope consume it)."""
@@ -280,6 +280,6 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token
     h = rmsnorm(params["final_norm"], x)[:, 0]
     vals, ids = heads.head_topk(
         params["head"], serve_table, cfg, h, k,
-        embed_table=params["embed"]["table"], kernel=kernel,
+        embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
     )
     return vals, ids, new_cache

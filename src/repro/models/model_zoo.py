@@ -56,27 +56,32 @@ def build(cfg: ModelConfig) -> ModelBundle:
     # different kernels inside one engine.
     chunk = None
     if fam in ("dense", "moe", "vlm"):
-        chunk = lambda p, t, cache, tokens, pos0, n_valid, k=8, kernel=None: (
+        chunk = lambda p, t, cache, tokens, pos0, n_valid, k=8, kernel=None, \
+            mesh=None: (
             transformer.prefill_chunk(
-                p, t, cfg, cache, tokens, pos0, n_valid, k=k, kernel=kernel
+                p, t, cfg, cache, tokens, pos0, n_valid, k=k, kernel=kernel,
+                mesh=mesh,
             )
         )
     elif fam in ("ssm", "hybrid"):
-        chunk = lambda p, t, cache, tokens, pos0, n_valid, k=8, kernel=None: (
+        chunk = lambda p, t, cache, tokens, pos0, n_valid, k=8, kernel=None, \
+            mesh=None: (
             hybrid.prefill_chunk(
-                p, t, cfg, cache, tokens, pos0, n_valid, k=k, kernel=kernel
+                p, t, cfg, cache, tokens, pos0, n_valid, k=k, kernel=kernel,
+                mesh=mesh,
             )
         )
     return ModelBundle(
         cfg=cfg,
         init=init,
         train_loss=lambda p, s, batch: mod.train_loss(p, s, cfg, batch),
-        prefill=lambda p, t, batch, k=8, kernel=None: mod.prefill(
-            p, t, cfg, batch, k=k, kernel=kernel
+        prefill=lambda p, t, batch, k=8, kernel=None, mesh=None: mod.prefill(
+            p, t, cfg, batch, k=k, kernel=kernel, mesh=mesh
         ),
-        decode_step=lambda p, t, cache, tok, pos, k=8, kernel=None: mod.decode_step(
-            p, t, cfg, cache, tok, pos, k=k, kernel=kernel
-        ),
+        decode_step=lambda p, t, cache, tok, pos, k=8, kernel=None, mesh=None:
+            mod.decode_step(
+                p, t, cfg, cache, tok, pos, k=k, kernel=kernel, mesh=mesh
+            ),
         prefill_chunk=chunk,
     )
 

@@ -138,7 +138,7 @@ def train_loss(params, ds_state, cfg: ModelConfig, batch):
 # ---------------------------------------------------------------------------
 
 def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
-            kernel=None):
+            kernel=None, mesh=None):
     """Run the full prompt; returns (topk_vals, topk_ids, DecodeCache).
 
     The cache is built to ``S_max = prompt length`` (the dry-run decode cells
@@ -164,13 +164,13 @@ def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
     h = rmsnorm(params["final_norm"], xf)[:, -1]  # last position
     vals, ids = heads.head_topk(
         params["head"], ds_state_or_table, cfg, h, k,
-        embed_table=params["embed"]["table"], kernel=kernel,
+        embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
     )
     return vals, ids, DecodeCache(k=ck, v=cv)
 
 
 def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
-                  tokens, pos0, n_valid, k: int = 8, kernel=None):
+                  tokens, pos0, n_valid, k: int = 8, kernel=None, mesh=None):
     """Prefill one chunk of a prompt into an existing decode cache.
 
     tokens: (B, C) int32 at positions ``pos0 .. pos0+C-1`` (B=1 in the
@@ -209,13 +209,13 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
     h_last = h[jnp.arange(B), n_valid - 1]  # (B, d)
     vals, ids = heads.head_topk(
         params["head"], serve_table, cfg, h_last, k,
-        embed_table=params["embed"]["table"], kernel=kernel,
+        embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
     )
     return vals, ids, DecodeCache(k=nk, v=nv)
 
 
 def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token, pos, k: int = 8,
-                kernel=None):
+                kernel=None, mesh=None):
     """One-token decode. token: (B,) int32; pos: scalar position shared by
     the batch, or (B,) int32 per-slot positions (continuous batching).
     Returns (vals, ids, new_cache)."""
@@ -239,6 +239,6 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token
     h = rmsnorm(params["final_norm"], xf)[:, 0]
     vals, ids = heads.head_topk(
         params["head"], serve_table, cfg, h, k,
-        embed_table=params["embed"]["table"], kernel=kernel,
+        embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
     )
     return vals, ids, DecodeCache(k=nk, v=nv)

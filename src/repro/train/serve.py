@@ -32,6 +32,13 @@ accepts a registered name, a policy name, or a
 B=1 prefill head and the B=n_slots decode head can lower to different
 serve kernels inside one session.
 
+Passing ``mesh=`` turns the session expert-parallel: the packed DS table
+shards experts over the mesh's ``model`` axis, the shared KV/state cache
+places its slot axis over ``data``/``pod``, and every head call runs
+``core.dssoftmax.serve_topk_sharded`` (gating replicated, owner-local
+retrieval, one O(B·k) all-gather merge) — token-identical to the
+single-device session with the decode step still compiled exactly once.
+
 ``ServeEngine`` remains as a thin deprecated shim over ``ServeSession``
 for the existing examples/benchmarks.
 """
@@ -160,6 +167,15 @@ class ServeSession:
         k: top-k width returned by the head (candidates for sampling).
         kernel: serve-kernel override (name, policy name, or
             KernelPolicy); ``None`` uses ``cfg.ds.serve_kernel``.
+        mesh: optional ``jax.sharding.Mesh`` for expert-parallel serving.
+            The packed DS table is sharded experts → ``model`` (each
+            device stores K/ep experts; ``core.dssoftmax.shard_table``
+            pads non-divisible K), the shared KV/state cache places its
+            slot axis over the ``data``/``pod`` axes, and the head runs
+            ``serve_topk_sharded`` — gating replicated, owner-local
+            retrieval, one O(B·k) all-gather merge. The decode step is
+            still lowered ONCE (the mesh is a trace-time constant), and
+            outputs are token-identical to the single-device session.
         prefill_chunk: if set, prompts prefill through
             ``bundle.prefill_chunk`` in (1, C) chunks — one compile for
             all prompt lengths (every family except encdec).
@@ -168,7 +184,7 @@ class ServeSession:
 
     def __init__(self, bundle: ModelBundle, params, ds_state_or_table, *,
                  n_slots: int = 8, max_seq_len: int = 256, k: int = 8,
-                 kernel=None, prefill_chunk: Optional[int] = None,
+                 kernel=None, mesh=None, prefill_chunk: Optional[int] = None,
                  stream_cb: Optional[Callable[[Request, int], None]] = None):
         cfg = bundle.cfg
         if cfg.family == "encdec":
@@ -195,14 +211,19 @@ class ServeSession:
         self.stream_cb = stream_cb
         self.requests: List[Request] = []
         self.n_steps = 0
+        self.mesh = mesh
 
         if cfg.head == "ds":
             if isinstance(ds_state_or_table, ds.ServeTable):
                 self.table = ds_state_or_table
             else:
                 self.table = ds.pack_experts(params["head"], ds_state_or_table)
-            log.info("packed serve table: V_pad=%d kernel=%s n_slots=%d",
-                     self.table.v_pad, kernel or cfg.ds.serve_kernel, n_slots)
+            if mesh is not None:
+                # experts → model axis (K padded to a multiple of ep)
+                self.table = ds.shard_table(self.table, mesh)
+            log.info("packed serve table: V_pad=%d kernel=%s n_slots=%d mesh=%s",
+                     self.table.v_pad, kernel or cfg.ds.serve_kernel, n_slots,
+                     dict(mesh.shape) if mesh is not None else None)
         else:
             self.table = ds_state_or_table
         self._kernel = kernel
@@ -211,29 +232,70 @@ class ServeSession:
                             global_batch=n_slots, kind="decode")
         specs = cache_specs(cfg, shape)
         self._cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+        self._cache_shardings = None
+        if mesh is not None:
+            # slots → (pod, data); sequence stays whole per device so the
+            # per-slot decode math is bit-identical to the unsharded session
+            from repro.distributed.sharding import serve_cache_shardings
+
+            self._cache_shardings = serve_cache_shardings(mesh, cfg, specs,
+                                                          n_slots)
+            self._cache = jax.device_put(self._cache, self._cache_shardings)
         if prefill_chunk is not None:
             self._row_zero = jax.tree.map(
                 lambda s: jnp.zeros((s.shape[0], 1) + s.shape[2:], s.dtype), specs
             )
+            if mesh is not None:
+                # the (·, 1, ·) per-request row is replicated on the mesh —
+                # committed up front so every chunk call (fresh row AND a
+                # previous chunk's output) shares one compiled signature
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                self._row_sharding = NamedSharding(mesh, PartitionSpec())
+                self._row_zero = jax.tree.map(
+                    lambda x: jax.device_put(x, self._row_sharding),
+                    self._row_zero,
+                )
         axes = cache_seq_axes(cfg)
         self.scheduler = Scheduler(n_slots)
         self._tok = np.zeros(n_slots, np.int32)
         self._pos = np.zeros(n_slots, np.int32)
 
+        def _pin(cache):
+            # Keep the cache's sharding a fixed point of every jitted step:
+            # without the constraint XLA may re-layout the carried cache,
+            # and a changed input sharding re-traces the decode step (the
+            # compile-count == 1 invariant the mesh must not break).
+            if self._cache_shardings is None:
+                return cache
+            return jax.tree.map(jax.lax.with_sharding_constraint, cache,
+                                self._cache_shardings)
+
         self._prefill_fn = jax.jit(
-            lambda p, t, b: bundle.prefill(p, t, b, k=k, kernel=self._kernel)
+            lambda p, t, b: bundle.prefill(p, t, b, k=k, kernel=self._kernel,
+                                           mesh=self.mesh)
         )
-        self._decode_fn = jax.jit(
-            lambda p, t, c, tok, pos: bundle.decode_step(
-                p, t, c, tok, pos, k=k, kernel=self._kernel
+
+        def _decode(p, t, c, tok, pos):
+            vals, ids, c = bundle.decode_step(
+                p, t, c, tok, pos, k=k, kernel=self._kernel, mesh=self.mesh
             )
-        )
+            return vals, ids, _pin(c)
+
+        self._decode_fn = jax.jit(_decode)
         if prefill_chunk is not None:
-            self._chunk_fn = jax.jit(
-                lambda p, t, c, toks, pos0, nv: bundle.prefill_chunk(
-                    p, t, c, toks, pos0, nv, k=k, kernel=self._kernel
+            def _chunk(p, t, c, toks, pos0, nv):
+                vals, ids, c = bundle.prefill_chunk(
+                    p, t, c, toks, pos0, nv, k=k, kernel=self._kernel,
+                    mesh=self.mesh
                 )
-            )
+                if self.mesh is not None:
+                    c = jax.tree.map(
+                        lambda x: jax.lax.with_sharding_constraint(
+                            x, self._row_sharding), c)
+                return vals, ids, c
+
+            self._chunk_fn = jax.jit(_chunk)
 
         def _insert(shared, row, slot):
             # Write a (·, 1, S, ·) prefilled request cache into slot
@@ -246,7 +308,7 @@ class ServeSession:
                     return sh.at[:, slot, : r.shape[2]].set(r[:, 0].astype(sh.dtype))
                 return sh.at[:, slot].set(r[:, 0].astype(sh.dtype))
 
-            return jax.tree.map(put, shared, row, axes)
+            return _pin(jax.tree.map(put, shared, row, axes))
 
         self._insert_fn = jax.jit(_insert)
 

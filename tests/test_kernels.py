@@ -217,12 +217,17 @@ def test_serve_topk_rejects_unknown_kernel():
 def test_registry_has_all_serve_paths():
     from repro.kernels.registry import get_spec, kernel_names
 
-    assert set(kernel_names()) == {"jnp", "grouped", "pallas", "pallas_grouped"}
+    base = {"jnp", "grouped", "pallas", "pallas_grouped"}
+    # every base path + its expert-parallel shard_map twin
+    assert set(kernel_names()) == base | {f"{n}_ep" for n in base}
     # Pallas paths are native only on TPU; XLA paths run everywhere.
     for name in kernel_names():
         spec = get_spec(name)
         assert spec.supports("tpu")
         assert spec.supports("cpu") == (not spec.pallas)
+        assert spec.sharded == name.endswith("_ep")
+        if spec.sharded:
+            assert spec.local_name == name[:-3]
 
 
 @pytest.mark.parametrize("B,expected", [
@@ -278,15 +283,25 @@ def test_auto_policy_prefill_vs_decode_same_engine():
 
 def test_all_registered_kernels_agree_with_oracle():
     """Every KernelSpec's compute path matches the jnp oracle (Pallas
-    paths under interpret=True on this CPU container)."""
+    paths under interpret=True on this CPU container; sharded *_ep specs
+    through serve_topk_sharded on a host mesh over whatever devices this
+    process has — the 8-fake-device CI job gives them a real split)."""
     from repro.core import dssoftmax as ds
-    from repro.kernels.registry import kernel_names
+    from repro.kernels.registry import get_spec, kernel_names
+    from repro.launch.mesh import make_host_mesh
 
     params, table = _grouped_fixture(jnp.float32)
     h = jax.random.normal(jax.random.PRNGKey(1), (16, 32))
     v_ref, i_ref = ds.serve_topk(params["gate"], table, h, k=8, kernel="jnp")
+    mesh = make_host_mesh()
+    stab = ds.shard_table(table, mesh)
     for name in kernel_names():
-        v, i = ds.serve_topk(params["gate"], table, h, k=8, kernel=name)
+        if get_spec(name).sharded:
+            v, i = ds.serve_topk_sharded(
+                params["gate"], stab, h, k=8, mesh=mesh,
+                kernel=get_spec(name).local_name)
+        else:
+            v, i = ds.serve_topk(params["gate"], table, h, k=8, kernel=name)
         assert np.array_equal(np.asarray(i), np.asarray(i_ref)), name
         # 'pallas' folds g into h before the matmul (g·h)·W vs g·(h·W):
         # same ids, values equal to accumulation-order tolerance.
@@ -302,6 +317,108 @@ def test_fixed_policy_validates_name():
         FixedPolicy("goruped")
 
 
+# ---------------------------------------------------------------------------
+# Sharded specs: feasibility, ICI-bytes term, calibration
+# ---------------------------------------------------------------------------
+
+def test_sharded_specs_feasibility_tracks_ep():
+    """Base specs only at single-device call sites, *_ep specs only at
+    sharded ones — a policy can never hand serve_topk a sharded name or
+    serve_topk_sharded a path that ignores the mesh."""
+    from repro.kernels.registry import KernelContext, get_spec
+
+    flat = KernelContext(B=64, d=128, K=32, v_pad=1024, backend="cpu")
+    shard = KernelContext(B=64, d=128, K=32, v_pad=1024, backend="cpu",
+                          ep=8, ndata=2)
+    for name in ("jnp", "grouped"):
+        assert get_spec(name).feasible(flat)
+        assert not get_spec(name).feasible(shard)
+        assert get_spec(f"{name}_ep").feasible(shard)
+        assert not get_spec(f"{name}_ep").feasible(flat)
+
+
+def test_sharded_spec_costs_local_hbm_plus_ici():
+    """The *_ep HBM model is the base path at the per-device shapes (K/ep
+    experts, B/ndata rows) and the ICI term is exactly the O(B·k) merge —
+    (ep-1) carries of fp32 vals + int32 ids per local row."""
+    from repro.kernels.registry import KernelContext, get_spec
+
+    ctx = KernelContext(B=64, d=128, K=32, v_pad=1024, k=8, backend="cpu",
+                        ep=8, ndata=2)
+    local = ctx.local()
+    assert (local.B, local.K, local.ep, local.ndata) == (32, 4, 1, 1)
+    for name in ("jnp", "grouped"):
+        base, sh = get_spec(name), get_spec(f"{name}_ep")
+        assert sh.bytes_moved(ctx) == base.bytes_moved(local)
+        assert sh.ici_bytes(ctx) == (8 - 1) * 32 * 8 * 8
+        assert base.ici_bytes(ctx) == 0
+    # grouped_ep reads 1/ep of the table per device: far below the flat
+    # grouped path at the same global shapes
+    assert get_spec("grouped_ep").bytes_moved(ctx) < get_spec("grouped").bytes_moved(
+        KernelContext(B=64, d=128, K=32, v_pad=1024, k=8, backend="cpu"))
+
+
+def test_auto_policy_resolves_sharded_call_sites():
+    """ep > 1 call sites resolve to *_ep specs; the B-vs-K crossover logic
+    carries over to the per-device shapes."""
+    from repro.kernels.registry import AutoPolicy, KernelContext
+
+    big = KernelContext(B=2048, d=128, K=32, v_pad=1024, backend="cpu",
+                        ep=8, ndata=1)
+    # B=1 decode: one local row vs K/ep=4 local experts → per-token wins
+    small = KernelContext(B=1, d=128, K=32, v_pad=1024, backend="cpu",
+                          ep=8, ndata=1)
+    assert AutoPolicy().resolve(big) == "grouped_ep"
+    assert AutoPolicy().resolve(small) == "jnp_ep"
+
+
+def test_auto_policy_calibration_overrides_bytes_tie():
+    """Measured µs/byte flips a selection the bytes model alone would
+    make: if the grouped path's measured read rate is far worse than the
+    per-token path's, a near-crossover call site goes per-token."""
+    from repro.kernels.registry import AutoPolicy, KernelContext, get_spec
+
+    ctx = KernelContext(B=64, d=128, K=32, v_pad=1024, backend="cpu")
+    assert AutoPolicy().resolve(ctx) == "grouped"  # bytes model: grouped wins
+    ratio = get_spec("jnp").bytes_moved(ctx) / get_spec("grouped").bytes_moved(ctx)
+    calib = {("cpu", "jnp"): 1.0, ("cpu", "grouped"): 2.0 * ratio}
+    assert AutoPolicy(calibration=calib).resolve(ctx) == "jnp"
+    # incomplete calibration (one path missing) falls back to modeled bytes
+    assert AutoPolicy(calibration={("cpu", "jnp"): 1.0}).resolve(ctx) == "grouped"
+
+
+def test_load_bench_calibration_roundtrip(tmp_path):
+    """load_bench_calibration: median µs/byte per (backend, path) from a
+    sweep file; absent/empty files mean 'stay on modeled bytes'."""
+    import json
+
+    from repro.kernels.registry import load_bench_calibration
+
+    p = tmp_path / "BENCH_serve_topk.json"
+    rows = [
+        {"path": "jnp", "us": 100.0, "bytes_model": 1000},
+        {"path": "jnp", "us": 300.0, "bytes_model": 1000},
+        {"path": "jnp", "us": 200.0, "bytes_model": 1000},
+        {"path": "grouped", "us": 50.0, "bytes_model": 1000},
+        {"path": "pallas", "us": None, "bytes_model": 1000},  # skipped row
+    ]
+    p.write_text(json.dumps({"config": {"backend": "cpu"}, "rows": rows}))
+    calib = load_bench_calibration(str(p))
+    assert calib[("cpu", "jnp")] == pytest.approx(0.2)   # median of the three
+    assert calib[("cpu", "grouped")] == pytest.approx(0.05)
+    assert ("cpu", "pallas") not in calib
+    assert load_bench_calibration(str(tmp_path / "missing.json")) is None
+
+
+def test_serve_topk_rejects_sharded_kernel_without_mesh():
+    from repro.core import dssoftmax as ds
+
+    params, table = _grouped_fixture(jnp.float32)
+    h = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    with pytest.raises(ValueError, match="serve_topk_sharded"):
+        ds.serve_topk(params["gate"], table, h, k=4, kernel="grouped_ep")
+
+
 def test_pack_experts_rejects_truncating_pad():
     """pad smaller than the largest expert used to silently truncate
     surviving rows at idx[:v_pad]; it must raise instead."""
@@ -312,6 +429,30 @@ def test_pack_experts_rejects_truncating_pad():
     params, state = ds.init(jax.random.PRNGKey(0), 8, 64, cfg)  # all 64 survive
     with pytest.raises(ValueError, match="truncate"):
         ds.pack_experts(params, state, pad=32)
+
+
+def test_pack_experts_error_names_offending_experts():
+    """The error must say WHICH experts exceed pad and by how many rows
+    (not just the max), so an operator can size serve_pad from the
+    message alone."""
+    from repro.configs.base import DSSoftmaxConfig
+    from repro.core import dssoftmax as ds
+
+    cfg = DSSoftmaxConfig(num_experts=4)
+    params, state = ds.init(jax.random.PRNGKey(0), 8, 64, cfg)
+    # expert 1 keeps 40 rows, expert 3 keeps 33, others keep 8
+    mask = np.zeros((4, 64), bool)
+    mask[0, :8] = mask[2, :8] = True
+    mask[1, :40] = True
+    mask[3, :33] = True
+    state = ds.DSState(mask=jnp.asarray(mask))
+    with pytest.raises(ValueError) as ei:
+        ds.pack_experts(params, state, pad=32)
+    msg = str(ei.value)
+    assert "expert 1: 40 rows" in msg
+    assert "expert 3: 33 rows" in msg
+    assert "2/4 experts" in msg
+    assert "expert 0" not in msg and "expert 2" not in msg
 
 
 def test_dss_topk_grouped_all_pruned_expert():
