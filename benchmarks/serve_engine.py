@@ -25,6 +25,11 @@ Metrics written to ``BENCH_serve_engine.json``:
                          lengths (1 proves every length shares one
                          compiled chunked prefill; whole-prompt prefill
                          pays one XLA compile per distinct length).
+* ``param_modes``      — FSDP-stored vs replicated backbone weights under
+                         one mesh: peak per-device resident param bytes
+                         (the FSDP memory ceiling, ~ndata× lower on the
+                         sharded leaves), tokens/s, and a token-identity
+                         assert between the modes.
 """
 from __future__ import annotations
 
@@ -171,6 +176,79 @@ def run_sharded(fast: bool) -> dict:
     return out
 
 
+def run_param_modes(fast: bool) -> dict:
+    """FSDP-stored vs replicated serving weights on one mesh: the headline
+    column is ``param_bytes_per_device`` (the resident memory ceiling —
+    FSDP divides the sharded leaves by the data-axis width while staying
+    token-identical); tokens/s tracks the per-layer gather overhead on
+    fake devices (CPU wall clock — the wire-cost model in ROADMAP.md is
+    the TPU story)."""
+    from repro.distributed.sharding import tree_shard_bytes
+    from repro.launch.mesh import parse_mesh
+
+    if fast:
+        n_requests, n_slots = 6, 2
+        prompt_lens, max_new, vocab = (4, 7, 12), (3, 6), 512
+    else:
+        n_requests, n_slots = 16, 4
+        prompt_lens, max_new, vocab = (8, 16, 31), (8, 16), 2048
+    ndev = len(jax.devices())
+    meshspec = "4x2" if ndev >= 8 else ("2x1" if ndev >= 2 else "1x1")
+    mesh = parse_mesh(meshspec)
+    cfg = reduce_config(get_config("qwen2-1.5b"), vocab=vocab)
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    proto = [(rng.randint(0, vocab, int(rng.choice(prompt_lens))).astype(np.int32),
+              int(rng.choice(max_new))) for _ in range(n_requests)]
+    out, ref_tokens = {}, None
+    for pm in ("replicated", "fsdp"):
+        session = ServeSession(
+            bundle, params, ds_state, n_slots=n_slots,
+            max_seq_len=max(prompt_lens) + max(max_new), mesh=mesh,
+            param_mode=pm,
+        )
+        # warmup compiles off the clock — whole-prompt prefill lowers once
+        # per distinct length, so warm EVERY length or tokens_per_s
+        # measures XLA compiles instead of serving throughput
+        session.run([Request(prompt=np.zeros(S, np.int32),
+                             sampling=SamplingParams(max_new_tokens=2))
+                     for S in prompt_lens])
+        session.requests.clear()
+        reqs = [Request(prompt=p, sampling=SamplingParams(max_new_tokens=m))
+                for p, m in proto]
+        t0 = time.perf_counter()
+        session.run(reqs)
+        wall = time.perf_counter() - t0
+        toks = [r.out_tokens for r in reqs]
+        if ref_tokens is None:
+            ref_tokens = toks
+        assert toks == ref_tokens, f"param_mode={pm} diverged from replicated"
+        n_tok = sum(len(t) for t in toks)
+        out[pm] = {
+            "mesh": meshspec,
+            "param_bytes_per_device": tree_shard_bytes(session.params),
+            "tokens": n_tok,
+            "wall_s": wall,
+            "tokens_per_s": n_tok / wall,
+            "decode_compiles": session._decode_fn._cache_size(),
+        }
+        assert out[pm]["decode_compiles"] == 1
+    rep, fs = (out["replicated"]["param_bytes_per_device"],
+               out["fsdp"]["param_bytes_per_device"])
+    out["fsdp"]["param_bytes_ratio"] = rep / fs
+    ndata = mesh.shape["data"]
+    assert fs <= rep, "fsdp must never grow the per-device footprint"
+    if ndata > 1:
+        # ~ndata× on the sharded leaves (norm scales/biases replicate)
+        assert rep / fs > 0.7 * ndata, (rep, fs, ndata)
+    print(f"# param modes ({meshspec}): replicated {rep/1e6:.2f} MB/device vs "
+          f"fsdp {fs/1e6:.2f} MB/device ({rep/fs:.2f}x, token-identical; "
+          f"{out['fsdp']['tokens_per_s']:.1f} vs "
+          f"{out['replicated']['tokens_per_s']:.1f} tok/s)")
+    return out
+
+
 def main():
     if FAST:
         n_requests, n_slots, rate = 10, 2, 50.0
@@ -249,6 +327,7 @@ def main():
         "slot_reuse": (session.stats["n_admitted"] - base["n_admitted"]) / n_slots,
         "ssm_hybrid_chunked": run_ssm_hybrid_chunked(FAST),
         "sharded": run_sharded(FAST),
+        "param_modes": run_param_modes(FAST),
     }
     assert all(r.done for r in session.requests)
     assert results["admits"] == n_requests

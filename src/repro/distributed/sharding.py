@@ -22,6 +22,7 @@ import re
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
@@ -99,11 +100,48 @@ def param_pspec(path: str, ndim: int) -> P:
     return P(*((None,) * ndim))
 
 
+def _fitted_pspec(path: str, shape: tuple, mesh: Mesh,
+                  keep_axes: Optional[tuple] = None) -> P:
+    """:func:`param_pspec` validated against the ACTUAL leaf shape.
+
+    Per dim, a rule axis survives only if it exists on the mesh, is wider
+    than 1 (a size-1 axis is replication GSPMD would canonicalize away,
+    breaking pinned-sharding round-trips), and divides the dim exactly —
+    otherwise that dim falls back to replicated, so the resulting
+    ``NamedSharding`` is always valid at ``jax.device_put`` time.
+    ``keep_axes`` additionally restricts which mesh axes may be used
+    (serving FSDP storage: ``('data',)`` only — the ``model`` axis belongs
+    to the expert-parallel table).
+    """
+    spec = param_pspec(path, len(shape))
+    out = []
+    for dim, ax in zip(shape, spec):
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(
+            a for a in axes
+            if a is not None and a in mesh.axis_names
+            and (keep_axes is None or a in keep_axes)
+            and mesh.shape[a] > 1
+        )
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if not axes or dim % n != 0:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
 def param_shardings(mesh: Mesh, params: Any) -> Any:
-    """NamedSharding tree matching ``params`` (works on ShapeDtypeStructs)."""
+    """NamedSharding tree matching ``params`` (works on ShapeDtypeStructs).
+
+    Rule axes that don't divide a leaf's dim (or are absent from the mesh)
+    fall back to replication for that dim, never an error at placement
+    time."""
 
     def leaf(path, x):
-        return NamedSharding(mesh, param_pspec(path, len(x.shape)))
+        return NamedSharding(mesh, _fitted_pspec(path, tuple(x.shape), mesh))
 
     return map_with_path(leaf, params)
 
@@ -235,3 +273,163 @@ def serve_cache_shardings(mesh: Mesh, cfg: ModelConfig, cache: Any,
 def topk_out_shardings(mesh: Mesh, global_batch: int):
     b = batch_pspec(mesh, global_batch, 1)
     return NamedSharding(mesh, b)
+
+
+# ---------------------------------------------------------------------------
+# Serving-side FSDP parameter storage + per-layer just-in-time gather
+# ---------------------------------------------------------------------------
+
+def serve_param_pspec(path: str, shape: tuple, mesh: Mesh) -> P:
+    """FSDP *storage* spec for serving weights: the ``data`` axis only.
+
+    Serving compute is replicated over ``data`` (every device steps every
+    resident slot's backbone math bit-identically after the per-layer
+    gather), so the ``data`` axis is pure storage capacity — each leaf
+    keeps the ``data`` entries of its train rule and drops ``model``
+    (reserved for the expert-parallel :class:`ServeTable`) and ``pod``.
+    Dims the data axis doesn't divide fall back to replicated, so the
+    sharding is always valid at ``jax.device_put`` time.
+    """
+    return _fitted_pspec(path, tuple(shape), mesh, keep_axes=("data",))
+
+
+def serve_param_shardings(mesh: Mesh, params: Any) -> Any:
+    """NamedSharding tree for FSDP-stored serving weights (works on
+    ShapeDtypeStructs): per-device resident bytes drop ~``ndata``× on the
+    sharded leaves; :class:`ServeParamGather` reconstructs full layers
+    just in time inside the decode/prefill step."""
+
+    def leaf(path, x):
+        return NamedSharding(mesh, serve_param_pspec(path, tuple(x.shape), mesh))
+
+    return map_with_path(leaf, params)
+
+
+class ServeParamGather:
+    """Per-layer just-in-time all-gather of FSDP-stored serving weights.
+
+    Params live sharded over the mesh's ``data`` axis
+    (:func:`serve_param_shardings`); model code calls back into this
+    object to materialize exactly the weights it is about to consume:
+
+    * ``layer(key, lp)``  — one scanned layer's slice, gathered inside the
+      ``lax.scan`` body, so the full copy of layer *i* exists only while
+      layer *i* runs (XLA's scheduler overlaps the loop-body collective
+      with layer *i-1*'s compute — the gathered stack is never resident
+      at once);
+    * ``full(key, sub)``  — a non-stacked subtree (head gate, hybrid's
+      shared attention block), gathered at its single use site;
+    * ``rows(key, table, ids)`` — row lookup from a d-sharded ``(N, d)``
+      table (embeddings / learned positions): each shard takes its d-slice
+      of the rows and only the O(rows·d) activation crosses the wire —
+      the full table is NEVER materialized.
+
+    Wire-cost model per decode/prefill step: ``Σ_sharded-leaves
+    (1 - 1/ndata)·bytes(leaf)`` over the data axis — the same bytes a
+    replicated store would read from local HBM, traded for O(params/ndata)
+    resident footprint. Every gather is ``tiled`` concatenation along the
+    stored dim, so reconstructed weights are bit-identical and serving
+    outputs match the replicated session token-for-token.
+    """
+
+    def __init__(self, mesh: Mesh, params: Any):
+        from repro.utils.tree import tree_paths
+
+        self.mesh = mesh
+        flat, _ = jax.tree_util.tree_flatten(params)
+        self._spec = {
+            p: serve_param_pspec(p, tuple(x.shape), mesh)
+            for p, x in zip(tree_paths(params), flat)
+        }
+
+    # -- internals ----------------------------------------------------------
+
+    def _specs_for(self, prefix: str, tree: Any, drop_leading: bool):
+        from repro.utils.tree import tree_paths
+
+        paths = tree_paths(tree)
+        specs = []
+        for p in paths:
+            full_path = f"{prefix}/{p}" if p else prefix
+            s = self._spec[full_path]
+            if drop_leading:
+                s = P(*tuple(s)[1:])
+            specs.append(s)
+        return specs
+
+    def _gather(self, prefix: str, tree: Any, drop_leading: bool) -> Any:
+        from jax.experimental.shard_map import shard_map
+
+        specs = self._specs_for(prefix, tree, drop_leading)
+        if all(all(ax is None for ax in s) for s in specs):
+            return tree  # fully replicated (trivial data axis / small leaves)
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+
+        def inner(*leaves):
+            out = []
+            for x, s in zip(leaves, specs):
+                for dim, ax in enumerate(s):
+                    if ax is None:
+                        continue
+                    for a in (ax if isinstance(ax, tuple) else (ax,)):
+                        x = jax.lax.all_gather(x, a, axis=dim, tiled=True)
+                out.append(x)
+            return tuple(out)
+
+        out = shard_map(
+            inner, mesh=self.mesh,
+            in_specs=tuple(specs),
+            out_specs=tuple(P(*([None] * len(s))) for s in specs),
+            check_rep=False,
+        )(*flat)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # -- model-facing API ----------------------------------------------------
+
+    def layer(self, key: str, layer_params: Any) -> Any:
+        """Gather ONE scanned layer's slice of the stacked ``params[key]``
+        collection (leading layer axis already stripped by the scan)."""
+        return self._gather(key, layer_params, drop_leading=True)
+
+    def full(self, key: str, sub: Any) -> Any:
+        """Gather a non-stacked subtree/leaf ``params[key]`` whole (head
+        gate, shared attention block — one layer's worth of weights)."""
+        return self._gather(key, sub, drop_leading=False)
+
+    def rows(self, key: str, table: jax.Array, ids: jax.Array) -> jax.Array:
+        """``table[ids]`` from a ``(N, d)`` table stored d-sharded: local
+        take + one O(ids·d) all-gather of the *activation* rows."""
+        from jax.experimental.shard_map import shard_map
+
+        path = key if key in self._spec else f"{key}/table"
+        spec = self._spec[path]
+        d_ax = tuple(spec)[-1]
+        if any(ax is not None for ax in tuple(spec)[:-1]):
+            # row axis sharded (no serving rule does this): a local take
+            # with global ids would be wrong — gather the table whole.
+            return jnp.take(self._gather(path, table, False), ids, axis=0)
+        if d_ax is None:
+            return jnp.take(table, ids, axis=0)
+
+        def inner(tbl, tok):
+            rows = jnp.take(tbl, tok, axis=0)
+            return jax.lax.all_gather(rows, d_ax, axis=-1, tiled=True)
+
+        return shard_map(
+            inner, mesh=self.mesh,
+            in_specs=(spec, P(*([None] * ids.ndim))),
+            out_specs=P(*([None] * (ids.ndim + 1))),
+            check_rep=False,
+        )(table, ids)
+
+
+def tree_shard_bytes(tree: Any) -> int:
+    """Per-device resident bytes of a committed pytree (each leaf counted
+    at its addressable shard shape — the FSDP memory-ceiling metric)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        shape = tuple(x.shape)
+        if getattr(x, "sharding", None) is not None:
+            shape = x.sharding.shard_shape(shape)
+        total += int(np.prod(shape)) * jnp.dtype(x.dtype).itemsize
+    return total

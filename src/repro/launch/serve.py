@@ -33,7 +33,16 @@ def main():
                          "shard over data, the DS expert table over model "
                          "(CPU: set XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N before launch)")
+    ap.add_argument("--param-mode", default="replicated",
+                    choices=("replicated", "fsdp"),
+                    help="fsdp (requires --mesh): store backbone weights "
+                         "sharded over the mesh's data axis and gather "
+                         "them per layer, just in time, inside the step "
+                         "(~data-way lower per-device param bytes, "
+                         "token-identical output)")
     args = ap.parse_args()
+    if args.param_mode == "fsdp" and not args.mesh:
+        ap.error("--param-mode fsdp requires --mesh")
 
     mesh = None
     if args.mesh:
@@ -55,6 +64,7 @@ def main():
         max_seq_len=smax,
         kernel=args.kernel,
         mesh=mesh,
+        param_mode=args.param_mode,
         prefill_chunk=args.prefill_chunk,
     )
     rng = np.random.RandomState(0)

@@ -79,7 +79,7 @@ def init_params(key, cfg: ModelConfig, max_target_len: int = 4096):
     return params, ds_state
 
 
-def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+def encode(params, cfg: ModelConfig, frames: jax.Array, gather=None) -> jax.Array:
     """frames: (B, F, d) stub embeddings → encoder memory (B, F, d)."""
     B, F, _ = frames.shape
     x = frames + sinusoidal(F, cfg.d_model).astype(frames.dtype)[None]
@@ -88,6 +88,8 @@ def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
     from repro.distributed.hints import constrain_residual
 
     def body(carry, lp):
+        if gather is not None:
+            lp = gather.layer("enc_layers", lp)
         h, _ = attention_block(lp["attn"], cfg, layernorm(lp["ln1"], carry), positions,
                                causal=False)
         x2 = carry + h
@@ -104,14 +106,20 @@ def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
     return layernorm(params["enc_norm"], x)
 
 
-def _decoder_hidden(params, cfg: ModelConfig, tokens, memory):
+def _decoder_hidden(params, cfg: ModelConfig, tokens, memory, gather=None):
     B, S = tokens.shape
-    x = embed(params["embed"], tokens) + params["pos_embed"][:S][None]
+    if gather is not None:
+        pe = gather.rows("pos_embed", params["pos_embed"], jnp.arange(S))
+        x = gather.rows("embed/table", params["embed"]["table"], tokens) + pe[None]
+    else:
+        x = embed(params["embed"], tokens) + params["pos_embed"][:S][None]
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
 
     from repro.distributed.hints import constrain_residual
 
     def body(carry, lp):
+        if gather is not None:
+            lp = gather.layer("dec_layers", lp)
         h, kv = attention_block(
             lp["self_attn"], cfg, layernorm(lp["ln1"], carry), positions
         )
@@ -144,10 +152,10 @@ def train_loss(params, ds_state, cfg: ModelConfig, batch):
 
 
 def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
-            kernel=None, mesh=None):
-    memory = encode(params, cfg, batch["frames"].astype(cfg.jdtype))
+            kernel=None, mesh=None, gather=None):
+    memory = encode(params, cfg, batch["frames"].astype(cfg.jdtype), gather=gather)
     tokens = batch["tokens"]
-    h, (sk, sv) = _decoder_hidden(params, cfg, tokens, memory)
+    h, (sk, sv) = _decoder_hidden(params, cfg, tokens, memory, gather=gather)
 
     # Precompute per-layer cross K/V from memory (decode never re-reads memory).
     def cross_kv(lp):
@@ -157,28 +165,51 @@ def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
         cv = jnp.einsum("bfd,de->bfe", memory, lp["cross_attn"]["wv"]).reshape(B, F, KV, dh)
         return ck, cv
 
-    cks, cvs = jax.vmap(cross_kv)(params["dec_layers"])
+    if gather is not None:
+        # per-layer gather wants a sequential walk, not vmap's all-layers-
+        # at-once weight materialization; only wk/wv are consumed here (the
+        # decoder scan above already gathered the rest of each layer once)
+        def cross_body(_, lp):
+            ca = gather.layer("dec_layers/cross_attn",
+                              {"wk": lp["cross_attn"]["wk"],
+                               "wv": lp["cross_attn"]["wv"]})
+            return (), cross_kv({"cross_attn": ca})
+
+        _, (cks, cvs) = jax.lax.scan(cross_body, (), params["dec_layers"])
+    else:
+        cks, cvs = jax.vmap(cross_kv)(params["dec_layers"])
     vals, ids = heads.head_topk(
         params["head"], ds_state_or_table, cfg, h[:, -1], k,
         embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
+        gather=gather,
     )
     return vals, ids, EncDecCache(self_k=sk, self_v=sv, cross_k=cks, cross_v=cvs)
 
 
 def decode_step(params, serve_table, cfg: ModelConfig, cache: EncDecCache, token, pos, k: int = 8,
-                kernel=None, mesh=None):
+                kernel=None, mesh=None, gather=None):
     """pos: scalar shared position or (B,) per-slot positions (learned
-    absolute position embeddings are gathered per row in the vector case)."""
+    absolute position embeddings are gathered per row in the vector case).
+    ``gather`` serves from FSDP-stored weights (per-layer just-in-time
+    all-gather; embed/pos tables stay sharded, only rows cross the wire)."""
     pos = jnp.asarray(pos)
-    if pos.ndim == 1:
-        pe = jnp.take(params["pos_embed"], pos, axis=0)[:, None]  # (B,1,d)
+    if gather is not None:
+        pe = gather.rows("pos_embed", params["pos_embed"],
+                         pos if pos.ndim == 1 else pos[None])
+        pe = pe[:, None] if pos.ndim == 1 else pe[None]
+        x = gather.rows("embed/table", params["embed"]["table"], token)[:, None, :] + pe
     else:
-        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, axis=0)[None]
-    x = embed(params["embed"], token)[:, None, :] + pe
+        if pos.ndim == 1:
+            pe = jnp.take(params["pos_embed"], pos, axis=0)[:, None]  # (B,1,d)
+        else:
+            pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, axis=0)[None]
+        x = embed(params["embed"], token)[:, None, :] + pe
 
     def body(carry, scanned):
         xc = carry
         lp, sk, sv, ck, cv = scanned
+        if gather is not None:
+            lp = gather.layer("dec_layers", lp)
         h, nk, nv = attention_decode(
             lp["self_attn"], cfg, layernorm(lp["ln1"], xc), sk, sv, pos
         )
@@ -203,5 +234,6 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: EncDecCache, token
     vals, ids = heads.head_topk(
         params["head"], serve_table, cfg, h, k,
         embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
+        gather=gather,
     )
     return vals, ids, EncDecCache(self_k=nk, self_v=nv, cross_k=cache.cross_k, cross_v=cache.cross_v)

@@ -114,6 +114,7 @@ def head_topk(
     embed_table: Optional[jax.Array] = None,
     kernel=None,
     mesh=None,
+    gather=None,
 ):
     """Top-k classes from hidden states h (B, d) → (values, ids) (B, k).
 
@@ -121,8 +122,25 @@ def head_topk(
     ``cfg.ds.serve_kernel``; ``None`` uses the config value ('auto' by
     default — per-call-site selection from static shapes). ``mesh`` routes
     the DS head through the expert-parallel ``serve_topk_sharded`` (experts
-    over the mesh's ``model`` axis, O(B·k) cross-device merge).
+    over the mesh's ``model`` axis, O(B·k) cross-device merge). ``gather``
+    (a :class:`~repro.distributed.sharding.ServeParamGather`) marks the
+    head weights as FSDP-stored: the tiny (K, d) DS gate is gathered here,
+    just in time (the expert rows already live in ``serve_table``); for
+    full-softmax heads the whole (V, d) matmul operand is gathered — the
+    documented wire cost of serving a non-DS head from FSDP storage.
     """
+    if gather is not None:
+        if cfg.head == "ds":
+            # only the tiny (K, d) gate is consumed — the expert rows live
+            # in ``serve_table``; gathering the whole head subtree would
+            # drag the packed-away (K, V, d) experts leaf across the wire
+            head_params = dict(
+                head_params, gate=gather.full("head/gate", head_params["gate"])
+            )
+        else:
+            head_params = gather.full("head", head_params)
+            if cfg.tie_embeddings and embed_table is not None:
+                embed_table = gather.full("embed/table", embed_table)
     if cfg.head == "ds":
         kern = kernel if kernel is not None else cfg.ds.serve_kernel
         if mesh is not None:

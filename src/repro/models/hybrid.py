@@ -79,10 +79,14 @@ def init_params(key, cfg: ModelConfig):
     return params, ds_state
 
 
-def _mamba_scan(cfg, x, stacked, *, with_state: bool):
+def _mamba_scan(cfg, x, stacked, *, with_state: bool, gather=None):
     from repro.distributed.hints import constrain_residual
 
     def body(carry, lp):
+        if gather is not None:
+            # FSDP-stored serving weights: this layer's slice is gathered
+            # inside the loop body, just in time
+            lp = gather.layer("layers", lp)
         if with_state:
             out, (conv, ssm) = mamba2_block(
                 lp["mamba"], cfg, rmsnorm(lp["ln"], carry), return_state=True
@@ -103,18 +107,23 @@ def _tree_slice(tree, a, b):
     return jax.tree.map(lambda t: t[a:b], tree)
 
 
-def forward_hidden(params, cfg: ModelConfig, x, positions, *, collect_state=False):
+def forward_hidden(params, cfg: ModelConfig, x, positions, *, collect_state=False,
+                   gather=None):
     """→ (hidden, aux=0, optional HybridCache pieces)."""
     n_groups, rem = _layout(cfg)
     p = cfg.attn_period if cfg.family == "hybrid" else cfg.n_layers
     states, attn_kv = [], []
     if cfg.family == "hybrid":
+        # the shared block is ONE layer's worth of weights applied n_groups
+        # times — gather it once, not per application
+        sa = params["shared_attn"]
+        if gather is not None:
+            sa = gather.full("shared_attn", sa)
         for gi in range(n_groups):
             grp = _tree_slice(params["layers"], gi * p, (gi + 1) * p)
-            x, st = _mamba_scan(cfg, x, grp, with_state=collect_state)
+            x, st = _mamba_scan(cfg, x, grp, with_state=collect_state, gather=gather)
             if collect_state:
                 states.append(st)
-            sa = params["shared_attn"]
             h, kv = attention_block(sa["attn"], cfg, rmsnorm(sa["ln1"], x), positions)
             x = x + h
             x = x + mlp(sa["mlp"], cfg, rmsnorm(sa["ln2"], x))
@@ -122,11 +131,12 @@ def forward_hidden(params, cfg: ModelConfig, x, positions, *, collect_state=Fals
                 attn_kv.append(kv)
         if rem:
             grp = _tree_slice(params["layers"], n_groups * p, cfg.n_layers)
-            x, st = _mamba_scan(cfg, x, grp, with_state=collect_state)
+            x, st = _mamba_scan(cfg, x, grp, with_state=collect_state, gather=gather)
             if collect_state:
                 states.append(st)
     else:
-        x, st = _mamba_scan(cfg, x, params["layers"], with_state=collect_state)
+        x, st = _mamba_scan(cfg, x, params["layers"], with_state=collect_state,
+                            gather=gather)
         if collect_state:
             states.append(st)
     h = rmsnorm(params["final_norm"], x)
@@ -159,15 +169,20 @@ def train_loss(params, ds_state, cfg: ModelConfig, batch):
 
 
 def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
-            kernel=None, mesh=None):
+            kernel=None, mesh=None, gather=None):
     tokens = batch["tokens"]
     B, S = tokens.shape
-    x = embed(params["embed"], tokens)
+    if gather is not None:
+        x = gather.rows("embed/table", params["embed"]["table"], tokens)
+    else:
+        x = embed(params["embed"], tokens)
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-    h, cache = forward_hidden(params, cfg, x, positions, collect_state=True)
+    h, cache = forward_hidden(params, cfg, x, positions, collect_state=True,
+                              gather=gather)
     vals, ids = heads.head_topk(
         params["head"], ds_state_or_table, cfg, h[:, -1], k,
         embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
+        gather=gather,
     )
     return vals, ids, cache
 
@@ -208,7 +223,8 @@ def _group_walk(params, cfg: ModelConfig, cache: HybridCache, x, mamba_body, att
 
 
 def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
-                  tokens, pos0, n_valid, k: int = 8, kernel=None, mesh=None):
+                  tokens, pos0, n_valid, k: int = 8, kernel=None, mesh=None,
+                  gather=None):
     """State-passing chunked prefill: one prompt chunk against an existing
     :class:`HybridCache` (mirrors ``transformer.prefill_chunk``).
 
@@ -225,17 +241,25 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
     only the final chunk's top-k is meaningful.
     """
     B, C = tokens.shape
-    x = embed(params["embed"], tokens)  # (B, C, d)
+    if gather is not None:
+        x = gather.rows("embed/table", params["embed"]["table"], tokens)
+        sa_full = gather.full("shared_attn", params["shared_attn"]) \
+            if cfg.family == "hybrid" else None
+    else:
+        x = embed(params["embed"], tokens)  # (B, C, d)
+        sa_full = params.get("shared_attn")
 
     def mamba_body(carry, scanned):
         lp, conv, ssm = scanned
+        if gather is not None:
+            lp = gather.layer("layers", lp)
         out, nconv, nssm = mamba2_prefill_chunk(
             lp["mamba"], cfg, rmsnorm(lp["ln"], carry), conv, ssm, n_valid
         )
         return carry + out, (nconv, nssm)
 
     def attn_op(xc, gi):
-        sa = params["shared_attn"]
+        sa = sa_full
         h, nk, nv = attention_prefill_chunk(
             sa["attn"], cfg, rmsnorm(sa["ln1"], xc),
             cache.attn_k[gi], cache.attn_v[gi], pos0,
@@ -250,24 +274,34 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
     vals, ids = heads.head_topk(
         params["head"], serve_table, cfg, h_last, k,
         embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
+        gather=gather,
     )
     return vals, ids, new_cache
 
 
 def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token, pos, k: int = 8,
-                kernel=None, mesh=None):
+                kernel=None, mesh=None, gather=None):
     """pos: scalar shared position or (B,) per-slot positions (the SSM/conv
     state update is position-free; only the periodic attention blocks and
-    rope consume it)."""
-    x = embed(params["embed"], token)[:, None, :]
+    rope consume it). ``gather`` serves from FSDP-stored weights (per-layer
+    just-in-time all-gather; the shared attention block gathers once)."""
+    if gather is not None:
+        x = gather.rows("embed/table", params["embed"]["table"], token)[:, None, :]
+        sa_full = gather.full("shared_attn", params["shared_attn"]) \
+            if cfg.family == "hybrid" else None
+    else:
+        x = embed(params["embed"], token)[:, None, :]
+        sa_full = params.get("shared_attn")
 
     def mamba_body(carry, scanned):
         lp, conv, ssm = scanned
+        if gather is not None:
+            lp = gather.layer("layers", lp)
         out, nconv, nssm = mamba2_decode(lp["mamba"], cfg, rmsnorm(lp["ln"], carry), conv, ssm)
         return carry + out, (nconv, nssm)
 
     def attn_op(xc, gi):
-        sa = params["shared_attn"]
+        sa = sa_full
         h, nk, nv = attention_decode(
             sa["attn"], cfg, rmsnorm(sa["ln1"], xc),
             cache.attn_k[gi], cache.attn_v[gi], pos,
@@ -281,5 +315,6 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token
     vals, ids = heads.head_topk(
         params["head"], serve_table, cfg, h, k,
         embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
+        gather=gather,
     )
     return vals, ids, new_cache

@@ -53,34 +53,39 @@ def build(cfg: ModelConfig) -> ModelBundle:
     # ``kernel`` (None | registered name | policy name | KernelPolicy)
     # overrides the DS head's serve path per call; policies resolve from
     # each call site's static shapes, so prefill and decode may lower to
-    # different kernels inside one engine.
+    # different kernels inside one engine. ``gather`` (a
+    # ``repro.distributed.sharding.ServeParamGather``) serves from
+    # FSDP-stored weights with per-layer just-in-time all-gathers.
     chunk = None
     if fam in ("dense", "moe", "vlm"):
         chunk = lambda p, t, cache, tokens, pos0, n_valid, k=8, kernel=None, \
-            mesh=None: (
+            mesh=None, gather=None: (
             transformer.prefill_chunk(
                 p, t, cfg, cache, tokens, pos0, n_valid, k=k, kernel=kernel,
-                mesh=mesh,
+                mesh=mesh, gather=gather,
             )
         )
     elif fam in ("ssm", "hybrid"):
         chunk = lambda p, t, cache, tokens, pos0, n_valid, k=8, kernel=None, \
-            mesh=None: (
+            mesh=None, gather=None: (
             hybrid.prefill_chunk(
                 p, t, cfg, cache, tokens, pos0, n_valid, k=k, kernel=kernel,
-                mesh=mesh,
+                mesh=mesh, gather=gather,
             )
         )
     return ModelBundle(
         cfg=cfg,
         init=init,
         train_loss=lambda p, s, batch: mod.train_loss(p, s, cfg, batch),
-        prefill=lambda p, t, batch, k=8, kernel=None, mesh=None: mod.prefill(
-            p, t, cfg, batch, k=k, kernel=kernel, mesh=mesh
-        ),
-        decode_step=lambda p, t, cache, tok, pos, k=8, kernel=None, mesh=None:
+        prefill=lambda p, t, batch, k=8, kernel=None, mesh=None, gather=None:
+            mod.prefill(
+                p, t, cfg, batch, k=k, kernel=kernel, mesh=mesh, gather=gather
+            ),
+        decode_step=lambda p, t, cache, tok, pos, k=8, kernel=None, mesh=None, \
+            gather=None:
             mod.decode_step(
-                p, t, cfg, cache, tok, pos, k=k, kernel=kernel, mesh=mesh
+                p, t, cfg, cache, tok, pos, k=k, kernel=kernel, mesh=mesh,
+                gather=gather
             ),
         prefill_chunk=chunk,
     )

@@ -90,11 +90,17 @@ def forward_hidden(params, cfg: ModelConfig, x: jax.Array, positions) -> tuple[j
     return rmsnorm(params["final_norm"], x), jnp.sum(auxs)
 
 
-def embed_inputs(params, cfg: ModelConfig, batch):
+def embed_inputs(params, cfg: ModelConfig, batch, gather=None):
     """Token (+ optional vision-prefix) embedding. Returns (x, positions,
-    label_mask) where label_mask marks CE-able positions (text only)."""
+    label_mask) where label_mask marks CE-able positions (text only).
+    ``gather`` (FSDP-stored serving weights) swaps the lookup for a
+    sharded take + O(B·S·d) activation gather — the full table stays
+    sharded."""
     tokens = batch["tokens"]
-    tok_emb = embed(params["embed"], tokens)
+    if gather is not None:
+        tok_emb = gather.rows("embed/table", params["embed"]["table"], tokens)
+    else:
+        tok_emb = embed(params["embed"], tokens)
     if cfg.vision is not None and "patches" in batch:
         patches = batch["patches"].astype(tok_emb.dtype)  # (B, P, d) stub frontend
         x = jnp.concatenate([patches, tok_emb], axis=1)
@@ -138,17 +144,22 @@ def train_loss(params, ds_state, cfg: ModelConfig, batch):
 # ---------------------------------------------------------------------------
 
 def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
-            kernel=None, mesh=None):
+            kernel=None, mesh=None, gather=None):
     """Run the full prompt; returns (topk_vals, topk_ids, DecodeCache).
 
     The cache is built to ``S_max = prompt length`` (the dry-run decode cells
     size it to seq_len per the assignment). ``kernel`` overrides the DS
     head's serve path (name or KernelPolicy; None => cfg.ds.serve_kernel).
+    ``gather`` serves from FSDP-stored weights: each scanned layer's slice
+    is all-gathered inside the loop body, just in time, so the full stack
+    is never resident at once.
     """
-    x, positions, _ = embed_inputs(params, cfg, batch)
+    x, positions, _ = embed_inputs(params, cfg, batch, gather=gather)
 
     def body(carry, layer_params):
         xc = carry
+        if gather is not None:
+            layer_params = gather.layer("layers", layer_params)
         h, (kv_k, kv_v) = attention_block(
             layer_params["attn"], cfg, rmsnorm(layer_params["ln1"], xc), positions
         )
@@ -165,12 +176,14 @@ def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
     vals, ids = heads.head_topk(
         params["head"], ds_state_or_table, cfg, h, k,
         embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
+        gather=gather,
     )
     return vals, ids, DecodeCache(k=ck, v=cv)
 
 
 def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
-                  tokens, pos0, n_valid, k: int = 8, kernel=None, mesh=None):
+                  tokens, pos0, n_valid, k: int = 8, kernel=None, mesh=None,
+                  gather=None):
     """Prefill one chunk of a prompt into an existing decode cache.
 
     tokens: (B, C) int32 at positions ``pos0 .. pos0+C-1`` (B=1 in the
@@ -187,11 +200,16 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
     tokens per expert-capacity computed over the chunk rather than the
     full prompt, so chunked and whole-prompt prefill can differ there.
     """
-    x = embed(params["embed"], tokens)  # (B, C, d)
+    if gather is not None:
+        x = gather.rows("embed/table", params["embed"]["table"], tokens)
+    else:
+        x = embed(params["embed"], tokens)  # (B, C, d)
 
     def body(carry, scanned):
         xc = carry
         layer_params, ck, cv = scanned
+        if gather is not None:
+            layer_params = gather.layer("layers", layer_params)
         h, nk, nv = attention_prefill_chunk(
             layer_params["attn"], cfg, rmsnorm(layer_params["ln1"], xc), ck, cv, pos0
         )
@@ -210,20 +228,27 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
     vals, ids = heads.head_topk(
         params["head"], serve_table, cfg, h_last, k,
         embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
+        gather=gather,
     )
     return vals, ids, DecodeCache(k=nk, v=nv)
 
 
 def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token, pos, k: int = 8,
-                kernel=None, mesh=None):
+                kernel=None, mesh=None, gather=None):
     """One-token decode. token: (B,) int32; pos: scalar position shared by
     the batch, or (B,) int32 per-slot positions (continuous batching).
-    Returns (vals, ids, new_cache)."""
-    x = embed(params["embed"], token)[:, None, :]  # (B,1,d)
+    Returns (vals, ids, new_cache). ``gather`` serves from FSDP-stored
+    weights (per-layer just-in-time all-gather inside the scan body)."""
+    if gather is not None:
+        x = gather.rows("embed/table", params["embed"]["table"], token)[:, None, :]
+    else:
+        x = embed(params["embed"], token)[:, None, :]  # (B,1,d)
 
     def body(carry, scanned):
         xc = carry
         layer_params, ck, cv = scanned
+        if gather is not None:
+            layer_params = gather.layer("layers", layer_params)
         h, nk, nv = attention_decode(
             layer_params["attn"], cfg, rmsnorm(layer_params["ln1"], xc), ck, cv, pos
         )
@@ -240,5 +265,6 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token
     vals, ids = heads.head_topk(
         params["head"], serve_table, cfg, h, k,
         embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
+        gather=gather,
     )
     return vals, ids, DecodeCache(k=nk, v=nv)

@@ -38,6 +38,11 @@ places its slot axis over ``data``/``pod``, and every head call runs
 ``core.dssoftmax.serve_topk_sharded`` (gating replicated, owner-local
 retrieval, one O(B·k) all-gather merge) — token-identical to the
 single-device session with the decode step still compiled exactly once.
+``param_mode='fsdp'`` additionally stores the backbone weights sharded
+over the ``data`` axis and gathers them per layer, just in time, inside
+the step (``distributed.sharding.ServeParamGather``) — the full-stack
+per-device memory ceiling drops from O(params) to O(params/ndata) while
+outputs stay bit-identical.
 
 ``ServeEngine`` remains as a thin deprecated shim over ``ServeSession``
 for the existing examples/benchmarks.
@@ -176,6 +181,17 @@ class ServeSession:
             retrieval, one O(B·k) all-gather merge. The decode step is
             still lowered ONCE (the mesh is a trace-time constant), and
             outputs are token-identical to the single-device session.
+        param_mode: how backbone weights live on the mesh.
+            ``'replicated'`` (default) keeps a full copy per device;
+            ``'fsdp'`` (requires ``mesh=``) stores every param sharded
+            over the mesh's ``data`` axis
+            (``distributed.sharding.serve_param_shardings``) and gathers
+            each layer's weights just in time inside the decode/prefill
+            step (``ServeParamGather``: layer *i*'s all-gather overlaps
+            layer *i-1*'s compute; the full stack is never resident).
+            Per-device resident param bytes drop ~``ndata``×; outputs
+            stay token-identical and the decode step still compiles
+            exactly once (param shardings are pinned every step).
         prefill_chunk: if set, prompts prefill through
             ``bundle.prefill_chunk`` in (1, C) chunks — one compile for
             all prompt lengths (every family except encdec).
@@ -184,7 +200,8 @@ class ServeSession:
 
     def __init__(self, bundle: ModelBundle, params, ds_state_or_table, *,
                  n_slots: int = 8, max_seq_len: int = 256, k: int = 8,
-                 kernel=None, mesh=None, prefill_chunk: Optional[int] = None,
+                 kernel=None, mesh=None, param_mode: str = "replicated",
+                 prefill_chunk: Optional[int] = None,
                  stream_cb: Optional[Callable[[Request, int], None]] = None):
         cfg = bundle.cfg
         if cfg.family == "encdec":
@@ -201,9 +218,16 @@ class ServeSession:
             )
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if param_mode not in ("replicated", "fsdp"):
+            raise ValueError(
+                f"param_mode must be 'replicated' or 'fsdp', got {param_mode!r}"
+            )
+        if param_mode == "fsdp" and mesh is None:
+            raise ValueError("param_mode='fsdp' requires mesh=")
         self.bundle = bundle
         self.cfg = cfg
         self.params = params
+        self.param_mode = param_mode
         self.n_slots = n_slots
         self.max_seq_len = max_seq_len
         self.k = k
@@ -227,6 +251,27 @@ class ServeSession:
         else:
             self.table = ds_state_or_table
         self._kernel = kernel
+
+        self._gather = None
+        self._param_shardings = None
+        if param_mode == "fsdp":
+            # FSDP storage AFTER table packing (pack_experts reads the
+            # replicated head): every backbone leaf shards over the data
+            # axis where divisible, and the jitted steps gather per layer
+            from repro.distributed.sharding import (
+                ServeParamGather,
+                serve_param_shardings,
+                tree_shard_bytes,
+            )
+
+            self._param_shardings = serve_param_shardings(mesh, params)
+            self.params = params = jax.device_put(params, self._param_shardings)
+            self._gather = ServeParamGather(mesh, params)
+            log.info(
+                "fsdp param storage: %.2f MB/device (replicated would be %.2f)",
+                tree_shard_bytes(params) / 1e6,
+                sum(x.nbytes for x in jax.tree.leaves(params)) / 1e6,
+            )
 
         shape = ShapeConfig(name="serve", seq_len=max_seq_len,
                             global_batch=n_slots, kind="decode")
@@ -271,14 +316,27 @@ class ServeSession:
             return jax.tree.map(jax.lax.with_sharding_constraint, cache,
                                 self._cache_shardings)
 
+        def _pin_p(p):
+            # Same fixed-point treatment for FSDP-stored params: pinned
+            # every step so GSPMD canonicalization can never migrate the
+            # storage sharding (and so the per-layer gathers stay the ONLY
+            # collectives touching weights).
+            if self._param_shardings is None:
+                return p
+            return jax.tree.map(jax.lax.with_sharding_constraint, p,
+                                self._param_shardings)
+
         self._prefill_fn = jax.jit(
-            lambda p, t, b: bundle.prefill(p, t, b, k=k, kernel=self._kernel,
-                                           mesh=self.mesh)
+            lambda p, t, b: bundle.prefill(_pin_p(p), t, b, k=k,
+                                           kernel=self._kernel,
+                                           mesh=self.mesh,
+                                           gather=self._gather)
         )
 
         def _decode(p, t, c, tok, pos):
             vals, ids, c = bundle.decode_step(
-                p, t, c, tok, pos, k=k, kernel=self._kernel, mesh=self.mesh
+                _pin_p(p), t, c, tok, pos, k=k, kernel=self._kernel,
+                mesh=self.mesh, gather=self._gather
             )
             return vals, ids, _pin(c)
 
@@ -286,8 +344,8 @@ class ServeSession:
         if prefill_chunk is not None:
             def _chunk(p, t, c, toks, pos0, nv):
                 vals, ids, c = bundle.prefill_chunk(
-                    p, t, c, toks, pos0, nv, k=k, kernel=self._kernel,
-                    mesh=self.mesh
+                    _pin_p(p), t, c, toks, pos0, nv, k=k, kernel=self._kernel,
+                    mesh=self.mesh, gather=self._gather
                 )
                 if self.mesh is not None:
                     c = jax.tree.map(

@@ -2,9 +2,54 @@ import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
-# (the 512-device override belongs ONLY to repro.launch.dryrun).
+# (the 512-device override belongs ONLY to repro.launch.dryrun). The
+# distributed CI job sets XLA_FLAGS=--xla_force_host_platform_device_count=8
+# in its environment BEFORE pytest starts; tests discover the resulting
+# device count through NDEV / needs_devices / make_test_mesh below.
 
 
 @pytest.fixture
 def rng():
     return np.random.RandomState(0)
+
+
+# ---------------------------------------------------------------------------
+# Shared fake-device mesh plumbing (test_serve_sharded / test_serve_fsdp /
+# test_distributed). One place, one skip message: every single-device skip
+# names the exact XLA_FLAGS override and the CI job that provides it.
+# ---------------------------------------------------------------------------
+
+def _ndev() -> int:
+    import jax
+
+    return len(jax.devices())
+
+
+NDEV = _ndev()
+
+_SKIP_HOWTO = (
+    "set XLA_FLAGS=--xla_force_host_platform_device_count={n} before jax "
+    "initializes (the 'test-distributed' CI job does; tier-1 runs 1 device)"
+)
+
+
+def needs_devices(n: int):
+    """Skip marker for tests that need an ``n``-way fake-device split."""
+    return pytest.mark.skipif(
+        NDEV < n,
+        reason=f"needs {n} devices, have {NDEV} — " + _SKIP_HOWTO.format(n=n),
+    )
+
+
+def make_test_mesh(spec: str):
+    """``'DxM'`` / ``'PxDxM'`` → the same mesh ``launch/serve.py --mesh``
+    builds (delegates to ``repro.launch.mesh.parse_mesh``); skips (not
+    errors) when the host has too few devices, with a self-describing
+    reason."""
+    from repro.launch.mesh import parse_mesh
+
+    n = int(np.prod([int(d) for d in spec.split("x")]))
+    if n > NDEV:
+        pytest.skip(f"mesh {spec} needs {n} devices, have {NDEV} — "
+                    + _SKIP_HOWTO.format(n=n))
+    return parse_mesh(spec)

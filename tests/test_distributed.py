@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config
+from conftest import NDEV, make_test_mesh
+from repro.configs import ARCHS, get_config, reduce_config
 from repro.distributed import roofline, sharding
 from repro.distributed.hlo_analysis import analyze_hlo, type_bytes, xla_cost_analysis
 from repro.models import build
@@ -91,9 +92,110 @@ def test_type_bytes_tuple():
 
 
 class _FakeMesh:
+    # Only for pure-pspec logic on meshes too wide to build from local
+    # devices; anything touching NamedSharding uses conftest.make_test_mesh.
     def __init__(self, shape):
         self.shape = shape
         self.axis_names = tuple(shape)
+
+
+# ---------------------------------------------------------------------------
+# param_shardings is total: valid for the ACTUAL leaves of every config
+# ---------------------------------------------------------------------------
+
+_ABSTRACT_CACHE: dict = {}
+
+
+def _abstract_params(arch: str):
+    if arch not in _ABSTRACT_CACHE:
+        _ABSTRACT_CACHE[arch] = build(get_config(arch)).abstract_params()[0]
+    return _ABSTRACT_CACHE[arch]
+
+
+_MESH_SPECS = [s for s in ("1x1", "2x1", "1x2", "2x4", "4x2", "8x1", "1x8",
+                           "2x2x2")
+               if int(np.prod([int(d) for d in s.split("x")])) <= NDEV]
+
+
+def _check_shardings_against_leaves(mesh, params, shardings, serve: bool):
+    from repro.utils.tree import map_with_path
+
+    def leaf(path, x):
+        s = shardings_flat[path]
+        # the device_put-time validity check: shard_shape raises on any
+        # axis that does not divide the dim
+        s.shard_shape(tuple(x.shape))
+        rule = sharding.param_pspec(path, len(x.shape))
+        for dim, (want, got) in enumerate(zip(rule, s.spec)):
+            axes = want if isinstance(want, tuple) else (want,)
+            axes = tuple(a for a in axes if a is not None
+                         and a in mesh.axis_names
+                         and (not serve or a == "data")
+                         and mesh.shape[a] > 1)
+            n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+            if axes and x.shape[dim] % n == 0:
+                exp = axes if len(axes) > 1 else axes[0]
+                assert got == exp, (path, dim, got, exp)
+            else:  # replicated fallback — never an invalid sharding
+                assert got is None, (path, dim, got)
+        return x
+
+    from repro.utils.tree import tree_paths
+    shardings_flat = dict(zip(tree_paths(params),
+                              jax.tree.leaves(shardings)))
+    map_with_path(leaf, params)
+
+
+def test_param_shardings_valid_for_every_config():
+    """Hypothesis property: for EVERY config's actual pytree leaves and
+    every buildable mesh, train `param_shardings` AND serving
+    `serve_param_shardings` produce placements that are FSDP/TP-sharded
+    where the rule axis divides the dim and replicated otherwise — never
+    an error at ``jax.device_put`` time (non-divisible leaf dims
+    included)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(arch=st.sampled_from(ARCHS), spec=st.sampled_from(_MESH_SPECS))
+    def prop(arch, spec):
+        mesh = make_test_mesh(spec)
+        params = _abstract_params(arch)
+        _check_shardings_against_leaves(
+            mesh, params, sharding.param_shardings(mesh, params), serve=False)
+        _check_shardings_against_leaves(
+            mesh, params, sharding.serve_param_shardings(mesh, params),
+            serve=True)
+
+    prop()
+
+
+def test_param_shardings_non_divisible_leaf_falls_back():
+    """Deterministic pin of the fallback: a 63-wide dim on a 2-way data
+    axis replicates that dim while the divisible dims keep their rule."""
+    mesh = make_test_mesh("2x4" if NDEV >= 8 else "1x1")
+    odd = {"layers": {"attn": {"wq": jax.ShapeDtypeStruct((2, 63, 64), jnp.float32)}}}
+    s = sharding.param_shardings(mesh, odd)["layers"]["attn"]["wq"]
+    s.shard_shape((2, 63, 64))  # valid at placement time
+    if mesh.shape["data"] > 1:
+        assert s.spec[1] is None  # 63 % 2 != 0 → replicated fallback
+    if mesh.shape["model"] > 1:
+        assert s.spec == P(None, None, "model")  # 64 % 4 == 0 keeps TP
+
+
+def test_serve_param_shardings_device_put_real_params():
+    """End-to-end placement of real (reduced) params — the property above
+    on actual committed arrays, plus the data-axis-only serving invariant."""
+    mesh = make_test_mesh("2x4" if NDEV >= 8 else "1x1")
+    params, _ = build(reduce_config(get_config("qwen2-1.5b"))).abstract_params()
+    sh = sharding.serve_param_shardings(mesh, params)
+    for s in jax.tree.leaves(sh):
+        for ax in s.spec:
+            assert ax in (None, "data")  # model axis belongs to the table
+    cfg = reduce_config(get_config("qwen2-1.5b"))
+    real, _ = build(cfg).init(jax.random.PRNGKey(0))
+    placed = jax.device_put(real, sharding.serve_param_shardings(mesh, real))
+    assert sharding.tree_shard_bytes(placed) <= sharding.tree_shard_bytes(real)
 
 
 def test_batch_pspec_fallbacks():

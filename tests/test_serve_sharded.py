@@ -16,26 +16,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh
 
+from conftest import make_test_mesh as make_mesh
+from conftest import needs_devices
 from repro.configs import get_config, reduce_config
 from repro.configs.base import DSSoftmaxConfig
 from repro.core import dssoftmax as ds
 from repro.models import build
 from repro.train import Request, SamplingParams, ServeSession
 
-NDEV = len(jax.devices())
-needs8 = pytest.mark.skipif(
-    NDEV < 8,
-    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
-           "(run by the distributed CI job)",
-)
-
-
-def make_mesh(spec: str) -> Mesh:
-    dims = tuple(int(x) for x in spec.split("x"))
-    n = int(np.prod(dims))
-    return Mesh(np.asarray(jax.devices()[:n]).reshape(dims), ("data", "model"))
+needs8 = needs_devices(8)
 
 
 def _fixture(K=6, d=32, n_classes=500, keep=0.5, seed=0):
