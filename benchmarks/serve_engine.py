@@ -19,6 +19,11 @@ Metrics written to ``BENCH_serve_engine.json``:
                          subsequent tokens from the previous emission.
 * ``slot_reuse``       — admissions / slots (> 1 proves continuous
                          batching actually recycled slots mid-flight).
+* ``overload``         — the same engine driven past saturation against a
+                         bounded queue with per-request deadlines: p95
+                         latency for the served tokens, shed rate, and
+                         timed-out count (degradation by policy, not by
+                         unbounded backlog).
 * ``ssm_hybrid_chunked`` — per-family (ssm + hybrid) state-passing
                          chunked-prefill variant: tokens/s and the
                          PREFILL COMPILE COUNT across distinct prompt
@@ -249,6 +254,99 @@ def run_param_modes(fast: bool) -> dict:
     return out
 
 
+def run_overload(fast: bool) -> dict:
+    """Overloaded open-loop Poisson arrivals against a bounded queue with
+    per-request deadlines: offered load is several times the slot service
+    rate, so the session MUST degrade by policy — shedding the newest
+    low-priority arrivals at ``submit()`` and timing out queued requests
+    past ``deadline_steps`` — instead of growing an unbounded backlog.
+    Headline columns: ``p95_ms`` for the tokens that were served (bounded
+    because the queue is), ``shed_rate``, and ``n_timed_out``. Arrivals
+    are drawn per decode step (deadlines are measured in steps), so the
+    trace is backend-independent and reproducible."""
+    if fast:
+        n_requests, n_slots, queue_limit = 24, 2, 4
+        max_new, deadline, lam, vocab = 4, 10, 1.5, 512
+    else:
+        n_requests, n_slots, queue_limit = 128, 4, 8
+        max_new, deadline, lam, vocab = 8, 20, 3.0, 2048
+    cfg = reduce_config(get_config("qwen2-1.5b"), vocab=vocab)
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+
+    arrival_time: dict[int, float] = {}
+    last_emit: dict[int, float] = {}
+    latencies: list[float] = []
+
+    def on_token(req, token):
+        now = time.perf_counter()
+        rid = id(req)
+        latencies.append(now - last_emit.get(rid, arrival_time[rid]))
+        last_emit[rid] = now
+
+    session = ServeSession(
+        bundle, params, ds_state, n_slots=n_slots,
+        max_seq_len=16 + max_new, queue_limit=queue_limit,
+        stream_cb=on_token,
+    )
+    # warmup compile off the clock
+    warm = Request(prompt=np.zeros(4, np.int32),
+                   sampling=SamplingParams(max_new_tokens=2))
+    arrival_time[id(warm)] = time.perf_counter()
+    session.run([warm])
+    session.requests.clear()
+    latencies.clear()
+    base = dict(session.stats())
+
+    rng = np.random.RandomState(0)
+    reqs = [Request(prompt=rng.randint(0, vocab, int(rng.choice((4, 8, 12)))).astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=max_new,
+                                            deadline_steps=deadline,
+                                            priority=int(rng.rand() < 0.25)))
+            for _ in range(n_requests)]
+    # per-step Poisson arrival counts at ``lam`` × (well above the ~
+    # n_slots/max_new per-step completion rate)
+    pending = list(reqs)
+    t0 = time.perf_counter()
+    while pending or session.scheduler.has_work():
+        for _ in range(int(rng.poisson(lam))):
+            if not pending:
+                break
+            req = pending.pop(0)
+            arrival_time[id(req)] = time.perf_counter()
+            session.submit(req)
+        session.step()
+    wall = time.perf_counter() - t0
+
+    s = session.stats()
+    served = sum(len(r.out_tokens) for r in reqs)
+    lat_ms = np.asarray(latencies) * 1e3
+    out = {
+        "n_requests": n_requests,
+        "n_slots": n_slots,
+        "queue_limit": queue_limit,
+        "deadline_steps": deadline,
+        "arrivals_per_step": lam,
+        "tokens": served,
+        "wall_s": wall,
+        "p95_ms": float(np.percentile(lat_ms, 95)) if len(lat_ms) else 0.0,
+        "n_completed": s["n_completed"] - base["n_completed"],
+        "n_timed_out": s["n_timed_out"] - base["n_timed_out"],
+        "n_shed": s["n_shed"] - base["n_shed"],
+        "shed_rate": (s["n_shed"] - base["n_shed"]) / n_requests,
+        "queue_depth_final": s["queue_depth"],
+    }
+    assert all(r.done for r in reqs), "overload run left live requests"
+    assert out["queue_depth_final"] == 0
+    assert out["n_completed"] + out["n_timed_out"] + out["n_shed"] == n_requests
+    assert out["n_shed"] > 0 and out["n_timed_out"] > 0, \
+        "overload trace failed to overload: retune lam/queue_limit"
+    print(f"# overload: {out['n_completed']}/{n_requests} completed, "
+          f"{out['n_timed_out']} timed out, {out['n_shed']} shed "
+          f"({out['shed_rate']:.0%}), p95={out['p95_ms']:.1f}ms")
+    return out
+
+
 def main():
     if FAST:
         n_requests, n_slots, rate = 10, 2, 50.0
@@ -292,7 +390,7 @@ def main():
     latencies.clear()
     last_emit.clear()
     session.requests.clear()
-    base = dict(session.stats)  # exclude warmup from the reported counters
+    base = dict(session.stats())  # exclude warmup from the reported counters
 
     t0[0] = time.perf_counter()
     pending = list(trace)
@@ -322,9 +420,10 @@ def main():
         "tokens_per_s": n_tok / wall,
         "p50_ms": float(np.percentile(lat_ms, 50)),
         "p95_ms": float(np.percentile(lat_ms, 95)),
-        "decode_steps": session.stats["n_steps"] - base["n_steps"],
-        "admits": session.stats["n_admitted"] - base["n_admitted"],
-        "slot_reuse": (session.stats["n_admitted"] - base["n_admitted"]) / n_slots,
+        "decode_steps": session.stats()["n_steps"] - base["n_steps"],
+        "admits": session.stats()["n_admitted"] - base["n_admitted"],
+        "slot_reuse": (session.stats()["n_admitted"] - base["n_admitted"]) / n_slots,
+        "overload": run_overload(FAST),
         "ssm_hybrid_chunked": run_ssm_hybrid_chunked(FAST),
         "sharded": run_sharded(FAST),
         "param_modes": run_param_modes(FAST),

@@ -29,3 +29,29 @@ def dispatch_indices(e_flat: jax.Array, num_experts: int, capacity: int):
     slot = jnp.zeros((A,), jnp.int32).at[order].set(slot_sorted)
     valid = slot < capacity
     return slot, valid
+
+
+def dispatch_load(e_flat: jax.Array, num_experts: int,
+                  valid: jax.Array | None = None):
+    """Per-expert load telemetry for one dispatch.
+
+    e_flat: (A,) int expert per assignment (out-of-range ids — e.g. the
+    ``K`` sentinel a sharded caller routes non-owned tokens to — are
+    dropped from both counts); valid: (A,) bool from
+    :func:`dispatch_indices` (None ⇒ nothing overflowed).
+
+    Returns (dispatched (K,), overflow (K,)) int32 — the O(K) accumulators
+    the serving circuit-breaker watches: ``overflow/dispatched`` per expert
+    is the fraction of that expert's tokens paying the exact-but-slow
+    capacity-overflow fixup.
+    """
+    dispatched = jnp.zeros((num_experts,), jnp.int32).at[e_flat].add(
+        1, mode="drop"
+    )
+    if valid is None:
+        overflow = jnp.zeros((num_experts,), jnp.int32)
+    else:
+        overflow = jnp.zeros((num_experts,), jnp.int32).at[e_flat].add(
+            (~valid).astype(jnp.int32), mode="drop"
+        )
+    return dispatched, overflow

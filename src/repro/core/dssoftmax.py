@@ -483,6 +483,7 @@ def serve_topk(
     *,
     kernel: Union[str, "KernelPolicy"] = "jnp",  # noqa: F821
     capacity_factor: float = 2.0,
+    with_stats: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Top-k class retrieval (paper inference). h: (B, d) → values/ids (B, k).
 
@@ -508,6 +509,11 @@ def serve_topk(
     Unknown names raise ValueError. ``capacity_factor`` sizes the grouped
     paths' per-expert buffers (overflow falls back exactly); propagate
     ``DSSoftmaxConfig.capacity_factor`` from model call sites.
+
+    ``with_stats=True`` additionally returns a dict of O(K) per-expert
+    load telemetry — ``{'dispatched': (K,), 'overflow': (K,)}`` int32 —
+    the accumulators the serving overflow circuit-breaker watches
+    (overflow is identically zero on the capacity-free gather paths).
     """
     from repro.distributed.hints import constrain_batch
     from repro.kernels.registry import get_spec, resolve_kernel
@@ -524,7 +530,8 @@ def serve_topk(
     h = constrain_batch(h)
     expert_idx, g, _ = top1_gate(gate_w, h)
     return _serve_topk_local(
-        table, h, expert_idx, g, k, kernel, capacity_factor=capacity_factor
+        table, h, expert_idx, g, k, kernel, capacity_factor=capacity_factor,
+        with_stats=with_stats,
     )
 
 
@@ -532,6 +539,7 @@ def _serve_topk_local(
     table: ServeTable, h: jax.Array, expert_idx: jax.Array, g: jax.Array,
     k: int, kernel: str, *, capacity_factor: float = 2.0,
     owned: Optional[jax.Array] = None, n_experts_global: Optional[int] = None,
+    with_stats: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Single-device retrieval over (possibly local) experts, shared by
     ``serve_topk`` and each ``serve_topk_sharded`` shard.
@@ -543,15 +551,19 @@ def _serve_topk_local(
     ``n_experts_global`` sizes the grouped capacity by the GLOBAL expert
     count so per-expert buffers match the expected per-expert load (the
     local shard sees the same tokens-per-expert as the global run).
+    ``with_stats`` appends the ``{'dispatched', 'overflow'}`` (K,) int32
+    telemetry (overflow zero on the capacity-free paths).
     """
+    from repro.core.dispatch import dispatch_load
     from repro.distributed.hints import BATCH, constrain
 
+    overflow = None
     if kernel == "pallas":
         from repro.kernels import ops as kops
 
         vals, ids = kops.dss_topk(table.weights, table.ids, h, expert_idx, g, k)
     elif kernel in ("grouped", "pallas_grouped"):
-        vals, ids = _serve_topk_grouped(
+        vals, ids, overflow = _serve_topk_grouped(
             table, h, expert_idx, g, k,
             capacity_factor=capacity_factor,
             use_pallas=kernel == "pallas_grouped",
@@ -573,7 +585,15 @@ def _serve_topk_local(
     if owned is not None:
         vals = jnp.where(owned[:, None], vals, NEG_INF)
         ids = jnp.where(owned[:, None], ids, -1)
-    return vals, ids
+    if not with_stats:
+        return vals, ids
+    K = table.ids.shape[0]
+    # non-owned tokens route to the out-of-range sentinel K → dropped
+    e_count = expert_idx if owned is None else jnp.where(owned, expert_idx, K)
+    dispatched, _ = dispatch_load(e_count, K)
+    if overflow is None:
+        overflow = jnp.zeros((K,), jnp.int32)
+    return vals, ids, {"dispatched": dispatched, "overflow": overflow}
 
 
 def _group_tokens(h: jax.Array, g: jax.Array, expert_idx: jax.Array,
@@ -661,7 +681,11 @@ def _serve_topk_grouped(
     fallback on this shard). ``n_experts_global`` sizes ``capacity`` by
     the global expert count: the shard sees ~B/ep of the tokens spread
     over K/ep experts — the same per-expert load as the global run.
+
+    Returns (vals, ids, overflow) with ``overflow`` the (K,) int32
+    per-expert count of owned tokens that paid the fixup this call.
     """
+    from repro.core.dispatch import dispatch_load
     from repro.distributed.hints import constrain
 
     B, d = h.shape
@@ -669,6 +693,9 @@ def _serve_topk_grouped(
     capacity = int(max(1, round(B / (n_experts_global or K) * capacity_factor)))
     e_disp = expert_idx if owned is None else jnp.where(owned, expert_idx, K)
     buf, g_buf, slot, valid = _group_tokens(h, g, e_disp, K, capacity)
+    # overflow telemetry BEFORE non-owned tokens are masked valid — it must
+    # count exactly the owned tokens that pay the fixup on this shard
+    _, overflow = dispatch_load(e_disp, K, valid)
     if owned is not None:
         valid = valid | ~owned  # never fix up a token another shard owns
 
@@ -690,7 +717,9 @@ def _serve_topk_grouped(
         )
     vals = vals_b[expert_idx, jnp.minimum(slot, capacity - 1)]  # (B, k)
     ids = ids_b[expert_idx, jnp.minimum(slot, capacity - 1)]
-    return _overflow_fixup(table, h, g, expert_idx, valid, vals, ids, k, capacity)
+    vals, ids = _overflow_fixup(table, h, g, expert_idx, valid, vals, ids, k,
+                                capacity)
+    return vals, ids, overflow
 
 
 # ---------------------------------------------------------------------------
@@ -753,6 +782,7 @@ def serve_topk_sharded(
     mesh,
     kernel: Union[str, "KernelPolicy"] = "auto",  # noqa: F821
     capacity_factor: float = 2.0,
+    with_stats: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Mesh-sharded top-k retrieval: experts over ``model``, tokens over
     ``data``/``pod``, one O(B·k) all-gather merge. h: (B, d) → (B, k).
@@ -764,6 +794,11 @@ def serve_topk_sharded(
     registry with the call site's (ep, ndata) — ``'auto'`` picks among
     the ``*_ep`` sharded specs (HBM + ICI cost); a base name
     (``'grouped'``) forces that local per-device path.
+
+    ``with_stats=True`` appends ``{'dispatched', 'overflow'}`` (K_pad,)
+    int32 GLOBAL per-expert telemetry: each model-shard counts the tokens
+    it owns (summed over the data axes), and the shards' (K_loc,) rows
+    concatenate over ``model`` — O(K) extra wire, never O(B·V_pad).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -772,7 +807,8 @@ def serve_topk_sharded(
 
     if "model" not in mesh.axis_names:
         return serve_topk(gate_w, table, h, k, kernel=kernel,
-                          capacity_factor=capacity_factor)
+                          capacity_factor=capacity_factor,
+                          with_stats=with_stats)
     ep, ndata = _mesh_degrees(mesh)
     B = h.shape[0]
     table = _pad_table_experts(table, ep)
@@ -788,6 +824,9 @@ def serve_topk_sharded(
     spec = get_spec(name)
     local_kernel = spec.local_name or spec.name
 
+    batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = batch_ax if (batch_ax and b_split > 1) else None
+
     def body(gate_w, ids, weights, h):
         tbl = ServeTable(ids=ids, weights=weights)
         # 1. gating replicated (per data-shard rows; agrees across model)
@@ -796,29 +835,40 @@ def serve_topk_sharded(
         owned = (expert_idx >= lo) & (expert_idx < lo + K_loc)
         e_loc = jnp.clip(expert_idx - lo, 0, K_loc - 1)
         # 2. owner-local retrieval with the unchanged per-device kernel
-        vals, ids_out = _serve_topk_local(
+        loc = _serve_topk_local(
             tbl, h, e_loc, g, k, local_kernel,
             capacity_factor=capacity_factor, owned=owned,
-            n_experts_global=K_pad,
+            n_experts_global=K_pad, with_stats=with_stats,
         )
+        vals, ids_out = loc[0], loc[1]
         # 3. O(B·k) merge: gather the carries, select each token's owner
         vals_all = jax.lax.all_gather(vals, "model")      # (ep, B_loc, k)
         ids_all = jax.lax.all_gather(ids_out, "model")
         owner = expert_idx // K_loc
         rows = jnp.arange(h.shape[0])
-        return vals_all[owner, rows], ids_all[owner, rows]
+        if not with_stats:
+            return vals_all[owner, rows], ids_all[owner, rows]
+        disp, over = loc[2]["dispatched"], loc[2]["overflow"]  # (K_loc,)
+        if bspec is not None:
+            # token-sharded call site: each data shard counted its rows
+            disp = jax.lax.psum(disp, bspec)
+            over = jax.lax.psum(over, bspec)
+        return vals_all[owner, rows], ids_all[owner, rows], disp, over
 
-    batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    bspec = batch_ax if (batch_ax and b_split > 1) else None
     out = P(bspec, None)
+    stat = P("model")  # shards own disjoint K_loc expert rows → concat
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P("model", None), P("model", None, None),
                   P(bspec, None)),
-        out_specs=(out, out),
+        out_specs=(out, out) + ((stat, stat) if with_stats else ()),
         check_rep=False,
     )
-    return fn(gate_w, table.ids, table.weights, h)
+    res = fn(gate_w, table.ids, table.weights, h)
+    if not with_stats:
+        return res
+    vals, ids_out, disp, over = res
+    return vals, ids_out, {"dispatched": disp, "overflow": over}
 
 
 def serve_full_probs(

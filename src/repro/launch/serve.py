@@ -2,9 +2,13 @@
 
 Drives a continuous-batching :class:`~repro.train.ServeSession`: more
 requests than ``--slots`` exercises mid-flight slot reuse (finished
-requests free their slot, queued prompts prefill into it).
+requests free their slot, queued prompts prefill into it). Reports the
+per-outcome counts from ``session.stats()`` and exits non-zero if any
+request ``FAILED`` (runtime fault — quarantined slot or raising
+callback), so a scripted smoke run surfaces poisoned serving.
 """
 import argparse
+import sys
 import time
 
 import jax
@@ -12,7 +16,7 @@ import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.models import build
-from repro.train import Request, SamplingParams, ServeSession
+from repro.train import Request, RequestStatus, SamplingParams, ServeSession
 
 
 def main():
@@ -40,6 +44,13 @@ def main():
                          "them per layer, just in time, inside the step "
                          "(~data-way lower per-device param bytes, "
                          "token-identical output)")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bound the admission queue: overflow sheds the "
+                         "lowest-priority / newest request (REJECTED) "
+                         "instead of growing without bound")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="per-request deadline in decode steps: requests "
+                         "still queued or decoding past it end TIMED_OUT")
     args = ap.parse_args()
     if args.param_mode == "fsdp" and not args.mesh:
         ap.error("--param-mode fsdp requires --mesh")
@@ -66,19 +77,31 @@ def main():
         mesh=mesh,
         param_mode=args.param_mode,
         prefill_chunk=args.prefill_chunk,
+        queue_limit=args.queue_limit,
     )
     rng = np.random.RandomState(0)
     reqs = [
         Request(prompt=rng.randint(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
-                sampling=SamplingParams(max_new_tokens=args.new_tokens))
+                sampling=SamplingParams(max_new_tokens=args.new_tokens,
+                                        deadline_steps=args.deadline_steps))
         for _ in range(args.batch)
     ]
     t0 = time.time()
     out = session.run(reqs)
     dt = time.time() - t0
     n = sum(len(r.out_tokens) for r in out)
+    stats = session.stats()
     print(f"{n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s; "
-          f"{session.stats['n_admitted']} admits over {session.n_slots} slots)")
+          f"{stats['n_admitted']} admits over {session.n_slots} slots)")
+    print("outcomes: " + ", ".join(
+        f"{k.removeprefix('n_')}={stats[k]}"
+        for k in ("n_completed", "n_rejected", "n_cancelled",
+                  "n_timed_out", "n_failed", "n_shed")))
+    if stats["n_failed"]:
+        for r in out:
+            if r.status is RequestStatus.FAILED:
+                print(f"  failed: {r.error}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -187,11 +187,14 @@ def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
 
 
 def decode_step(params, serve_table, cfg: ModelConfig, cache: EncDecCache, token, pos, k: int = 8,
-                kernel=None, mesh=None, gather=None):
+                kernel=None, mesh=None, gather=None, capacity_factor=None,
+                with_stats=False):
     """pos: scalar shared position or (B,) per-slot positions (learned
     absolute position embeddings are gathered per row in the vector case).
-    ``gather`` serves from FSDP-stored weights (per-layer just-in-time
-    all-gather; embed/pos tables stay sharded, only rows cross the wire)."""
+    ``capacity_factor``/``with_stats`` thread to the head (circuit-breaker
+    override + per-expert overflow telemetry). ``gather`` serves from
+    FSDP-stored weights (per-layer just-in-time all-gather; embed/pos
+    tables stay sharded, only rows cross the wire)."""
     pos = jnp.asarray(pos)
     if gather is not None:
         pe = gather.rows("pos_embed", params["pos_embed"],
@@ -231,9 +234,12 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: EncDecCache, token
         body, x, (params["dec_layers"], cache.self_k, cache.self_v, cache.cross_k, cache.cross_v)
     )
     h = layernorm(params["dec_norm"], xf)[:, 0]
-    vals, ids = heads.head_topk(
+    out = heads.head_topk(
         params["head"], serve_table, cfg, h, k,
         embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
-        gather=gather,
+        gather=gather, capacity_factor=capacity_factor, with_stats=with_stats,
     )
-    return vals, ids, EncDecCache(self_k=nk, self_v=nv, cross_k=cache.cross_k, cross_v=cache.cross_v)
+    new_cache = EncDecCache(self_k=nk, self_v=nv, cross_k=cache.cross_k, cross_v=cache.cross_v)
+    if with_stats:
+        return out[0], out[1], new_cache, out[2]
+    return out[0], out[1], new_cache

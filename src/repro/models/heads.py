@@ -115,6 +115,8 @@ def head_topk(
     kernel=None,
     mesh=None,
     gather=None,
+    capacity_factor: Optional[float] = None,
+    with_stats: bool = False,
 ):
     """Top-k classes from hidden states h (B, d) → (values, ids) (B, k).
 
@@ -128,6 +130,11 @@ def head_topk(
     just in time (the expert rows already live in ``serve_table``); for
     full-softmax heads the whole (V, d) matmul operand is gathered — the
     documented wire cost of serving a non-DS head from FSDP storage.
+    ``capacity_factor`` overrides ``cfg.ds.capacity_factor`` (the serving
+    circuit-breaker bumps the effective capacity when overflow stops being
+    rare); ``with_stats=True`` appends the O(K) per-expert
+    ``{'dispatched', 'overflow'}`` telemetry dict (zeros, shape (1,), for
+    non-DS heads — a full softmax has no capacity to overflow).
     """
     if gather is not None:
         if cfg.head == "ds":
@@ -143,20 +150,26 @@ def head_topk(
                 embed_table = gather.full("embed/table", embed_table)
     if cfg.head == "ds":
         kern = kernel if kernel is not None else cfg.ds.serve_kernel
+        cf = capacity_factor if capacity_factor is not None \
+            else cfg.ds.capacity_factor
         if mesh is not None:
             return ds.serve_topk_sharded(
                 head_params["gate"], serve_table, h, k, mesh=mesh,
-                kernel=kern, capacity_factor=cfg.ds.capacity_factor,
+                kernel=kern, capacity_factor=cf, with_stats=with_stats,
             )
         return ds.serve_topk(
             head_params["gate"], serve_table, h, k, kernel=kern,
-            capacity_factor=cfg.ds.capacity_factor,
+            capacity_factor=cf, with_stats=with_stats,
         )
     w = embed_table if cfg.tie_embeddings else head_params["unembed"]
     z = jnp.einsum("bd,nd->bn", h.astype(jnp.float32), w.astype(jnp.float32))
     if w.shape[0] > cfg.vocab_size:  # mask TP-padding classes
         z = jnp.where(jnp.arange(w.shape[0])[None, :] < cfg.vocab_size, z, -1e9)
-    return jax.lax.top_k(z, k)
+    vals, ids = jax.lax.top_k(z, k)
+    if not with_stats:
+        return vals, ids
+    zero = jnp.zeros((1,), jnp.int32)
+    return vals, ids, {"dispatched": zero, "overflow": zero}
 
 
 def abstract_serve_table(cfg: ModelConfig) -> ds.ServeTable:

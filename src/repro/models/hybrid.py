@@ -280,11 +280,14 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
 
 
 def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token, pos, k: int = 8,
-                kernel=None, mesh=None, gather=None):
+                kernel=None, mesh=None, gather=None, capacity_factor=None,
+                with_stats=False):
     """pos: scalar shared position or (B,) per-slot positions (the SSM/conv
     state update is position-free; only the periodic attention blocks and
-    rope consume it). ``gather`` serves from FSDP-stored weights (per-layer
-    just-in-time all-gather; the shared attention block gathers once)."""
+    rope consume it). ``capacity_factor``/``with_stats`` thread to the head
+    (circuit-breaker override + per-expert overflow telemetry). ``gather``
+    serves from FSDP-stored weights (per-layer just-in-time all-gather;
+    the shared attention block gathers once)."""
     if gather is not None:
         x = gather.rows("embed/table", params["embed"]["table"], token)[:, None, :]
         sa_full = gather.full("shared_attn", params["shared_attn"]) \
@@ -312,9 +315,11 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token
 
     x, new_cache = _group_walk(params, cfg, cache, x, mamba_body, attn_op)
     h = rmsnorm(params["final_norm"], x)[:, 0]
-    vals, ids = heads.head_topk(
+    out = heads.head_topk(
         params["head"], serve_table, cfg, h, k,
         embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
-        gather=gather,
+        gather=gather, capacity_factor=capacity_factor, with_stats=with_stats,
     )
-    return vals, ids, new_cache
+    if with_stats:
+        return out[0], out[1], new_cache, out[2]
+    return out[0], out[1], new_cache

@@ -82,10 +82,11 @@ def build(cfg: ModelConfig) -> ModelBundle:
                 p, t, cfg, batch, k=k, kernel=kernel, mesh=mesh, gather=gather
             ),
         decode_step=lambda p, t, cache, tok, pos, k=8, kernel=None, mesh=None, \
-            gather=None:
+            gather=None, capacity_factor=None, with_stats=False:
             mod.decode_step(
                 p, t, cfg, cache, tok, pos, k=k, kernel=kernel, mesh=mesh,
-                gather=gather
+                gather=gather, capacity_factor=capacity_factor,
+                with_stats=with_stats,
             ),
         prefill_chunk=chunk,
     )

@@ -234,11 +234,15 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
 
 
 def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token, pos, k: int = 8,
-                kernel=None, mesh=None, gather=None):
+                kernel=None, mesh=None, gather=None, capacity_factor=None,
+                with_stats=False):
     """One-token decode. token: (B,) int32; pos: scalar position shared by
     the batch, or (B,) int32 per-slot positions (continuous batching).
-    Returns (vals, ids, new_cache). ``gather`` serves from FSDP-stored
-    weights (per-layer just-in-time all-gather inside the scan body)."""
+    Returns (vals, ids, new_cache) — plus the head's per-expert
+    ``{'dispatched', 'overflow'}`` telemetry when ``with_stats=True``.
+    ``capacity_factor`` overrides the DS head's config value (serving
+    circuit-breaker). ``gather`` serves from FSDP-stored weights
+    (per-layer just-in-time all-gather inside the scan body)."""
     if gather is not None:
         x = gather.rows("embed/table", params["embed"]["table"], token)[:, None, :]
     else:
@@ -262,9 +266,11 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token
 
     xf, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
     h = rmsnorm(params["final_norm"], xf)[:, 0]
-    vals, ids = heads.head_topk(
+    out = heads.head_topk(
         params["head"], serve_table, cfg, h, k,
         embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
-        gather=gather,
+        gather=gather, capacity_factor=capacity_factor, with_stats=with_stats,
     )
-    return vals, ids, DecodeCache(k=nk, v=nv)
+    if with_stats:
+        return out[0], out[1], DecodeCache(k=nk, v=nv), out[2]
+    return out[0], out[1], DecodeCache(k=nk, v=nv)

@@ -1,0 +1,19 @@
+from repro.testing.faults import (
+    CancelAfter,
+    RaisingStreamCB,
+    oversized_prompt,
+    poison_cache_slot,
+    poison_layer,
+    poison_token_embedding,
+    skew_gate,
+)
+
+__all__ = [
+    "CancelAfter",
+    "RaisingStreamCB",
+    "oversized_prompt",
+    "poison_cache_slot",
+    "poison_layer",
+    "poison_token_embedding",
+    "skew_gate",
+]

@@ -1,0 +1,149 @@
+"""Deterministic fault injectors for serving chaos tests.
+
+Each injector plants exactly ONE seedable, reproducible fault so the
+chaos suite (``tests/test_serve_faults.py``) can assert the request
+lifecycle's typed outcome for it:
+
+* :func:`poison_layer` — NaN an entire backbone layer: every request
+  fails at prefill (``FAILED``), the session itself must survive;
+* :func:`poison_token_embedding` — NaN one embedding row: only requests
+  whose prompt contains that token id fail, batchmates are untouched;
+* :func:`poison_cache_slot` — NaN one slot's rows of the shared decode
+  cache: the decode-path quarantine (slot ``FAILED`` mid-flight,
+  survivors bit-identical, decode compile count stays 1);
+* :func:`skew_gate` — zero the DS gate so every token routes to expert
+  0: forces sustained capacity overflow for the circuit-breaker tests;
+* :func:`oversized_prompt` — a prompt that cannot fit the cache:
+  rejected at ``submit()`` before any compute;
+* :class:`RaisingStreamCB` / :class:`CancelAfter` — callback faults:
+  a ``stream_cb`` that raises on a chosen request, and one that cancels
+  a request from inside the callback (the reentrancy path).
+
+All injectors are pure with respect to the model: param injectors
+return a NEW params pytree (the original is never mutated);
+``poison_cache_slot`` replaces the session's cache arrays in place
+(host-side swap between steps — the jitted step is untouched).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _nan_like(x: jax.Array) -> jax.Array:
+    return jnp.full_like(x, jnp.nan)
+
+
+def poison_layer(params, layer_idx: int):
+    """NaN every float leaf of backbone layer ``layer_idx``.
+
+    Layer params are stacked on axis 0 (the ``lax.scan`` layout), so one
+    row of each leaf under ``params['layers']`` is overwritten. Every
+    forward pass — prefill and decode — emits NaN for every token, so
+    all requests must end ``FAILED`` while the session keeps serving.
+    """
+
+    def poison(leaf):
+        if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+            return leaf
+        return leaf.at[layer_idx].set(jnp.nan)
+
+    return dict(params, layers=jax.tree.map(poison, params["layers"]))
+
+
+def poison_token_embedding(params, token_id: int):
+    """NaN one row of the input embedding table.
+
+    Only prompts (or sampled feedback tokens) containing ``token_id``
+    produce non-finite activations; every other request is numerically
+    untouched — the per-request quarantine must fail exactly the
+    poisoned requests and leave the survivors bit-identical.
+    """
+    emb = dict(params["embed"])
+    emb["table"] = emb["table"].at[token_id].set(jnp.nan)
+    return dict(params, embed=emb)
+
+
+def poison_cache_slot(session, slot: int) -> None:
+    """NaN slot ``slot``'s rows of the session's shared decode cache.
+
+    Cache leaves have their batch (slot) axis at position 1 for every
+    family (see ``model_zoo.cache_seq_axes``), so ``[:, slot]`` hits
+    exactly one resident: its next decode step returns non-finite top-k
+    values and the session must quarantine that slot mid-flight. The
+    swap happens between steps on the host — the jitted decode step
+    never changes, so its compile count stays 1.
+    """
+
+    def poison(leaf):
+        if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+            return leaf
+        return leaf.at[:, slot].set(jnp.nan)
+
+    cache = jax.tree.map(poison, session._cache)
+    if session._cache_shardings is not None:
+        cache = jax.device_put(cache, session._cache_shardings)
+    session._cache = cache
+
+
+def skew_gate(params):
+    """Zero the DS head's gate matrix: all gate logits tie, ``argmax``
+    routes EVERY token to expert 0, and any capacity-bounded serve
+    kernel overflows on ~(B - capacity)/B of the batch each step —
+    deterministic sustained overflow for circuit-breaker tests. Top-k
+    retrieval stays finite and exact (the grouped kernels' overflow
+    fixup re-runs the dropped tokens), just confined to expert 0's
+    vocabulary shard."""
+    head = dict(params["head"])
+    head["gate"] = jnp.zeros_like(head["gate"])
+    return dict(params, head=head)
+
+
+def oversized_prompt(vocab: int, max_seq_len: int,
+                     rng: Optional[np.random.RandomState] = None) -> np.ndarray:
+    """A valid-token prompt one position too long for the session cache
+    (``prompt_len + max_new_tokens - 1 > max_seq_len`` for any
+    ``max_new_tokens >= 1``) — must be rejected at ``submit()``."""
+    rng = rng or np.random.RandomState(0)
+    return rng.randint(0, vocab, max_seq_len + 1).astype(np.int32)
+
+
+class RaisingStreamCB:
+    """A ``stream_cb`` that raises for one request after ``after`` of its
+    tokens (every request, if ``target`` is None). Counts every call so
+    tests can assert the loop kept streaming the survivors."""
+
+    def __init__(self, target=None, after: int = 1):
+        self.target = target
+        self.after = after
+        self.n_calls = 0
+        self.n_target_calls = 0
+
+    def __call__(self, req, token) -> None:
+        self.n_calls += 1
+        if self.target is not None and req is not self.target:
+            return
+        self.n_target_calls += 1
+        if self.n_target_calls >= self.after:
+            raise RuntimeError("injected stream_cb failure")
+
+
+class CancelAfter:
+    """A ``stream_cb`` that cancels ``target`` from INSIDE the callback
+    once it has emitted ``after`` tokens — exercises the reentrant
+    cancel path (the emitting slot is released while the step loop is
+    still walking the active-slot snapshot)."""
+
+    def __init__(self, session, target, after: int):
+        self.session = session
+        self.target = target
+        self.after = after
+        self.cancelled = False
+
+    def __call__(self, req, token) -> None:
+        if req is self.target and len(req.out_tokens) >= self.after \
+                and not self.cancelled:
+            self.cancelled = self.session.cancel(self.target)

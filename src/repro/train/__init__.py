@@ -2,6 +2,7 @@ from repro.train.train_step import TrainState, make_train_step
 from repro.train.trainer import Trainer
 from repro.train.serve import (
     Request,
+    RequestStatus,
     SamplingParams,
     Scheduler,
     ServeEngine,
@@ -13,6 +14,7 @@ __all__ = [
     "make_train_step",
     "Trainer",
     "Request",
+    "RequestStatus",
     "SamplingParams",
     "Scheduler",
     "ServeEngine",

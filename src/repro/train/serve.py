@@ -6,9 +6,33 @@ slot carries its **own** sequence position (the per-row ``pos`` vector
 threaded through ``attention_decode``), so finished requests release
 their slot mid-flight and queued prompts are prefilled into the freed
 slot while the other slots keep decoding. Per-request
-:class:`SamplingParams` control ``max_new_tokens``, ``eos_id`` and
-greedy/temperature sampling exactly per request; a ``stream_cb`` hook
-observes every emitted token.
+:class:`SamplingParams` control ``max_new_tokens``, ``eos_id``,
+greedy/temperature sampling, a ``deadline_steps`` budget and a shed
+``priority`` exactly per request; a ``stream_cb`` hook observes every
+emitted token.
+
+Request lifecycle (this module's robustness contract):
+
+* every request ends in exactly one terminal :class:`RequestStatus` —
+  ``COMPLETED`` | ``REJECTED`` | ``CANCELLED`` | ``TIMED_OUT`` |
+  ``FAILED`` — with ``Request.error`` carrying the reason for the
+  non-completed outcomes;
+* ``submit`` validates every :class:`SamplingParams` field and the
+  prompt BEFORE any compute or slot admission (a bad request is
+  ``REJECTED`` with a ``ValueError`` naming the offending field and
+  never perturbs residents);
+* the admission queue is bounded (``queue_limit``): overflow sheds the
+  lowest-priority / newest request with status ``REJECTED`` instead of
+  growing without bound, and ``pop_next`` admits the highest-priority /
+  oldest first;
+* a non-finite top-k output quarantines ONLY the poisoned slot
+  (``FAILED``, slot released); surviving batchmates keep decoding
+  bit-identically — per-slot decode math never mixes rows;
+* an overflow circuit-breaker watches the DS head's per-expert
+  capacity-overflow rate and degrades gracefully: trip 1 doubles the
+  effective ``capacity_factor``, trip 2 falls back to the always-exact
+  ``'jnp'`` serve path (each trip rebuilds the jitted decode step —
+  jit closures capture trace-time constants).
 
 Prefill-into-slot has two flavors:
 
@@ -45,11 +69,14 @@ per-device memory ceiling drops from O(params) to O(params/ndata) while
 outputs stay bit-identical.
 
 ``ServeEngine`` remains as a thin deprecated shim over ``ServeSession``
-for the existing examples/benchmarks.
+for the existing examples/benchmarks (it emits a ``DeprecationWarning``
+once per process).
 """
 from __future__ import annotations
 
 import collections
+import enum
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Deque, List, Optional
 
@@ -65,29 +92,70 @@ from repro.utils import get_logger
 log = get_logger("serve")
 
 
+class RequestStatus(enum.Enum):
+    """Request lifecycle states. ``QUEUED``/``ACTIVE`` are transient;
+    the rest are terminal — a request reaches exactly one member of
+    :data:`TERMINAL` and never transitions out of it."""
+
+    QUEUED = "queued"        # submitted, waiting for a free slot
+    ACTIVE = "active"        # resident in a decode slot
+    COMPLETED = "completed"  # finished normally (eos or max_new_tokens)
+    REJECTED = "rejected"    # failed validation, or shed by the bounded queue
+    CANCELLED = "cancelled"  # aborted via ServeSession.cancel()
+    TIMED_OUT = "timed_out"  # deadline_steps exceeded (queued or mid-decode)
+    FAILED = "failed"        # runtime fault (non-finite output, raising stream_cb)
+
+
+TERMINAL = frozenset({
+    RequestStatus.COMPLETED,
+    RequestStatus.REJECTED,
+    RequestStatus.CANCELLED,
+    RequestStatus.TIMED_OUT,
+    RequestStatus.FAILED,
+})
+
+
 @dataclass(frozen=True)
 class SamplingParams:
     """Per-request decoding controls.
 
     ``temperature <= 0`` is greedy; otherwise tokens are sampled from the
     softmax over the head's top-k candidates (top-k sampling — the DS
-    head already returns the k best classes). ``eos_id`` stops the
-    request the moment it is emitted (the eos token IS appended).
+    head already returns the k best classes). ``top_k`` optionally
+    narrows sampling to the first ``min(top_k, k)`` candidates.
+    ``eos_id`` stops the request the moment it is emitted (the eos token
+    IS appended). ``deadline_steps`` bounds the request's lifetime in
+    session decode steps counted from ``submit()`` — exceeded while
+    queued or mid-decode, the request ends ``TIMED_OUT`` (keeping any
+    tokens already emitted). ``priority`` (higher = more important)
+    orders admission and picks shed victims when the bounded queue
+    overflows; ties break FIFO (oldest admitted first, newest shed
+    first).
     """
 
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     temperature: float = 0.0
     seed: int = 0
+    top_k: Optional[int] = None
+    deadline_steps: Optional[int] = None
+    priority: int = 0
 
 
-@dataclass
-class Request:
+@dataclass(eq=False)  # identity equality: queue membership/removal must
+class Request:        # never compare prompt arrays elementwise
     prompt: np.ndarray          # (S,) int32
     max_new_tokens: int = 16    # legacy field; ignored when ``sampling`` is set
     out_tokens: List[int] = field(default_factory=list)
-    done: bool = False
     sampling: Optional[SamplingParams] = None
+    status: RequestStatus = RequestStatus.QUEUED
+    error: Optional[str] = None      # reason for REJECTED/TIMED_OUT/FAILED
+    submit_step: Optional[int] = None  # session n_steps at submit() time
+
+    @property
+    def done(self) -> bool:
+        """True once the request reached a terminal status."""
+        return self.status in TERMINAL
 
     @property
     def sampling_params(self) -> SamplingParams:
@@ -112,26 +180,73 @@ class _Slot:
 
 
 class Scheduler:
-    """FIFO admission queue + slot map (pure host-side bookkeeping).
+    """Bounded priority admission queue + slot map (pure host-side
+    bookkeeping).
 
     ``admit``/``release`` are the continuous-batching core: a finished
     request frees its slot immediately and the next queued prompt is
     prefilled into it while the remaining slots keep decoding.
+
+    ``queue_limit`` bounds the queue: ``submit`` on a full queue sheds
+    the lowest-priority request (newest among ties — the incoming
+    request itself when nothing queued ranks below it) and returns the
+    victim so the session can mark it ``REJECTED``; an unbounded queue
+    (the default) always returns ``None``. ``pop_next`` admits the
+    highest-priority, oldest-first.
     """
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, queue_limit: Optional[int] = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError(f"queue_limit must be >= 1, got {queue_limit}")
         self.n_slots = n_slots
+        self.queue_limit = queue_limit
         self.queue: Deque[Request] = collections.deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.n_admitted = 0
         self.n_released = 0
+        self.n_shed = 0
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> Optional[Request]:
+        """Enqueue; returns the shed victim when the bounded queue is
+        full (possibly ``req`` itself), else ``None``."""
         if req.sampling_params.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.queue_limit is not None and len(self.queue) >= self.queue_limit:
+            victim = self._shed_victim(req)
+            self.n_shed += 1
+            if victim is req:
+                return req
+            self.queue.remove(victim)
+            self.queue.append(req)
+            return victim
         self.queue.append(req)
+        return None
+
+    def _shed_victim(self, incoming: Request) -> Request:
+        # lowest priority loses; among equals the newest arrival does
+        # (the incoming request is the newest candidate of all)
+        victim_i, vp = 0, self.queue[0].sampling_params.priority
+        for i, r in enumerate(self.queue):
+            p = r.sampling_params.priority
+            if p <= vp:  # <= keeps scanning → newest among equal priorities
+                victim_i, vp = i, p
+        if incoming.sampling_params.priority <= vp:
+            return incoming
+        return self.queue[victim_i]
+
+    def pop_next(self) -> Request:
+        """Remove and return the highest-priority request (FIFO within a
+        priority class)."""
+        best_i, bp = 0, self.queue[0].sampling_params.priority
+        for i, r in enumerate(self.queue):
+            p = r.sampling_params.priority
+            if p > bp:  # strict > keeps the oldest among equals
+                best_i, bp = i, p
+        req = self.queue[best_i]
+        del self.queue[best_i]
+        return req
 
     def free_slot(self) -> Optional[int]:
         for i, s in enumerate(self.slots):
@@ -196,13 +311,28 @@ class ServeSession:
             ``bundle.prefill_chunk`` in (1, C) chunks — one compile for
             all prompt lengths (every family except encdec).
         stream_cb: ``cb(request, token)`` called for every emitted token.
+            A raising callback FAILs only its own request — the step
+            loop and the other residents are untouched.
+        queue_limit: bound on the admission queue; ``None`` (default) is
+            unbounded. A full queue sheds the lowest-priority / newest
+            request with status ``REJECTED`` (see :class:`Scheduler`).
+        overflow_threshold / overflow_window: the DS-head overflow
+            circuit-breaker. When the mean capacity-overflow rate over
+            the last ``overflow_window`` decode steps exceeds
+            ``overflow_threshold``, the session degrades: trip 1 doubles
+            the effective ``capacity_factor``; trip 2 falls back to the
+            always-exact ``'jnp'`` serve path. Each trip rebuilds the
+            jitted decode step (one extra compile per trip).
     """
 
     def __init__(self, bundle: ModelBundle, params, ds_state_or_table, *,
                  n_slots: int = 8, max_seq_len: int = 256, k: int = 8,
                  kernel=None, mesh=None, param_mode: str = "replicated",
                  prefill_chunk: Optional[int] = None,
-                 stream_cb: Optional[Callable[[Request, int], None]] = None):
+                 stream_cb: Optional[Callable[[Request, int], None]] = None,
+                 queue_limit: Optional[int] = None,
+                 overflow_threshold: float = 0.5,
+                 overflow_window: int = 8):
         cfg = bundle.cfg
         if cfg.family == "encdec":
             raise ValueError(
@@ -251,6 +381,17 @@ class ServeSession:
         else:
             self.table = ds_state_or_table
         self._kernel = kernel
+
+        # ---- request-lifecycle / degradation state ------------------------
+        self._outcomes: collections.Counter = collections.Counter()
+        self._overflow_threshold = overflow_threshold
+        self._overflow_hist: Deque[float] = collections.deque(
+            maxlen=max(1, overflow_window))
+        self._breaker_trips = 0
+        self._eff_kernel = kernel              # trip 2 forces 'jnp'
+        self._eff_capacity_factor = None       # None → cfg.ds.capacity_factor
+        self._expert_dispatched: Optional[np.ndarray] = None
+        self._expert_overflow: Optional[np.ndarray] = None
 
         self._gather = None
         self._param_shardings = None
@@ -302,50 +443,23 @@ class ServeSession:
                     self._row_zero,
                 )
         axes = cache_seq_axes(cfg)
-        self.scheduler = Scheduler(n_slots)
+        self.scheduler = Scheduler(n_slots, queue_limit=queue_limit)
         self._tok = np.zeros(n_slots, np.int32)
         self._pos = np.zeros(n_slots, np.int32)
 
-        def _pin(cache):
-            # Keep the cache's sharding a fixed point of every jitted step:
-            # without the constraint XLA may re-layout the carried cache,
-            # and a changed input sharding re-traces the decode step (the
-            # compile-count == 1 invariant the mesh must not break).
-            if self._cache_shardings is None:
-                return cache
-            return jax.tree.map(jax.lax.with_sharding_constraint, cache,
-                                self._cache_shardings)
-
-        def _pin_p(p):
-            # Same fixed-point treatment for FSDP-stored params: pinned
-            # every step so GSPMD canonicalization can never migrate the
-            # storage sharding (and so the per-layer gathers stay the ONLY
-            # collectives touching weights).
-            if self._param_shardings is None:
-                return p
-            return jax.tree.map(jax.lax.with_sharding_constraint, p,
-                                self._param_shardings)
-
         self._prefill_fn = jax.jit(
-            lambda p, t, b: bundle.prefill(_pin_p(p), t, b, k=k,
+            lambda p, t, b: bundle.prefill(self._pin_p(p), t, b, k=k,
                                            kernel=self._kernel,
                                            mesh=self.mesh,
                                            gather=self._gather)
         )
 
-        def _decode(p, t, c, tok, pos):
-            vals, ids, c = bundle.decode_step(
-                _pin_p(p), t, c, tok, pos, k=k, kernel=self._kernel,
-                mesh=self.mesh, gather=self._gather
-            )
-            return vals, ids, _pin(c)
-
-        self._decode_fn = jax.jit(_decode)
+        self._build_decode_fn()
         if prefill_chunk is not None:
             def _chunk(p, t, c, toks, pos0, nv):
                 vals, ids, c = bundle.prefill_chunk(
-                    _pin_p(p), t, c, toks, pos0, nv, k=k, kernel=self._kernel,
-                    mesh=self.mesh, gather=self._gather
+                    self._pin_p(p), t, c, toks, pos0, nv, k=k,
+                    kernel=self._kernel, mesh=self.mesh, gather=self._gather
                 )
                 if self.mesh is not None:
                     c = jax.tree.map(
@@ -366,25 +480,107 @@ class ServeSession:
                     return sh.at[:, slot, : r.shape[2]].set(r[:, 0].astype(sh.dtype))
                 return sh.at[:, slot].set(r[:, 0].astype(sh.dtype))
 
-            return _pin(jax.tree.map(put, shared, row, axes))
+            return self._pin(jax.tree.map(put, shared, row, axes))
 
         self._insert_fn = jax.jit(_insert)
 
+        def _scrub(shared, slot):
+            # Zero EVERY cache row of slot ``slot``. Run after a FAILED
+            # (poisoned) request: inserts only overwrite the next
+            # prompt's length, so a residual NaN row past it — masked
+            # but still multiplied (0·NaN = NaN) — would re-poison the
+            # slot's next tenant.
+            return self._pin(
+                jax.tree.map(lambda sh: sh.at[:, slot].set(0), shared))
+
+        self._scrub_fn = jax.jit(_scrub)
+
+    # -- sharding fixed points ----------------------------------------------
+
+    def _pin(self, cache):
+        # Keep the cache's sharding a fixed point of every jitted step:
+        # without the constraint XLA may re-layout the carried cache,
+        # and a changed input sharding re-traces the decode step (the
+        # compile-count == 1 invariant the mesh must not break).
+        if self._cache_shardings is None:
+            return cache
+        return jax.tree.map(jax.lax.with_sharding_constraint, cache,
+                            self._cache_shardings)
+
+    def _pin_p(self, p):
+        # Same fixed-point treatment for FSDP-stored params: pinned
+        # every step so GSPMD canonicalization can never migrate the
+        # storage sharding (and so the per-layer gathers stay the ONLY
+        # collectives touching weights).
+        if self._param_shardings is None:
+            return p
+        return jax.tree.map(jax.lax.with_sharding_constraint, p,
+                            self._param_shardings)
+
+    def _build_decode_fn(self) -> None:
+        """(Re)build the jitted decode step. Called once at init and again
+        whenever the overflow breaker changes the effective capacity
+        factor or kernel — jit closures capture their constants at trace
+        time, so mutating ``self._eff_*`` alone would silently do
+        nothing; the jit object must be replaced."""
+        bundle, k = self.bundle, self.k
+
+        def _decode(p, t, c, tok, pos):
+            out = bundle.decode_step(
+                self._pin_p(p), t, c, tok, pos, k=k, kernel=self._eff_kernel,
+                mesh=self.mesh, gather=self._gather,
+                capacity_factor=self._eff_capacity_factor, with_stats=True,
+            )
+            vals, ids, c, stats = out
+            return vals, ids, self._pin(c), stats
+
+        self._decode_fn = jax.jit(_decode)
+
     # -- public API ---------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
-        """Enqueue a request (admitted into a slot on the next step).
+    def submit(self, req: Request) -> bool:
+        """Validate and enqueue a request (admitted into a slot on the
+        next step). Returns True if the request was accepted, False if
+        the bounded queue shed it (status ``REJECTED``).
 
-        All shape validation happens HERE, before the request enters the
-        queue — a bad request must never abort a mid-flight decode step
-        (or vanish half-admitted) for the residents.
+        ALL validation happens HERE, before any compute or slot
+        admission — a bad request must never abort a mid-flight decode
+        step (or vanish half-admitted) for the residents. Invalid
+        parameters raise ``ValueError`` naming the offending field, and
+        the request is left with status ``REJECTED`` + ``error``.
         """
-        S = len(np.asarray(req.prompt, np.int32).reshape(-1))
-        sp = req.sampling_params
-        if S < 1:
-            raise ValueError("empty prompt")
-        if S + sp.max_new_tokens - 1 > self.max_seq_len:
+        if req.submit_step is not None or req.status is not RequestStatus.QUEUED:
             raise ValueError(
+                f"request was already submitted (status={req.status.value!r})"
+            )
+
+        def reject(msg: str) -> None:
+            self._finish(req, RequestStatus.REJECTED, msg)
+            raise ValueError(msg)
+
+        sp = req.sampling_params
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        S = len(prompt)
+        if sp.max_new_tokens < 1:
+            reject(f"max_new_tokens must be >= 1, got {sp.max_new_tokens}")
+        if not np.isfinite(sp.temperature) or sp.temperature < 0.0:
+            reject(f"temperature must be finite and >= 0 (0 = greedy), "
+                   f"got {sp.temperature}")
+        if sp.top_k is not None and sp.top_k < 1:
+            reject(f"top_k must be >= 1, got {sp.top_k}")
+        if sp.top_k is not None and sp.top_k > self.cfg.vocab_size:
+            reject(f"top_k ({sp.top_k}) exceeds vocab_size "
+                   f"({self.cfg.vocab_size})")
+        if sp.deadline_steps is not None and sp.deadline_steps < 1:
+            reject(f"deadline_steps must be >= 1, got {sp.deadline_steps}")
+        if S < 1:
+            reject("empty prompt")
+        if prompt.min() < 0 or prompt.max() >= self.cfg.vocab_size:
+            bad = prompt[(prompt < 0) | (prompt >= self.cfg.vocab_size)][0]
+            reject(f"prompt contains token id {bad} outside "
+                   f"[0, {self.cfg.vocab_size})")
+        if S + sp.max_new_tokens - 1 > self.max_seq_len:
+            reject(
                 f"prompt_len ({S}) + max_new_tokens ({sp.max_new_tokens})"
                 f" - 1 exceeds max_seq_len ({self.max_seq_len})"
             )
@@ -395,29 +591,72 @@ class ServeSession:
             cp = self.prefill_chunk
             needed = -(-S // cp) * cp
             if needed > self.max_seq_len:
-                raise ValueError(
+                reject(
                     f"chunked prefill rounds the prompt up to a multiple of"
                     f" prefill_chunk ({cp}): needs {needed} cache rows >"
                     f" max_seq_len ({self.max_seq_len}); raise max_seq_len"
                     " or lower prefill_chunk"
                 )
-        self.scheduler.submit(req)
+        req.submit_step = self.n_steps
         self.requests.append(req)
+        victim = self.scheduler.submit(req)
+        if victim is not None:
+            self._finish(
+                victim, RequestStatus.REJECTED,
+                f"shed: queue full (queue_limit={self.scheduler.queue_limit})",
+            )
+        return victim is not req
+
+    def cancel(self, req: Request) -> bool:
+        """Abort a request mid-flight. A queued request leaves the queue;
+        an active one releases its slot before the next decode step —
+        batchmates are untouched (slots, cache rows and RNG streams are
+        per-request, so survivors stay token-identical). Safe to call
+        from inside ``stream_cb``. Returns False if the request already
+        reached a terminal status (or was never submitted here)."""
+        if req.status in TERMINAL:
+            return False
+        if req in self.scheduler.queue:
+            self.scheduler.queue.remove(req)
+            self._finish(req, RequestStatus.CANCELLED)
+            return True
+        for i, slot in self.scheduler.active():
+            if slot.req is req:
+                self._finish_slot(i, RequestStatus.CANCELLED)
+                return True
+        return False
 
     def step(self) -> bool:
-        """Admit queued prompts into free slots, then run ONE jitted decode
-        step over the slot batch. Returns True while work remains."""
+        """Expire overdue queued requests, admit into free slots, then run
+        ONE jitted decode step over the slot batch. Returns True while
+        work remains."""
+        self._expire_queue()
         self._admit()
         act = self.scheduler.active()
         if not act:
             return self.scheduler.has_work()
-        vals, ids, self._cache = self._decode_fn(
+        vals, ids, self._cache, stats = self._decode_fn(
             self.params, self.table, self._cache,
             jnp.asarray(self._tok), jnp.asarray(self._pos),
         )
         self.n_steps += 1
         vals, ids = np.asarray(vals), np.asarray(ids)
+        self._record_overflow(stats)
         for i, slot in act:
+            if self.scheduler.slots[i] is not slot:
+                continue  # released mid-loop (e.g. cancel from a stream_cb)
+            if not np.isfinite(vals[i]).all() or ids[i, 0] < 0:
+                # quarantine ONLY this slot: per-slot decode math never
+                # mixes rows, so the survivors' outputs are unaffected.
+                # ids[0] < 0 is the masked-NaN signature: XLA's top_k can
+                # sort NaN scores BELOW the finite NEG_INF padding, so a
+                # poisoned row surfaces as all-padding ids rather than
+                # NaN values.
+                self._finish_slot(
+                    i, RequestStatus.FAILED,
+                    "non-finite decode output (slot quarantined)",
+                )
+                continue
             t = self._sample(vals[i], ids[i], slot.req.sampling_params,
                              slot.n_emitted)
             self._emit(i, slot, t)
@@ -432,17 +671,138 @@ class ServeSession:
             pass
         return self.requests
 
-    @property
     def stats(self) -> dict:
+        """Host-side counters snapshot: queue/slot occupancy, per-outcome
+        request counts, shed count, per-expert dispatch/overflow totals
+        and the circuit-breaker state."""
+        o = self._outcomes
+        hist = self._overflow_hist
+        if self.cfg.head == "ds":
+            eff_cf = (self._eff_capacity_factor
+                      if self._eff_capacity_factor is not None
+                      else self.cfg.ds.capacity_factor)
+        else:
+            eff_cf = None
         return {
             "n_admitted": self.scheduler.n_admitted,
             "n_released": self.scheduler.n_released,
             "n_steps": self.n_steps,
             "n_queued": len(self.scheduler.queue),
+            "queue_depth": len(self.scheduler.queue),
             "n_active": len(self.scheduler.active()),
+            "n_completed": o[RequestStatus.COMPLETED],
+            "n_rejected": o[RequestStatus.REJECTED],
+            "n_cancelled": o[RequestStatus.CANCELLED],
+            "n_timed_out": o[RequestStatus.TIMED_OUT],
+            "n_failed": o[RequestStatus.FAILED],
+            "n_shed": self.scheduler.n_shed,
+            "overflow_rate": (sum(hist) / len(hist)) if hist else 0.0,
+            "expert_dispatched": (
+                self._expert_dispatched.tolist()
+                if self._expert_dispatched is not None else None),
+            "expert_overflow": (
+                self._expert_overflow.tolist()
+                if self._expert_overflow is not None else None),
+            "breaker_trips": self._breaker_trips,
+            "effective_capacity_factor": eff_cf,
+            "effective_kernel": self._eff_kernel,
         }
 
     # -- internals ----------------------------------------------------------
+
+    def _finish(self, req: Request, status: RequestStatus,
+                error: Optional[str] = None) -> None:
+        """Record a request's terminal outcome (single choke point — every
+        terminal transition goes through here)."""
+        assert status in TERMINAL
+        req.status = status
+        if error is not None:
+            req.error = error
+        self._outcomes[status] += 1
+        if status is RequestStatus.FAILED:
+            log.warning("request FAILED: %s", error)
+
+    def _finish_slot(self, i: int, status: RequestStatus,
+                     error: Optional[str] = None) -> None:
+        """Terminal outcome for a resident request: release the slot and
+        zero its feedback token/position (the row decodes garbage-free
+        dummy tokens until re-admission, exactly like a drained slot)."""
+        slot = self.scheduler.slots[i]
+        self._finish(slot.req, status, error)
+        self.scheduler.release(i)
+        self._tok[i] = 0
+        self._pos[i] = 0
+        if status is RequestStatus.FAILED:
+            # decontaminate: the slot's cache rows are non-finite and a
+            # later (shorter) tenant's insert would not overwrite all of
+            # them — masked attention still multiplies them (0·NaN=NaN)
+            self._cache = self._scrub_fn(self._cache, i)
+
+    def _expire_queue(self) -> None:
+        overdue = [
+            r for r in self.scheduler.queue
+            if r.sampling_params.deadline_steps is not None
+            and self.n_steps - r.submit_step
+            >= r.sampling_params.deadline_steps
+        ]
+        for req in overdue:
+            self.scheduler.queue.remove(req)
+            self._finish(
+                req, RequestStatus.TIMED_OUT,
+                f"deadline_steps={req.sampling_params.deadline_steps} "
+                "exceeded while queued",
+            )
+
+    def _record_overflow(self, stats) -> None:
+        disp = np.asarray(stats["dispatched"], np.int64)
+        over = np.asarray(stats["overflow"], np.int64)
+        if self._expert_dispatched is None:
+            self._expert_dispatched = np.zeros_like(disp)
+            self._expert_overflow = np.zeros_like(over)
+        self._expert_dispatched += disp
+        self._expert_overflow += over
+        rate = float(over.sum()) / max(float(disp.sum()), 1.0)
+        self._overflow_hist.append(rate)
+        self._maybe_trip_breaker()
+
+    def _maybe_trip_breaker(self) -> None:
+        """Graceful degradation when capacity overflow stops being rare.
+
+        Overflowed tokens are still EXACT (the grouped kernels re-run
+        them through the fixup path), but a sustained overflow rate means
+        the capacity buffers are mis-sized for the live token mix and the
+        fixup dominates the step. Trip 1 doubles the effective
+        ``capacity_factor``; trip 2 abandons capacity buffers entirely
+        and falls back to the always-exact ``'jnp'`` path (which never
+        overflows, so the breaker naturally stops here)."""
+        if self.cfg.head != "ds" or self._breaker_trips >= 2:
+            return
+        hist = self._overflow_hist
+        if len(hist) < hist.maxlen:
+            return
+        rate = sum(hist) / len(hist)
+        if rate <= self._overflow_threshold:
+            return
+        self._breaker_trips += 1
+        if self._breaker_trips == 1:
+            base = self.cfg.ds.capacity_factor
+            self._eff_capacity_factor = 2.0 * base
+            log.warning(
+                "overflow breaker trip 1: mean rate %.3f > %.3f over %d "
+                "steps; capacity_factor %.2f -> %.2f (decode step rebuilt)",
+                rate, self._overflow_threshold, hist.maxlen, base,
+                self._eff_capacity_factor,
+            )
+        else:
+            self._eff_kernel = "jnp"
+            log.warning(
+                "overflow breaker trip 2: mean rate %.3f still > %.3f after "
+                "capacity bump; falling back to the always-exact 'jnp' "
+                "serve path (decode step rebuilt)",
+                rate, self._overflow_threshold,
+            )
+        self._overflow_hist.clear()
+        self._build_decode_fn()
 
     def _admit(self) -> None:
         sched = self.scheduler
@@ -450,13 +810,27 @@ class ServeSession:
             i = sched.free_slot()
             if i is None:
                 return
-            req = sched.queue.popleft()
+            req = sched.pop_next()
             prompt = np.asarray(req.prompt, np.int32).reshape(-1)
             S = len(prompt)  # validated in submit()
             sp = req.sampling_params
             vals, ids = self._prefill_into_slot(prompt, i)
+            vals, ids = np.asarray(vals), np.asarray(ids)
+            if not np.isfinite(vals[0]).all() or ids[0, 0] < 0:
+                # quarantine BEFORE admission: the slot stays free and
+                # its poisoned cache rows are scrubbed so the next
+                # tenant (whose prompt may be shorter than this one)
+                # never inherits a residual NaN row
+                # (ids[0] < 0 = masked-NaN signature, see step())
+                self._finish(
+                    req, RequestStatus.FAILED,
+                    "non-finite prefill output (request quarantined)",
+                )
+                self._cache = self._scrub_fn(self._cache, i)
+                continue
             slot = sched.admit(i, req, S)
-            t0 = self._sample(np.asarray(vals)[0], np.asarray(ids)[0], sp, 0)
+            req.status = RequestStatus.ACTIVE
+            t0 = self._sample(vals[0], ids[0], sp, 0)
             self._emit(i, slot, t0)
 
     def _prefill_into_slot(self, prompt: np.ndarray, i: int):
@@ -486,8 +860,9 @@ class ServeSession:
         it runs solo or batched with others (token-identity invariant)."""
         if sp.temperature <= 0.0:
             return int(ids[0])
+        k_eff = len(ids) if sp.top_k is None else min(sp.top_k, len(ids))
         key = jax.random.fold_in(jax.random.PRNGKey(sp.seed), n_emitted)
-        logits = jnp.asarray(vals, jnp.float32) / sp.temperature
+        logits = jnp.asarray(vals[:k_eff], jnp.float32) / sp.temperature
         return int(ids[int(jax.random.categorical(key, logits))])
 
     def _emit(self, i: int, slot: _Slot, token: int) -> None:
@@ -496,17 +871,34 @@ class ServeSession:
         req.out_tokens.append(token)
         slot.n_emitted += 1
         if self.stream_cb is not None:
-            self.stream_cb(req, token)
+            try:
+                self.stream_cb(req, token)
+            except Exception as e:
+                # contain: one raising callback fails ONLY its request;
+                # the step loop and the other residents keep going
+                self._finish_slot(i, RequestStatus.FAILED,
+                                  f"stream_cb raised: {e!r}")
+                return
+        if req.status is not RequestStatus.ACTIVE:
+            return  # cancelled (or otherwise finished) inside the callback
         finished = (sp.eos_id is not None and token == sp.eos_id) \
             or slot.n_emitted >= sp.max_new_tokens
         if finished:
-            req.done = True
-            self.scheduler.release(i)
-            self._tok[i] = 0
-            self._pos[i] = 0
-        else:
-            self._tok[i] = token
-            self._pos[i] = slot.pos
+            self._finish_slot(i, RequestStatus.COMPLETED)
+            return
+        if sp.deadline_steps is not None \
+                and self.n_steps - req.submit_step >= sp.deadline_steps:
+            self._finish_slot(
+                i, RequestStatus.TIMED_OUT,
+                f"deadline_steps={sp.deadline_steps} exceeded mid-decode "
+                f"({slot.n_emitted} tokens emitted)",
+            )
+            return
+        self._tok[i] = token
+        self._pos[i] = slot.pos
+
+
+_ENGINE_WARNED = False
 
 
 class ServeEngine:
@@ -529,6 +921,13 @@ class ServeEngine:
 
     def __init__(self, bundle: ModelBundle, params, ds_state, *, greedy: bool = True,
                  serve_kernel=None):
+        global _ENGINE_WARNED
+        if not _ENGINE_WARNED:
+            _ENGINE_WARNED = True
+            warnings.warn(
+                "ServeEngine is deprecated; use ServeSession directly",
+                DeprecationWarning, stacklevel=2,
+            )
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.params = params

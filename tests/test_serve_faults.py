@@ -1,0 +1,531 @@
+"""Chaos suite: request-lifecycle hardening under injected faults.
+
+Acceptance (ISSUE 6): every injected fault must end its request in the
+correct terminal :class:`RequestStatus`, the session must keep serving,
+and surviving batchmates must emit tokens BIT-IDENTICAL to a fault-free
+run (kernel='jnp' oracle) — quarantine and cancellation never perturb
+residents. The decode step's compile count stays 1 through the
+non-finite guard (the guard is host-side, on the fetched top-k values);
+only a circuit-breaker trip rebuilds the jitted step.
+
+Fault injectors live in ``repro.testing.faults``; the 8-fake-device
+mesh/fsdp variants run in the distributed CI job (see
+``conftest.make_test_mesh``).
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_test_mesh, needs_devices
+from repro.configs import get_config, reduce_config
+from repro.core import dssoftmax as ds
+from repro.models import build
+from repro.testing import (
+    CancelAfter,
+    RaisingStreamCB,
+    oversized_prompt,
+    poison_cache_slot,
+    poison_layer,
+    poison_token_embedding,
+    skew_gate,
+)
+from repro.train import Request, RequestStatus, SamplingParams, ServeSession
+from repro.train import serve as serve_mod
+
+needs8 = needs_devices(8)
+
+
+def _tiny_family(arch, vocab):
+    cfg = reduce_config(get_config(arch), vocab=vocab).replace(
+        ds=get_config(arch).ds.replace(num_experts=4)
+    )
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    table = ds.pack_experts(params["head"], ds_state)
+    return bundle, params, table
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return _tiny_family("qwen2-1.5b", 128)
+
+
+def _requests(vocab, n=4, seed=0, max_new=5, **sp):
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, vocab, rng.randint(3, 8)).astype(np.int32)
+               for _ in range(n)]
+    return [Request(prompt=p,
+                    sampling=SamplingParams(max_new_tokens=max_new, **sp))
+            for p in prompts]
+
+
+def _clean_reference(bundle, params, table, reqs, **kw):
+    """Fault-free oracle run of the same prompts/params (kernel='jnp')."""
+    sess = ServeSession(bundle, params, table, kernel="jnp", **kw)
+    ref = [Request(prompt=r.prompt.copy(), sampling=r.sampling_params)
+           for r in reqs]
+    sess.run(ref)
+    return [r.out_tokens for r in ref]
+
+
+def _absent_token(vocab, reqs, ref):
+    """A token id the clean requests never touch — not in their prompts
+    and never emitted (an emitted token feeds back through the embedding,
+    so a poisoned row it hits would *correctly* quarantine them too)."""
+    used = set()
+    for r in reqs:
+        used.update(int(t) for t in r.prompt)
+    for toks in ref:
+        used.update(toks)
+    return max(set(range(vocab)) - used)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: submit-time validation names the offending field
+# ---------------------------------------------------------------------------
+
+def test_submit_validation_names_bad_field(tiny):
+    bundle, params, table = tiny
+    sess = ServeSession(bundle, params, table, n_slots=2, max_seq_len=16,
+                        kernel="jnp")
+    prompt = np.arange(4, dtype=np.int32)
+    bad = [
+        (dict(max_new_tokens=0), "max_new_tokens"),
+        (dict(max_new_tokens=-3), "max_new_tokens"),
+        (dict(temperature=-0.5), "temperature"),
+        (dict(temperature=float("nan")), "temperature"),
+        (dict(top_k=0), "top_k"),
+        (dict(top_k=129), "top_k"),  # vocab_size = 128
+        (dict(deadline_steps=0), "deadline_steps"),
+    ]
+    for kw, fieldname in bad:
+        req = Request(prompt=prompt, sampling=SamplingParams(**kw))
+        with pytest.raises(ValueError, match=fieldname):
+            sess.submit(req)
+        assert req.status is RequestStatus.REJECTED
+        assert fieldname in req.error
+    with pytest.raises(ValueError, match="token id"):
+        sess.submit(Request(prompt=np.array([3, 500], np.int32)))
+    with pytest.raises(ValueError, match="max_seq_len"):
+        sess.submit(Request(prompt=oversized_prompt(128, 16)))
+    with pytest.raises(ValueError, match="empty prompt"):
+        sess.submit(Request(prompt=np.array([], np.int32)))
+    # nothing was queued/admitted and NO compute ran
+    assert not sess.scheduler.has_work()
+    assert sess.stats()["n_rejected"] == len(bad) + 3
+    assert sess._prefill_fn._cache_size() == 0
+    assert sess._decode_fn._cache_size() == 0
+
+
+def test_resubmission_rejected(tiny):
+    bundle, params, table = tiny
+    sess = ServeSession(bundle, params, table, n_slots=1, max_seq_len=16,
+                        kernel="jnp")
+    req = Request(prompt=np.arange(3, dtype=np.int32),
+                  sampling=SamplingParams(max_new_tokens=2))
+    sess.run([req])
+    assert req.status is RequestStatus.COMPLETED
+    with pytest.raises(ValueError, match="already submitted"):
+        sess.submit(req)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: typed outcomes + mid-flight cancel
+# ---------------------------------------------------------------------------
+
+def test_cancel_mid_flight_survivors_bit_identical(tiny):
+    bundle, params, table = tiny
+    reqs = _requests(128, n=3, max_new=8)
+    ref = _clean_reference(bundle, params, table, reqs,
+                          n_slots=3, max_seq_len=32)
+    sess = ServeSession(bundle, params, table, n_slots=3, max_seq_len=32,
+                        kernel="jnp")
+    for r in reqs:
+        sess.submit(r)
+    for _ in range(3):  # all resident, a few tokens emitted
+        sess.step()
+    victim = reqs[1]
+    assert sess.cancel(victim)
+    assert victim.status is RequestStatus.CANCELLED
+    assert not sess.cancel(victim)  # idempotent: already terminal
+    # the freed slot admits a NEW request mid-flight
+    late = Request(prompt=np.arange(5, dtype=np.int32),
+                   sampling=SamplingParams(max_new_tokens=3))
+    sess.submit(late)
+    while sess.step():
+        pass
+    assert victim.out_tokens == ref[1][:len(victim.out_tokens)]
+    assert len(victim.out_tokens) < len(ref[1])
+    for i in (0, 2):  # survivors: bit-identical to the fault-free run
+        assert reqs[i].status is RequestStatus.COMPLETED
+        assert reqs[i].out_tokens == ref[i]
+    assert late.status is RequestStatus.COMPLETED
+    s = sess.stats()
+    assert s["n_cancelled"] == 1 and s["n_completed"] == 3
+    assert sess._decode_fn._cache_size() == 1
+
+
+def test_cancel_queued_request(tiny):
+    bundle, params, table = tiny
+    sess = ServeSession(bundle, params, table, n_slots=1, max_seq_len=32,
+                        kernel="jnp")
+    r0, r1 = _requests(128, n=2, max_new=6)
+    sess.submit(r0)
+    sess.submit(r1)  # waits behind r0 (1 slot)
+    sess.step()
+    assert r1.status is RequestStatus.QUEUED
+    assert sess.cancel(r1)
+    assert r1.status is RequestStatus.CANCELLED and r1.out_tokens == []
+    while sess.step():
+        pass
+    assert r0.status is RequestStatus.COMPLETED
+
+
+def test_cancel_from_inside_stream_cb(tiny):
+    """Reentrant cancel: the callback releases the emitting slot while
+    the step loop is mid-walk; batchmates must be untouched."""
+    bundle, params, table = tiny
+    reqs = _requests(128, n=3, max_new=8)
+    ref = _clean_reference(bundle, params, table, reqs,
+                          n_slots=3, max_seq_len=32)
+    sess = ServeSession(bundle, params, table, n_slots=3, max_seq_len=32,
+                        kernel="jnp")
+    cb = CancelAfter(sess, reqs[0], after=3)
+    sess.stream_cb = cb
+    sess.run(reqs)
+    assert cb.cancelled
+    assert reqs[0].status is RequestStatus.CANCELLED
+    assert reqs[0].out_tokens == ref[0][:3]
+    for i in (1, 2):
+        assert reqs[i].status is RequestStatus.COMPLETED
+        assert reqs[i].out_tokens == ref[i]
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: poisoned-request quarantine (prefill + decode paths)
+# ---------------------------------------------------------------------------
+
+def test_poisoned_embedding_quarantined_at_prefill(tiny):
+    """NaN one embedding row: ONLY prompts containing that token fail
+    (before admission — no slot is ever occupied by them); survivors are
+    bit-identical and the session drains normally."""
+    bundle, params, table = tiny
+    reqs = _requests(128, n=4, max_new=5)
+    clean = [r for i, r in enumerate(reqs) if i != 1]
+    ref = _clean_reference(bundle, params, table, clean,
+                           n_slots=2, max_seq_len=32)
+    poisoned_tok = _absent_token(128, clean, ref)
+    reqs[1].prompt[2] = poisoned_tok  # exactly one poisoned request
+    bad_params = poison_token_embedding(params, poisoned_tok)
+    sess = ServeSession(bundle, bad_params, table, n_slots=2, max_seq_len=32,
+                        kernel="jnp")
+    sess.run(reqs)
+    assert reqs[1].status is RequestStatus.FAILED
+    assert "prefill" in reqs[1].error and reqs[1].out_tokens == []
+    for r, e in zip(clean, ref):
+        assert r.status is RequestStatus.COMPLETED
+        assert r.out_tokens == e
+    s = sess.stats()
+    assert s["n_failed"] == 1 and s["n_completed"] == 3
+    assert not sess.scheduler.has_work()
+
+
+def test_poisoned_layer_fails_all_requests_session_survives(tiny):
+    """NaN a whole backbone layer: every request FAILs at prefill, but
+    the session itself never raises and drains cleanly."""
+    bundle, params, table = tiny
+    bad_params = poison_layer(params, 0)
+    sess = ServeSession(bundle, bad_params, table, n_slots=2, max_seq_len=32,
+                        kernel="jnp")
+    reqs = _requests(128, n=3, max_new=4)
+    sess.run(reqs)  # must not raise
+    for r in reqs:
+        assert r.status is RequestStatus.FAILED
+        assert r.out_tokens == []
+    assert sess.stats()["n_failed"] == 3
+    assert not sess.scheduler.has_work()
+
+
+def test_poisoned_cache_slot_quarantined_mid_decode(tiny):
+    """NaN one slot's shared-cache rows mid-flight: that slot FAILs on
+    its next decode step, the survivor is bit-identical, and the decode
+    step is NOT retraced (the non-finite guard is host-side)."""
+    bundle, params, table = tiny
+    reqs = _requests(128, n=2, seed=3, max_new=8)
+    ref = _clean_reference(bundle, params, table, reqs,
+                          n_slots=2, max_seq_len=32)
+    sess = ServeSession(bundle, params, table, n_slots=2, max_seq_len=32,
+                        kernel="jnp")
+    for r in reqs:
+        sess.submit(r)
+    sess.step()
+    sess.step()
+    victim_slot = next(i for i, s in sess.scheduler.active()
+                       if s.req is reqs[0])
+    poison_cache_slot(sess, victim_slot)
+    while sess.step():
+        pass
+    assert reqs[0].status is RequestStatus.FAILED
+    assert "quarantined" in reqs[0].error
+    # partial output up to the poison point is the fault-free prefix
+    assert reqs[0].out_tokens == ref[0][:len(reqs[0].out_tokens)]
+    assert reqs[1].status is RequestStatus.COMPLETED
+    assert reqs[1].out_tokens == ref[1]
+    assert sess._decode_fn._cache_size() == 1  # guard cost: zero retraces
+
+
+@pytest.mark.parametrize("arch,vocab", [("mamba2-130m", 96),
+                                        ("zamba2-7b", 96)])
+def test_family_quarantine_ssm_hybrid(arch, vocab):
+    """The quarantine contract holds for the ssm/hybrid decode paths
+    (recurrent state rows are as per-slot as KV rows)."""
+    bundle, params, table = _tiny_family(arch, vocab)
+    reqs = _requests(vocab, n=3, seed=5, max_new=4)
+    clean = reqs[1:]
+    ref = _clean_reference(bundle, params, table, clean,
+                           n_slots=2, max_seq_len=16)
+    poisoned_tok = _absent_token(vocab, clean, ref)
+    reqs[0].prompt[0] = poisoned_tok
+    bad_params = poison_token_embedding(params, poisoned_tok)
+    sess = ServeSession(bundle, bad_params, table, n_slots=2, max_seq_len=16,
+                        kernel="jnp")
+    sess.run(reqs)
+    assert reqs[0].status is RequestStatus.FAILED
+    for r, e in zip(clean, ref):
+        assert r.status is RequestStatus.COMPLETED
+        assert r.out_tokens == e
+
+
+# ---------------------------------------------------------------------------
+# Satellite: raising stream_cb is contained
+# ---------------------------------------------------------------------------
+
+def test_raising_stream_cb_fails_only_its_request(tiny):
+    bundle, params, table = tiny
+    reqs = _requests(128, n=3, seed=2, max_new=6)
+    ref = _clean_reference(bundle, params, table, reqs,
+                          n_slots=3, max_seq_len=32)
+    sess = ServeSession(bundle, params, table, n_slots=3, max_seq_len=32,
+                        kernel="jnp")
+    cb = RaisingStreamCB(target=reqs[2], after=2)
+    sess.stream_cb = cb
+    sess.run(reqs)  # must not raise
+    assert reqs[2].status is RequestStatus.FAILED
+    assert "stream_cb" in reqs[2].error
+    assert reqs[2].out_tokens == ref[2][:2]  # token appended before the cb
+    for i in (0, 1):
+        assert reqs[i].status is RequestStatus.COMPLETED
+        assert reqs[i].out_tokens == ref[i]
+    # the loop kept streaming the survivors after the fault
+    assert cb.n_calls > cb.n_target_calls
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: deadlines (queued + mid-decode)
+# ---------------------------------------------------------------------------
+
+def test_deadline_times_out_queued_request(tiny):
+    bundle, params, table = tiny
+    sess = ServeSession(bundle, params, table, n_slots=1, max_seq_len=32,
+                        kernel="jnp")
+    hog = Request(prompt=np.arange(4, dtype=np.int32),
+                  sampling=SamplingParams(max_new_tokens=10))
+    waiter = Request(prompt=np.arange(4, dtype=np.int32) + 1,
+                     sampling=SamplingParams(max_new_tokens=5,
+                                             deadline_steps=3))
+    sess.submit(hog)
+    sess.submit(waiter)
+    sess.run()
+    assert hog.status is RequestStatus.COMPLETED
+    assert waiter.status is RequestStatus.TIMED_OUT
+    assert "while queued" in waiter.error and waiter.out_tokens == []
+    assert sess.stats()["n_timed_out"] == 1
+
+
+def test_deadline_times_out_active_request_keeps_partial(tiny):
+    bundle, params, table = tiny
+    sess = ServeSession(bundle, params, table, n_slots=1, max_seq_len=64,
+                        kernel="jnp")
+    req = Request(prompt=np.arange(6, dtype=np.int32),
+                  sampling=SamplingParams(max_new_tokens=20,
+                                          deadline_steps=4))
+    sess.run([req])
+    assert req.status is RequestStatus.TIMED_OUT
+    assert "mid-decode" in req.error
+    assert 0 < len(req.out_tokens) < 20  # partial output retained
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: bounded queue + priority shedding
+# ---------------------------------------------------------------------------
+
+def test_queue_limit_sheds_lowest_priority_newest(tiny):
+    bundle, params, table = tiny
+    order = []
+    sess = ServeSession(bundle, params, table, n_slots=1, max_seq_len=32,
+                        kernel="jnp", queue_limit=2,
+                        stream_cb=lambda r, t: order.append(r))
+    mk = lambda i, pri, mn=2: Request(
+        prompt=np.arange(3, dtype=np.int32) + i,
+        sampling=SamplingParams(max_new_tokens=mn, priority=pri))
+    r_active = mk(0, 0, mn=8)
+    assert sess.submit(r_active)
+    sess.step()  # r_active occupies the single slot; the rest queue up
+    r1, r2 = mk(1, 0), mk(2, 1)
+    assert sess.submit(r1) and sess.submit(r2)  # queue now full
+    # equal-lowest priority: the INCOMING (newest) request is the victim
+    r3 = mk(3, 0)
+    assert not sess.submit(r3)
+    assert r3.status is RequestStatus.REJECTED and "shed" in r3.error
+    # higher priority displaces the queued lowest-priority request
+    r4 = mk(4, 2)
+    assert sess.submit(r4)
+    assert r1.status is RequestStatus.REJECTED and "shed" in r1.error
+    sess.run()
+    # admission honored priority: r4 (pri 2) decoded before r2 (pri 1)
+    first_tok_order = [r for i, r in enumerate(order)
+                      if r not in order[:i]]
+    assert first_tok_order.index(r4) < first_tok_order.index(r2)
+    for r in (r_active, r2, r4):
+        assert r.status is RequestStatus.COMPLETED
+    s = sess.stats()
+    assert s["n_shed"] == 2 and s["n_rejected"] == 2 and s["n_completed"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: overflow circuit-breaker degradation
+# ---------------------------------------------------------------------------
+
+def test_overflow_breaker_degrades_and_stays_exact(tiny):
+    """skew_gate routes EVERY token to expert 0 → the grouped kernel's
+    per-expert capacity (round(B/K·cf)) overflows on most rows every
+    step. The breaker must trip twice (capacity bump, then the
+    always-exact jnp fallback) while tokens stay identical to the jnp
+    oracle throughout — overflowed rows are exact via the fixup path."""
+    bundle, params, table = tiny
+    # a deliberately undersized base capacity (round(8/4·0.25) → 1 slot
+    # per expert) so overflow SURVIVES the trip-1 doubling and forces
+    # the trip-2 jnp fallback; the table layout is capacity-independent
+    cfg = bundle.cfg.replace(ds=bundle.cfg.ds.replace(capacity_factor=0.25))
+    bundle = build(cfg)
+    skewed = skew_gate(params)
+    reqs = _requests(128, n=8, seed=4, max_new=12)
+    ref = _clean_reference(bundle, skewed, table, reqs,
+                          n_slots=8, max_seq_len=32)
+    sess = ServeSession(bundle, skewed, table, n_slots=8, max_seq_len=32,
+                        kernel="grouped", overflow_threshold=0.3,
+                        overflow_window=4)
+    sess.run(reqs)
+    s = sess.stats()
+    assert s["breaker_trips"] == 2
+    assert s["effective_kernel"] == "jnp"
+    assert s["effective_capacity_factor"] == pytest.approx(0.5)
+    # telemetry: everything routed to expert 0, which overflowed
+    disp = np.asarray(s["expert_dispatched"])
+    over = np.asarray(s["expert_overflow"])
+    assert disp[0] > 0 and disp[1:].sum() == 0
+    assert over[0] > 0 and over[1:].sum() == 0
+    # exactness held across BOTH degradations
+    for r, e in zip(reqs, ref):
+        assert r.status is RequestStatus.COMPLETED
+        assert r.out_tokens == e
+
+
+def test_breaker_quiet_workload_never_trips(tiny):
+    bundle, params, table = tiny
+    reqs = _requests(128, n=4, seed=6, max_new=6)
+    sess = ServeSession(bundle, params, table, n_slots=2, max_seq_len=32,
+                        kernel="jnp", overflow_window=2)
+    sess.run(reqs)
+    s = sess.stats()
+    assert s["breaker_trips"] == 0
+    assert s["overflow_rate"] == 0.0  # jnp path has no capacity to overflow
+    assert s["effective_kernel"] == "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Satellite: ServeEngine shim deprecation (+ still routes via ServeSession)
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_warns_deprecation_once_per_process(tiny):
+    bundle, params, table = tiny
+    cfg = reduce_config(get_config("qwen2-1.5b"), vocab=128).replace(
+        ds=get_config("qwen2-1.5b").ds.replace(num_experts=4))
+    _, ds_state = bundle.init(jax.random.PRNGKey(0))
+    serve_mod._ENGINE_WARNED = False
+    from repro.train import ServeEngine
+    with pytest.warns(DeprecationWarning, match="ServeEngine is deprecated"):
+        eng = ServeEngine(bundle, params, ds_state, serve_kernel="jnp")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a second warning would raise
+        ServeEngine(bundle, params, ds_state, serve_kernel="jnp")
+    # the shim still routes through ServeSession with identical tokens
+    req = Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=4)
+    eng.generate([req])
+    direct = Request(prompt=np.arange(5, dtype=np.int32),
+                     sampling=SamplingParams(max_new_tokens=4))
+    ServeSession(bundle, params, table, n_slots=1, max_seq_len=32,
+                 kernel="jnp").run([direct])
+    assert req.status is RequestStatus.COMPLETED
+    assert req.out_tokens == direct.out_tokens
+
+
+# ---------------------------------------------------------------------------
+# Distributed CI job: faults under mesh= / param_mode='fsdp'
+# ---------------------------------------------------------------------------
+
+@needs8
+@pytest.mark.parametrize("param_mode", ["replicated", "fsdp"])
+def test_faults_on_mesh_survivors_token_identical(tiny, param_mode):
+    """Quarantine + mid-flight cancel on an 8-fake-device mesh (experts
+    sharded over 'model', slots over 'data', optionally FSDP-stored
+    weights): survivors must match the unsharded fault-free oracle."""
+    bundle, params, table = tiny
+    mesh = make_test_mesh("4x2")
+    reqs = _requests(128, n=4, seed=8, max_new=5)
+    clean = [r for i, r in enumerate(reqs) if i != 1]
+    ref = _clean_reference(bundle, params, table, clean,
+                           n_slots=4, max_seq_len=32)
+    poisoned_tok = _absent_token(128, clean, ref)
+    reqs[1].prompt[1] = poisoned_tok
+    bad_params = poison_token_embedding(params, poisoned_tok)
+    sess = ServeSession(bundle, bad_params, table, n_slots=4, max_seq_len=32,
+                        kernel="jnp", mesh=mesh, param_mode=param_mode)
+    for r in reqs:
+        sess.submit(r)
+    sess.step()
+    assert sess.cancel(clean[2])  # mid-flight cancel under the mesh
+    while sess.step():
+        pass
+    assert reqs[1].status is RequestStatus.FAILED
+    assert clean[2].status is RequestStatus.CANCELLED
+    assert clean[2].out_tokens == ref[2][:len(clean[2].out_tokens)]
+    for i in (0, 1):
+        assert clean[i].status is RequestStatus.COMPLETED
+        assert clean[i].out_tokens == ref[i]
+    assert sess._decode_fn._cache_size() == 1
+
+
+@needs8
+def test_deadline_and_shed_on_mesh(tiny):
+    bundle, params, table = tiny
+    mesh = make_test_mesh("4x2")
+    sess = ServeSession(bundle, params, table, n_slots=1, max_seq_len=32,
+                        kernel="jnp", mesh=mesh, queue_limit=1)
+    hog = Request(prompt=np.arange(4, dtype=np.int32),
+                  sampling=SamplingParams(max_new_tokens=8))
+    waiter = Request(prompt=np.arange(4, dtype=np.int32) + 1,
+                     sampling=SamplingParams(max_new_tokens=4,
+                                             deadline_steps=2))
+    shed_me = Request(prompt=np.arange(4, dtype=np.int32) + 2,
+                      sampling=SamplingParams(max_new_tokens=4))
+    sess.submit(hog)
+    sess.step()  # admit hog into the single slot (admission runs in step())
+    sess.submit(waiter)
+    assert not sess.submit(shed_me)  # bounded queue full
+    sess.run()
+    assert hog.status is RequestStatus.COMPLETED
+    assert waiter.status is RequestStatus.TIMED_OUT
+    assert shed_me.status is RequestStatus.REJECTED

@@ -130,7 +130,7 @@ def test_fsdp_token_identical_mixed_workload(tiny, meshspec, prefill_chunk):
                            param_mode="fsdp", prefill_chunk=prefill_chunk)
     assert out == ref
     assert sess._decode_fn._cache_size() == 1
-    assert sess.stats["n_admitted"] == 6 > sess.n_slots  # slots recycled
+    assert sess.stats()["n_admitted"] == 6 > sess.n_slots  # slots recycled
     if prefill_chunk is not None:
         assert sess._chunk_fn._cache_size() == 1
 

@@ -86,8 +86,8 @@ def test_mixed_workload_token_identical_with_slot_reuse(
         assert r.done
         assert r.out_tokens == expected
     # continuous batching actually recycled slots
-    assert sess.stats["n_admitted"] == 6 > sess.n_slots
-    assert sess.stats["n_released"] == 6
+    assert sess.stats()["n_admitted"] == 6 > sess.n_slots
+    assert sess.stats()["n_released"] == 6
 
 
 def test_heterogeneous_max_new_exact_lengths(tiny, reference_outputs):
@@ -203,7 +203,7 @@ def test_hybrid_family_session_token_identical():
     sess.run(reqs)
     for r, e in zip(reqs, expected):
         assert r.done and r.out_tokens == e
-    assert sess.stats["n_admitted"] == 4 > sess.n_slots
+    assert sess.stats()["n_admitted"] == 4 > sess.n_slots
 
 
 @pytest.mark.parametrize("arch", ["mamba2-130m", "zamba2-7b"])
@@ -238,7 +238,7 @@ def test_ssm_hybrid_chunked_prefill_token_identical(arch):
         assert rc.done
         assert rc.out_tokens == rw.out_tokens
     # mid-flight admits into freed slots actually happened ...
-    assert sess_c.stats["n_admitted"] == 5 > sess_c.n_slots
+    assert sess_c.stats()["n_admitted"] == 5 > sess_c.n_slots
     # ... and every prompt length shared ONE compiled prefill
     assert sess_c._chunk_fn._cache_size() == 1
     assert sess_c._prefill_fn._cache_size() == 0  # whole-prompt path unused

@@ -178,7 +178,7 @@ def test_session_mesh_token_identical_with_compile_count(
                            prefill_chunk=prefill_chunk)
     assert out == ref
     assert sess._decode_fn._cache_size() == 1
-    assert sess.stats["n_admitted"] == 6 > sess.n_slots  # slots recycled
+    assert sess.stats()["n_admitted"] == 6 > sess.n_slots  # slots recycled
     if prefill_chunk is not None:
         assert sess._chunk_fn._cache_size() == 1
 
