@@ -30,6 +30,13 @@ Metrics written to ``BENCH_serve_engine.json``:
                          lengths (1 proves every length shares one
                          compiled chunked prefill; whole-prompt prefill
                          pays one XLA compile per distinct length).
+* ``prefix_heavy``     — Zipf-shared system prompts through the paged
+                         KV arena vs the contiguous cache: tokens/s
+                         (token-identical), PREFILL STEPS SAVED by
+                         copy-on-write prefix sharing (> 0 asserted),
+                         and an overloaded replay comparing
+                         preempt-and-requeue (paged, priorities) against
+                         shed-only degradation: p95 + completion counts.
 * ``param_modes``      — FSDP-stored vs replicated backbone weights under
                          one mesh: peak per-device resident param bytes
                          (the FSDP memory ceiling, ~ndata× lower on the
@@ -254,6 +261,151 @@ def run_param_modes(fast: bool) -> dict:
     return out
 
 
+def run_prefix_heavy(fast: bool) -> dict:
+    """Prefix-heavy traffic (Zipf-shared system prompts) through the
+    paged KV arena vs the contiguous cache. Headline columns:
+    ``prefill_steps_saved`` (chunk calls the copy-on-write prefix
+    sharing skipped — MUST be > 0 on this trace), tokens/s for both
+    modes (token-identical by assertion), and an overloaded replay where
+    the paged session may PREEMPT low-priority residents (instead of
+    only shedding from the queue like the contiguous one): p95 token
+    latency and completion counts for both policies."""
+    if fast:
+        n_requests, n_slots, chunk, ps = 12, 4, 4, 8
+        max_new, vocab, n_sys = 4, 512, 2
+    else:
+        n_requests, n_slots, chunk, ps = 48, 8, 8, 16
+        max_new, vocab, n_sys = 8, 2048, 4
+    max_seq = 64
+    cfg = reduce_config(get_config("qwen2-1.5b"), vocab=vocab)
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    sys_prompts = [rng.randint(0, vocab, 16).astype(np.int32)
+                   for _ in range(n_sys)]
+    zipf = 1.0 / np.arange(1, n_sys + 1)
+    zipf /= zipf.sum()
+    proto = []
+    for _ in range(n_requests):
+        sp = sys_prompts[int(rng.choice(n_sys, p=zipf))]
+        tail = rng.randint(0, vocab, int(rng.randint(3, 8))).astype(np.int32)
+        proto.append(np.concatenate([sp, tail]))
+
+    out, ref_tokens = {}, None
+    for mode in ("contiguous", "paged"):
+        session = ServeSession(
+            bundle, params, ds_state, n_slots=n_slots, max_seq_len=max_seq,
+            prefill_chunk=chunk, paged=(mode == "paged"), page_size=ps,
+        )
+        session.run([Request(prompt=np.zeros(chunk, np.int32),
+                             sampling=SamplingParams(max_new_tokens=2))])
+        session.requests.clear()
+        reqs = [Request(prompt=p.copy(),
+                        sampling=SamplingParams(max_new_tokens=max_new))
+                for p in proto]
+        t0 = time.perf_counter()
+        session.run(reqs)
+        wall = time.perf_counter() - t0
+        toks = [r.out_tokens for r in reqs]
+        if ref_tokens is None:
+            ref_tokens = toks
+        assert toks == ref_tokens, "paged diverged from contiguous tokens"
+        n_tok = sum(len(t) for t in toks)
+        row = {
+            "tokens": n_tok,
+            "wall_s": wall,
+            "tokens_per_s": n_tok / wall,
+            "decode_compiles": session._decode_fn._cache_size(),
+        }
+        if mode == "paged":
+            pg = session.stats()["paged"]
+            row.update(
+                prefill_steps_saved=pg["prefill_chunks_saved"],
+                prefix_hit_rate=pg["prefix_hit_rate"],
+                cow_copies=pg["cow_copies"],
+                pages_leaked=pg["pages_in_use"],
+            )
+            assert pg["prefill_chunks_saved"] > 0, \
+                "Zipf trace produced zero shared-prefix savings"
+            assert pg["pages_in_use"] == 0, "paged run leaked pages"
+        out[mode] = row
+    print(f"# prefix heavy: paged {out['paged']['tokens_per_s']:.1f} tok/s "
+          f"vs contiguous {out['contiguous']['tokens_per_s']:.1f} "
+          f"(token-identical), prefill_steps_saved="
+          f"{out['paged']['prefill_steps_saved']}, "
+          f"hit_rate={out['paged']['prefix_hit_rate']:.2f}")
+
+    # -- overload replay: preempt-and-requeue vs shed-only ------------------
+    overload = {}
+    for policy in ("shed_only", "preempt"):
+        paged = policy == "preempt"
+        arrival, last, lat = {}, {}, []
+
+        def on_token(req, token):
+            now = time.perf_counter()
+            lat.append(now - last.get(id(req), arrival[id(req)]))
+            last[id(req)] = now
+
+        # undersize the arena so a full batch of worst-case residents
+        # CANNOT all hold their pages at once: high-priority arrivals
+        # must preempt instead of waiting for the queue to drain
+        longest = 16 + 7  # system prompt + longest tail
+        worst = max(longest + max_new - 1, -(-longest // chunk) * chunk)
+        need = -(-worst // ps)
+        session = ServeSession(
+            bundle, params, ds_state, n_slots=n_slots, max_seq_len=max_seq,
+            prefill_chunk=chunk, queue_limit=max(2, n_slots // 2),
+            stream_cb=on_token, paged=paged, page_size=ps,
+            page_arena=max(need, (2 * n_slots * need) // 3) if paged else None,
+        )
+        warm = Request(prompt=np.zeros(chunk, np.int32),
+                       sampling=SamplingParams(max_new_tokens=2))
+        arrival[id(warm)] = time.perf_counter()
+        session.run([warm])
+        session.requests.clear()
+        lat.clear()
+        base = dict(session.stats())
+        rng2 = np.random.RandomState(1)
+        reqs = [Request(prompt=proto[i % len(proto)].copy(),
+                        sampling=SamplingParams(
+                            max_new_tokens=max_new,
+                            deadline_steps=8 * max_new,
+                            priority=int(rng2.rand() < 0.3)))
+                for i in range(2 * n_requests)]
+        pending = list(reqs)
+        t0 = time.perf_counter()
+        while pending or session.scheduler.has_work():
+            for _ in range(int(rng2.poisson(2.0))):
+                if not pending:
+                    break
+                req = pending.pop(0)
+                arrival[id(req)] = time.perf_counter()
+                session.submit(req)
+            session.step()
+        wall = time.perf_counter() - t0
+        s = session.stats()
+        lat_ms = np.asarray(lat) * 1e3
+        overload[policy] = {
+            "wall_s": wall,
+            "p95_ms": float(np.percentile(lat_ms, 95)) if len(lat_ms) else 0.0,
+            "n_completed": s["n_completed"] - base["n_completed"],
+            "n_shed": s["n_shed"] - base["n_shed"],
+            "n_timed_out": s["n_timed_out"] - base["n_timed_out"],
+            "preemptions": s["paged"]["preemptions"] if paged else 0,
+        }
+        if paged:
+            assert s["paged"]["pages_in_use"] == 0, "overload leaked pages"
+        assert all(r.done for r in reqs)
+    out["overload"] = overload
+    print(f"# prefix heavy overload: preempt p95="
+          f"{overload['preempt']['p95_ms']:.1f}ms "
+          f"({overload['preempt']['preemptions']} preemptions, "
+          f"{overload['preempt']['n_completed']} completed) vs shed-only "
+          f"p95={overload['shed_only']['p95_ms']:.1f}ms "
+          f"({overload['shed_only']['n_completed']} completed)")
+    return out
+
+
 def run_overload(fast: bool) -> dict:
     """Overloaded open-loop Poisson arrivals against a bounded queue with
     per-request deadlines: offered load is several times the slot service
@@ -424,6 +576,7 @@ def main():
         "admits": session.stats()["n_admitted"] - base["n_admitted"],
         "slot_reuse": (session.stats()["n_admitted"] - base["n_admitted"]) / n_slots,
         "overload": run_overload(FAST),
+        "prefix_heavy": run_prefix_heavy(FAST),
         "ssm_hybrid_chunked": run_ssm_hybrid_chunked(FAST),
         "sharded": run_sharded(FAST),
         "param_modes": run_param_modes(FAST),

@@ -270,6 +270,30 @@ def serve_cache_shardings(mesh: Mesh, cfg: ModelConfig, cache: Any,
     return map_with_path(leaf, cache)
 
 
+def serve_paged_cache_shardings(mesh: Mesh, cfg: ModelConfig,
+                                cache: Any) -> Any:
+    """Paged serving arenas: the PAGE axis (position 1 of every leaf —
+    where :func:`serve_cache_shardings` shards the slot axis) is sharded
+    over the (pod, data) axes. Pages are interchangeable, so any page
+    count divisible by the batch-axis width shards; a leaf whose page
+    axis the mesh doesn't divide (e.g. a state arena sized differently
+    from the KV arena) falls back to replicated per the house
+    divisible-or-replicated rule. Canonical specs only — the session
+    pins the arena to this sharding every step, so a spec GSPMD would
+    rewrite costs a spurious decode recompile."""
+    ba = tuple(a for a in batch_axes(mesh) if mesh.shape[a] > 1)
+    nb = batch_size_on(mesh)
+
+    def leaf(path, x):
+        if not ba or nb <= 1 or len(x.shape) < 2 or x.shape[1] % nb != 0 \
+                or x.shape[1] == 0:
+            return NamedSharding(mesh, P())
+        b_ax = ba[0] if len(ba) == 1 else ba
+        return NamedSharding(mesh, P(None, b_ax))
+
+    return map_with_path(leaf, cache)
+
+
 def topk_out_shardings(mesh: Mesh, global_batch: int):
     b = batch_pspec(mesh, global_batch, 1)
     return NamedSharding(mesh, b)

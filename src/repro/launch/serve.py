@@ -5,7 +5,12 @@ requests than ``--slots`` exercises mid-flight slot reuse (finished
 requests free their slot, queued prompts prefill into it). Reports the
 per-outcome counts from ``session.stats()`` and exits non-zero if any
 request ``FAILED`` (runtime fault — quarantined slot or raising
-callback), so a scripted smoke run surfaces poisoned serving.
+callback), so a scripted smoke run surfaces poisoned serving. With
+``--paged`` the session serves from the fixed-size-page KV/state arena
+and the report adds the page-arena metrics: pages in use, copy-on-write
+copies, preemptions, and the shared-prefix hit rate / prefill chunks
+saved (give it ``--shared-prefix N --prefill-chunk C`` so there is a
+common system prompt to share).
 """
 import argparse
 import sys
@@ -51,6 +56,23 @@ def main():
     ap.add_argument("--deadline-steps", type=int, default=None,
                     help="per-request deadline in decode steps: requests "
                          "still queued or decoding past it end TIMED_OUT")
+    ap.add_argument("--paged", action="store_true",
+                    help="fixed-size-page KV/state arena with copy-on-write "
+                         "prefix sharing and priority preemption instead of "
+                         "per-slot contiguous cache rows")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--page-arena", type=int, default=None,
+                    help="allocatable KV pages; undersizing below "
+                         "slots*max_seq_len/page_size turns overload into "
+                         "preempt-and-requeue (default: contiguous capacity)")
+    ap.add_argument("--state-arena", type=int, default=None,
+                    help="allocatable ssm/hybrid state pages (paged mode)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable copy-on-write prefix sharing")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens to "
+                         "every request so prefix sharing has work to do")
     args = ap.parse_args()
     if args.param_mode == "fsdp" and not args.mesh:
         ap.error("--param-mode fsdp requires --mesh")
@@ -78,12 +100,23 @@ def main():
         param_mode=args.param_mode,
         prefill_chunk=args.prefill_chunk,
         queue_limit=args.queue_limit,
+        paged=args.paged,
+        page_size=args.page_size,
+        page_arena=args.page_arena,
+        state_arena=args.state_arena,
+        prefix_sharing=not args.no_prefix_sharing,
     )
     rng = np.random.RandomState(0)
+    sysp = rng.randint(0, cfg.vocab_size,
+                       args.shared_prefix).astype(np.int32)
+    tail_len = max(1, args.prompt_len - args.shared_prefix)
     reqs = [
-        Request(prompt=rng.randint(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+        Request(prompt=np.concatenate(
+                    [sysp, rng.randint(0, cfg.vocab_size,
+                                       tail_len).astype(np.int32)]),
                 sampling=SamplingParams(max_new_tokens=args.new_tokens,
-                                        deadline_steps=args.deadline_steps))
+                                        deadline_steps=args.deadline_steps,
+                                        priority=int(rng.rand() < 0.25)))
         for _ in range(args.batch)
     ]
     t0 = time.time()
@@ -97,6 +130,17 @@ def main():
         f"{k.removeprefix('n_')}={stats[k]}"
         for k in ("n_completed", "n_rejected", "n_cancelled",
                   "n_timed_out", "n_failed", "n_shed")))
+    if args.paged:
+        pg = stats["paged"]
+        print(f"paged arena: {pg['pages_in_use']}/{pg['pages_total']} pages "
+              f"in use (page_size={pg['page_size']}), "
+              f"cow_copies={pg['cow_copies']}, "
+              f"preemptions={pg['preemptions']}")
+        print(f"prefix sharing: hit_rate={pg['prefix_hit_rate']:.2f} "
+              f"({pg['prefix_hits']}/{pg['prefix_queries']}), "
+              f"tokens_reused={pg['prefix_tokens_reused']}, "
+              f"prefill_chunks={pg['prefill_chunks']} "
+              f"(saved {pg['prefill_chunks_saved']})")
     if stats["n_failed"]:
         for r in out:
             if r.status is RequestStatus.FAILED:

@@ -224,7 +224,7 @@ def _group_walk(params, cfg: ModelConfig, cache: HybridCache, x, mamba_body, att
 
 def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
                   tokens, pos0, n_valid, k: int = 8, kernel=None, mesh=None,
-                  gather=None):
+                  gather=None, pages=None, state_pages=None):
     """State-passing chunked prefill: one prompt chunk against an existing
     :class:`HybridCache` (mirrors ``transformer.prefill_chunk``).
 
@@ -239,6 +239,15 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
     against the cache's attn_k/attn_v regions. Returns (vals, ids, cache)
     with the head applied to the hidden state of token ``n_valid - 1`` —
     only the final chunk's top-k is meaningful.
+
+    ``pages``/``state_pages`` switch to the PAGED cache layout: attn
+    leaves become ``(napps, n_pages, page_size, KV, dh)`` arenas indexed
+    through the ``(B, n_pg)`` page table (see
+    ``layers.attention_prefill_chunk``), and conv/ssm leaves become
+    ``(L, n_state_pages, ...)`` arenas — each row's recurrent state
+    lives in its exclusively-owned page ``state_pages[b]``, gathered
+    before and scattered after the per-layer state update (identical
+    math on the gathered view → bit-identical tokens).
     """
     B, C = tokens.shape
     if gather is not None:
@@ -253,6 +262,13 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
         lp, conv, ssm = scanned
         if gather is not None:
             lp = gather.layer("layers", lp)
+        if state_pages is not None:
+            out, nconv, nssm = mamba2_prefill_chunk(
+                lp["mamba"], cfg, rmsnorm(lp["ln"], carry),
+                conv[state_pages], ssm[state_pages], n_valid
+            )
+            return carry + out, (conv.at[state_pages].set(nconv),
+                                 ssm.at[state_pages].set(nssm))
         out, nconv, nssm = mamba2_prefill_chunk(
             lp["mamba"], cfg, rmsnorm(lp["ln"], carry), conv, ssm, n_valid
         )
@@ -262,7 +278,7 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
         sa = sa_full
         h, nk, nv = attention_prefill_chunk(
             sa["attn"], cfg, rmsnorm(sa["ln1"], xc),
-            cache.attn_k[gi], cache.attn_v[gi], pos0,
+            cache.attn_k[gi], cache.attn_v[gi], pos0, pages=pages,
         )
         xc = xc + h
         xc = xc + mlp(sa["mlp"], cfg, rmsnorm(sa["ln2"], xc))
@@ -281,13 +297,14 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
 
 def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token, pos, k: int = 8,
                 kernel=None, mesh=None, gather=None, capacity_factor=None,
-                with_stats=False):
+                with_stats=False, pages=None, state_pages=None):
     """pos: scalar shared position or (B,) per-slot positions (the SSM/conv
     state update is position-free; only the periodic attention blocks and
     rope consume it). ``capacity_factor``/``with_stats`` thread to the head
     (circuit-breaker override + per-expert overflow telemetry). ``gather``
     serves from FSDP-stored weights (per-layer just-in-time all-gather;
-    the shared attention block gathers once)."""
+    the shared attention block gathers once). ``pages``/``state_pages``
+    switch to the paged cache layout (see :func:`prefill_chunk`)."""
     if gather is not None:
         x = gather.rows("embed/table", params["embed"]["table"], token)[:, None, :]
         sa_full = gather.full("shared_attn", params["shared_attn"]) \
@@ -300,6 +317,13 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token
         lp, conv, ssm = scanned
         if gather is not None:
             lp = gather.layer("layers", lp)
+        if state_pages is not None:
+            out, nconv, nssm = mamba2_decode(
+                lp["mamba"], cfg, rmsnorm(lp["ln"], carry),
+                conv[state_pages], ssm[state_pages]
+            )
+            return carry + out, (conv.at[state_pages].set(nconv),
+                                 ssm.at[state_pages].set(nssm))
         out, nconv, nssm = mamba2_decode(lp["mamba"], cfg, rmsnorm(lp["ln"], carry), conv, ssm)
         return carry + out, (nconv, nssm)
 
@@ -307,7 +331,7 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token
         sa = sa_full
         h, nk, nv = attention_decode(
             sa["attn"], cfg, rmsnorm(sa["ln1"], xc),
-            cache.attn_k[gi], cache.attn_v[gi], pos,
+            cache.attn_k[gi], cache.attn_v[gi], pos, pages=pages,
         )
         xc = xc + h
         xc = xc + mlp(sa["mlp"], cfg, rmsnorm(sa["ln2"], xc))

@@ -231,7 +231,8 @@ def attention_block(params, cfg: ModelConfig, x: jax.Array, positions, *, causal
     return out, (k, v)
 
 
-def attention_decode(params, cfg: ModelConfig, x, cache_k, cache_v, pos):
+def attention_decode(params, cfg: ModelConfig, x, cache_k, cache_v, pos,
+                     pages=None):
     """One-token decode against a (B, S_cache, KV, dh) cache.
 
     x: (B, 1, d); pos: scalar int (one shared position; cache rows > pos
@@ -239,41 +240,67 @@ def attention_decode(params, cfg: ModelConfig, x, cache_k, cache_v, pos):
     continuous-batching case where every slot decodes at its own sequence
     length. Returns (out (B,1,d), new_k, new_v) with the caches updated in
     place at ``pos`` (row b at ``pos[b]`` for the vector form).
+
+    ``pages`` switches to the PAGED cache layout: ``cache_k``/``cache_v``
+    are then ``(n_pages, page_size, KV, dh)`` arenas and ``pages`` is the
+    ``(B, n_pg)`` int32 per-slot page table (threaded the way ``pos``
+    is). Row *b*'s K/V at ``pos[b]`` is scattered into page
+    ``pages[b, pos//page_size]`` at offset ``pos % page_size``, the
+    logical ``(B, n_pg*page_size, KV, dh)`` view is gathered by page id,
+    and the attention math below runs UNCHANGED on that view — outputs
+    are bit-identical to the contiguous cache (stale/unmapped rows are
+    masked to the same exact -1e9 scores either way; unmapped table
+    entries must point at an all-zero page so their V rows contribute
+    exact zeros, never NaN).
     """
     B = x.shape[0]
     pos = jnp.asarray(pos)
     per_row = pos.ndim == 1
     pos_b = pos if per_row else jnp.full((B,), pos)  # (B,)
     q, k_new, v_new = _project_qkv(params, cfg, x, pos_b[:, None])
-    if per_row:
+    if pages is not None:
+        ps = cache_k.shape[1]
+        rows = jnp.arange(B)
+        pid = pages[rows, pos_b // ps]  # (B,) write page per row
+        off = pos_b % ps
+        cache_k = cache_k.at[pid, off].set(k_new[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[pid, off].set(v_new[:, 0].astype(cache_v.dtype))
+        n_pg = pages.shape[1]
+        KVh, dh_ = cache_k.shape[2], cache_k.shape[3]
+        view_k = cache_k[pages].reshape(B, n_pg * ps, KVh, dh_)
+        view_v = cache_v[pages].reshape(B, n_pg * ps, KVh, dh_)
+    elif per_row:
         rows = jnp.arange(B)
         cache_k = cache_k.at[rows, pos_b].set(k_new[:, 0].astype(cache_k.dtype))
         cache_v = cache_v.at[rows, pos_b].set(v_new[:, 0].astype(cache_v.dtype))
+        view_k, view_v = cache_k, cache_v
     else:
         cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
         cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+        view_k, view_v = cache_k, cache_v
     from repro.distributed.hints import BATCH, constrain
 
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     G = H // KV
-    S = cache_k.shape[1]
+    S = view_k.shape[1]
     qg = q.reshape(B, KV, G, dh)
     # Split-KV (flash-decode): scores carry the cache's model-sharded S axis;
     # softmax over the sharded axis lowers to local partials + all-reduce.
     s = jnp.einsum(
-        "bkgd,bckd->bkgc", qg, cache_k, preferred_element_type=jnp.float32
+        "bkgd,bckd->bkgc", qg, view_k, preferred_element_type=jnp.float32
     ) / math.sqrt(dh)
     s = constrain(s, BATCH, None, None, "model")
     valid = jnp.arange(S)[None, None, None, :] <= pos_b[:, None, None, None]
     s = jnp.where(valid, s, -1e9)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgc,bckd->bkgd", p.astype(cache_v.dtype), cache_v,
+    o = jnp.einsum("bkgc,bckd->bkgd", p.astype(view_v.dtype), view_v,
                    preferred_element_type=jnp.float32)
     out = jnp.einsum("be,ed->bd", o.reshape(B, H * dh).astype(x.dtype), params["wo"])
     return out[:, None, :], cache_k, cache_v
 
 
-def attention_prefill_chunk(params, cfg: ModelConfig, x, cache_k, cache_v, pos0):
+def attention_prefill_chunk(params, cfg: ModelConfig, x, cache_k, cache_v, pos0,
+                            pages=None):
     """Cache-context chunked prefill: C new tokens against a partially
     filled (B, S_max, KV, dh) cache.
 
@@ -285,21 +312,41 @@ def attention_prefill_chunk(params, cfg: ModelConfig, x, cache_k, cache_v, pos0)
     prefill (masked positions contribute exact zeros to the softmax).
     Padding rows at the chunk tail write K/V at positions that stay
     masked until a later real token overwrites them.
+
+    ``pages`` switches to the PAGED layout (see
+    :func:`attention_decode`): ``cache_k``/``cache_v`` are
+    ``(n_pages, page_size, KV, dh)`` arenas, the chunk's K/V rows are
+    scattered into ``pages[b, position//page_size]``, and the identical
+    masked attention runs on the gathered logical view — this is how a
+    shared-prefix tail chunk attends to pages prefilled by ANOTHER
+    request.
     """
     from repro.distributed.hints import BATCH, constrain
 
     B, C, _ = x.shape
     positions = jnp.broadcast_to(pos0 + jnp.arange(C)[None, :], (B, C))
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(
-        cache_k, k_new.astype(cache_k.dtype), pos0, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(
-        cache_v, v_new.astype(cache_v.dtype), pos0, axis=1)
+    if pages is not None:
+        ps = cache_k.shape[1]
+        pid = jnp.take_along_axis(pages, positions // ps, axis=1)  # (B, C)
+        off = positions % ps
+        cache_k = cache_k.at[pid, off].set(k_new.astype(cache_k.dtype))
+        cache_v = cache_v.at[pid, off].set(v_new.astype(cache_v.dtype))
+        n_pg = pages.shape[1]
+        KVh, dh_ = cache_k.shape[2], cache_k.shape[3]
+        view_k = cache_k[pages].reshape(B, n_pg * ps, KVh, dh_)
+        view_v = cache_v[pages].reshape(B, n_pg * ps, KVh, dh_)
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new.astype(cache_k.dtype), pos0, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new.astype(cache_v.dtype), pos0, axis=1)
+        view_k, view_v = cache_k, cache_v
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     G = H // KV
-    S = cache_k.shape[1]
-    k = jnp.repeat(cache_k, G, axis=2) if G > 1 else cache_k
-    v = jnp.repeat(cache_v, G, axis=2) if G > 1 else cache_v
+    S = view_k.shape[1]
+    k = jnp.repeat(view_k, G, axis=2) if G > 1 else view_k
+    v = jnp.repeat(view_v, G, axis=2) if G > 1 else view_v
     # Same einsum/dtype conventions as full_attention so chunked prefill is
     # bit-identical to the whole-prompt path row-for-row.
     s = jnp.einsum("bqhd,bchd->bqhc", q, k,

@@ -59,20 +59,41 @@ def build(cfg: ModelConfig) -> ModelBundle:
     chunk = None
     if fam in ("dense", "moe", "vlm"):
         chunk = lambda p, t, cache, tokens, pos0, n_valid, k=8, kernel=None, \
-            mesh=None, gather=None: (
+            mesh=None, gather=None, pages=None, state_pages=None: (
             transformer.prefill_chunk(
                 p, t, cfg, cache, tokens, pos0, n_valid, k=k, kernel=kernel,
-                mesh=mesh, gather=gather,
+                mesh=mesh, gather=gather, pages=pages, state_pages=state_pages,
             )
         )
     elif fam in ("ssm", "hybrid"):
         chunk = lambda p, t, cache, tokens, pos0, n_valid, k=8, kernel=None, \
-            mesh=None, gather=None: (
+            mesh=None, gather=None, pages=None, state_pages=None: (
             hybrid.prefill_chunk(
                 p, t, cfg, cache, tokens, pos0, n_valid, k=k, kernel=kernel,
-                mesh=mesh, gather=gather,
+                mesh=mesh, gather=gather, pages=pages, state_pages=state_pages,
             )
         )
+    # ``pages`` ((B, n_pg) int32 page table) and ``state_pages`` ((B,)
+    # int32 state-page ids) switch decode_step/prefill_chunk to the
+    # paged-arena cache layout (see ``paged_cache_specs``); families
+    # without the corresponding leaf kind ignore the extra vector.
+    if fam == "encdec":
+        decode = lambda p, t, cache, tok, pos, k=8, kernel=None, mesh=None, \
+            gather=None, capacity_factor=None, with_stats=False: \
+            mod.decode_step(
+                p, t, cfg, cache, tok, pos, k=k, kernel=kernel, mesh=mesh,
+                gather=gather, capacity_factor=capacity_factor,
+                with_stats=with_stats,
+            )
+    else:
+        decode = lambda p, t, cache, tok, pos, k=8, kernel=None, mesh=None, \
+            gather=None, capacity_factor=None, with_stats=False, pages=None, \
+            state_pages=None: \
+            mod.decode_step(
+                p, t, cfg, cache, tok, pos, k=k, kernel=kernel, mesh=mesh,
+                gather=gather, capacity_factor=capacity_factor,
+                with_stats=with_stats, pages=pages, state_pages=state_pages,
+            )
     return ModelBundle(
         cfg=cfg,
         init=init,
@@ -81,13 +102,7 @@ def build(cfg: ModelConfig) -> ModelBundle:
             mod.prefill(
                 p, t, cfg, batch, k=k, kernel=kernel, mesh=mesh, gather=gather
             ),
-        decode_step=lambda p, t, cache, tok, pos, k=8, kernel=None, mesh=None, \
-            gather=None, capacity_factor=None, with_stats=False:
-            mod.decode_step(
-                p, t, cfg, cache, tok, pos, k=k, kernel=kernel, mesh=mesh,
-                gather=gather, capacity_factor=capacity_factor,
-                with_stats=with_stats,
-            ),
+        decode_step=decode,
         prefill_chunk=chunk,
     )
 
@@ -147,6 +162,59 @@ def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
         ckv = jax.ShapeDtypeStruct((L, B, F, cfg.n_kv_heads, cfg.hd), cfg.jdtype)
         return encdec.EncDecCache(self_k=kv, self_v=kv, cross_k=ckv, cross_v=ckv)
     raise ValueError(cfg.family)
+
+
+def paged_cache_specs(cfg: ModelConfig, n_pages: int, page_size: int,
+                      n_state_pages: int = 0):
+    """Paged-arena decode-cache specs: the per-slot batch axis of
+    :func:`cache_specs` is replaced by a PAGE axis shared by every slot.
+
+    Attention K/V leaves become ``(·, n_pages, page_size, KV, dh)``
+    arenas addressed through a host-side ``(n_slots, n_pg)`` page table
+    (``repro.serve.paged_cache.PagedCacheManager``); position-free
+    conv/ssm state leaves become ``(L, n_state_pages, ...)`` arenas
+    addressed by a ``(n_slots,)`` state-page-id vector. Total arena
+    bytes at the default sizing (``n_pages ≈ n_slots·S/page_size``)
+    match the contiguous cache — paging buys *sharing* and cheap
+    preemption, not smaller buffers."""
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = jax.ShapeDtypeStruct(
+            (L, n_pages, page_size, cfg.n_kv_heads, cfg.hd), cfg.jdtype
+        )
+        return transformer.DecodeCache(k=kv, v=kv)
+    if cfg.family in ("ssm", "hybrid"):
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        napps = hybrid.n_attn_apps(cfg)
+        attn = jax.ShapeDtypeStruct(
+            (napps, n_pages, page_size, max(cfg.n_kv_heads, 1),
+             max(cfg.hd, 1)), cfg.jdtype
+        )
+        return hybrid.HybridCache(
+            conv=jax.ShapeDtypeStruct(
+                (L, n_state_pages, cfg.ssm_conv_width - 1, conv_dim),
+                cfg.jdtype),
+            ssm=jax.ShapeDtypeStruct(
+                (L, n_state_pages, cfg.ssm_nheads, cfg.ssm_headdim,
+                 cfg.ssm_state), jnp.float32
+            ),
+            attn_k=attn,
+            attn_v=attn,
+        )
+    raise ValueError(f"no paged cache for family {cfg.family!r}")
+
+
+def cache_kv_leaves(cfg: ModelConfig):
+    """Per-leaf bool: True for position-indexed attention K/V leaves
+    (paged over KV pages), False for position-free conv/ssm state
+    leaves (paged over state pages). The paged session uses this map to
+    aim its page copy/zero ops at the right arena."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.DecodeCache(k=True, v=True)
+    if cfg.family in ("ssm", "hybrid"):
+        return hybrid.HybridCache(conv=False, ssm=False, attn_k=True,
+                                  attn_v=True)
+    raise ValueError(f"no paged cache for family {cfg.family!r}")
 
 
 def cache_seq_axes(cfg: ModelConfig):

@@ -183,7 +183,7 @@ def prefill(params, ds_state_or_table, cfg: ModelConfig, batch, k: int = 8,
 
 def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
                   tokens, pos0, n_valid, k: int = 8, kernel=None, mesh=None,
-                  gather=None):
+                  gather=None, pages=None, state_pages=None):
     """Prefill one chunk of a prompt into an existing decode cache.
 
     tokens: (B, C) int32 at positions ``pos0 .. pos0+C-1`` (B=1 in the
@@ -199,7 +199,14 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
     to :func:`prefill` for dense/vlm-text models; MoE backbones drop
     tokens per expert-capacity computed over the chunk rather than the
     full prompt, so chunked and whole-prompt prefill can differ there.
+
+    ``pages`` ((B, n_pg) int32 page table) switches the cache to the
+    paged-arena layout (``cache.k``/``cache.v``:
+    ``(L, n_pages, page_size, KV, dh)``) — see
+    ``layers.attention_prefill_chunk``. ``state_pages`` is accepted for
+    bundle-level API uniformity with the state families and ignored.
     """
+    del state_pages  # KV-only family
     if gather is not None:
         x = gather.rows("embed/table", params["embed"]["table"], tokens)
     else:
@@ -211,7 +218,8 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
         if gather is not None:
             layer_params = gather.layer("layers", layer_params)
         h, nk, nv = attention_prefill_chunk(
-            layer_params["attn"], cfg, rmsnorm(layer_params["ln1"], xc), ck, cv, pos0
+            layer_params["attn"], cfg, rmsnorm(layer_params["ln1"], xc), ck, cv,
+            pos0, pages=pages,
         )
         xc = xc + h
         xn = rmsnorm(layer_params["ln2"], xc)
@@ -235,14 +243,18 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
 
 def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token, pos, k: int = 8,
                 kernel=None, mesh=None, gather=None, capacity_factor=None,
-                with_stats=False):
+                with_stats=False, pages=None, state_pages=None):
     """One-token decode. token: (B,) int32; pos: scalar position shared by
     the batch, or (B,) int32 per-slot positions (continuous batching).
     Returns (vals, ids, new_cache) — plus the head's per-expert
     ``{'dispatched', 'overflow'}`` telemetry when ``with_stats=True``.
     ``capacity_factor`` overrides the DS head's config value (serving
     circuit-breaker). ``gather`` serves from FSDP-stored weights
-    (per-layer just-in-time all-gather inside the scan body)."""
+    (per-layer just-in-time all-gather inside the scan body). ``pages``
+    ((B, n_pg) int32) switches the cache to the paged-arena layout (see
+    ``layers.attention_decode``); ``state_pages`` is ignored (KV-only
+    family)."""
+    del state_pages
     if gather is not None:
         x = gather.rows("embed/table", params["embed"]["table"], token)[:, None, :]
     else:
@@ -254,7 +266,8 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token
         if gather is not None:
             layer_params = gather.layer("layers", layer_params)
         h, nk, nv = attention_decode(
-            layer_params["attn"], cfg, rmsnorm(layer_params["ln1"], xc), ck, cv, pos
+            layer_params["attn"], cfg, rmsnorm(layer_params["ln1"], xc), ck, cv,
+            pos, pages=pages,
         )
         xc = xc + h
         xn = rmsnorm(layer_params["ln2"], xc)

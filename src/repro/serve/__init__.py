@@ -1,0 +1,19 @@
+from repro.serve.paged_cache import (
+    N_RESERVED,
+    PAGE_GARBAGE,
+    PAGE_ZERO,
+    PagedCacheManager,
+    PrefixEntry,
+    WritePlan,
+    prefix_hash,
+)
+
+__all__ = [
+    "N_RESERVED",
+    "PAGE_GARBAGE",
+    "PAGE_ZERO",
+    "PagedCacheManager",
+    "PrefixEntry",
+    "WritePlan",
+    "prefix_hash",
+]

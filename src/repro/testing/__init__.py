@@ -1,19 +1,25 @@
 from repro.testing.faults import (
     CancelAfter,
     RaisingStreamCB,
+    exhaust_pages,
     oversized_prompt,
     poison_cache_slot,
     poison_layer,
+    poison_page,
     poison_token_embedding,
+    release_hoarded_pages,
     skew_gate,
 )
 
 __all__ = [
     "CancelAfter",
     "RaisingStreamCB",
+    "exhaust_pages",
     "oversized_prompt",
     "poison_cache_slot",
     "poison_layer",
+    "poison_page",
     "poison_token_embedding",
+    "release_hoarded_pages",
     "skew_gate",
 ]

@@ -13,6 +13,14 @@ lifecycle's typed outcome for it:
   survivors bit-identical, decode compile count stays 1);
 * :func:`skew_gate` — zero the DS gate so every token routes to expert
   0: forces sustained capacity overflow for the circuit-breaker tests;
+* :func:`exhaust_pages` / :func:`release_hoarded_pages` — drain a paged
+  session's free KV-page list so residents face arena pressure: decode
+  growth must preempt-and-requeue the lowest-priority resident instead
+  of corrupting anyone;
+* :func:`poison_page` — NaN one page of the paged KV arena (typically a
+  *shared* prefix page): every sharer must quarantine on its next read
+  while the co-ownership refcounts keep the free list intact — the page
+  is scrubbed by whichever failing sharer drops the last reference;
 * :func:`oversized_prompt` — a prompt that cannot fit the cache:
   rejected at ``submit()`` before any compute;
 * :class:`RaisingStreamCB` / :class:`CancelAfter` — callback faults:
@@ -84,6 +92,56 @@ def poison_cache_slot(session, slot: int) -> None:
         return leaf.at[:, slot].set(jnp.nan)
 
     cache = jax.tree.map(poison, session._cache)
+    if session._cache_shardings is not None:
+        cache = jax.device_put(cache, session._cache_shardings)
+    session._cache = cache
+
+
+def exhaust_pages(session, keep: int = 0) -> list:
+    """Hoard the paged session's free KV pages down to ``keep`` left.
+
+    The hoarded pages are allocated (ref = 1) but mapped to no slot, so
+    the next resident that needs a decode/prefill page hits an exhausted
+    arena and the session must preempt-and-requeue its lowest-priority
+    resident (or self-preempt). Returns the hoarded page ids — pass them
+    to :func:`release_hoarded_pages` to lift the pressure. Host-side
+    only: no cache bytes move and the jitted steps never re-trace.
+    """
+    m = session._mgr
+    hoard = []
+    while m.pages_free > keep:
+        hoard.append(m.alloc())
+    return hoard
+
+
+def release_hoarded_pages(session, hoard: list) -> None:
+    """Return pages taken by :func:`exhaust_pages` to the free list."""
+    for pid in hoard:
+        session._mgr.decref(pid)
+
+
+def poison_page(session, pid: int) -> None:
+    """NaN page ``pid`` of the paged session's KV arena.
+
+    Arena KV leaves have their page axis at position 1, so ``[:, pid]``
+    hits exactly one page across all layers. Poisoning a SHARED prefix
+    page must quarantine every sharer (each reads it on its next decode
+    step) without corrupting the free list: the refcounts drop one
+    failing sharer at a time, and the page is zero-scrubbed by whichever
+    sharer frees it. Host-side swap between steps — the decode step's
+    compile count stays 1.
+    """
+    from repro.models.model_zoo import cache_kv_leaves
+
+    kvl = cache_kv_leaves(session.cfg)
+
+    def poison(leaf, kv):
+        if not kv or not jnp.issubdtype(leaf.dtype, jnp.inexact) \
+                or leaf.shape[0] == 0:
+            return leaf
+        return leaf.at[:, pid].set(jnp.nan)
+
+    cache = jax.tree.map(poison, session._cache, kvl)
     if session._cache_shardings is not None:
         cache = jax.device_put(cache, session._cache_shardings)
     session._cache = cache

@@ -68,6 +68,21 @@ the step (``distributed.sharding.ServeParamGather``) — the full-stack
 per-device memory ceiling drops from O(params) to O(params/ndata) while
 outputs stay bit-identical.
 
+``paged=True`` replaces the per-slot contiguous cache rows with a
+fixed-size-page arena (``repro.serve.paged_cache``): a host-side page
+table maps each slot's logical positions to arena pages, N requests
+sharing a chunk-aligned prompt prefix prefill it ONCE and share the
+pages copy-on-write, and under arena pressure the session
+**preempts-and-requeues** the lowest-priority resident (a metadata swap
+— its pages are decref'd, shared prefix pages survive through their
+co-owners) instead of only shedding from the queue. A preempted request
+resumes by re-prefilling ``prompt ++ out_tokens[:-1]`` and continues
+its sampling stream at the preserved ``n_emitted`` counter, so its
+tokens are identical from the preemption point. Paged tokens are
+bit-identical to the contiguous cache (the gathered page view feeds the
+exact same attention math), and the decode step still compiles exactly
+once — page tables are data, not shapes.
+
 ``ServeEngine`` remains as a thin deprecated shim over ``ServeSession``
 for the existing examples/benchmarks (it emits a ``DeprecationWarning``
 once per process).
@@ -86,7 +101,18 @@ import numpy as np
 
 from repro.configs.base import ShapeConfig
 from repro.core import dssoftmax as ds
-from repro.models.model_zoo import ModelBundle, cache_seq_axes, cache_specs
+from repro.models.model_zoo import (
+    ModelBundle,
+    cache_kv_leaves,
+    cache_seq_axes,
+    cache_specs,
+    paged_cache_specs,
+)
+from repro.serve.paged_cache import (
+    N_RESERVED,
+    PagedCacheManager,
+    prefix_hash,
+)
 from repro.utils import get_logger
 
 log = get_logger("serve")
@@ -171,6 +197,7 @@ class _Slot:
     req: Request
     prompt_len: int
     n_emitted: int = 0
+    admit_seq: int = 0  # monotonic admission order (preemption tiebreak)
 
     @property
     def pos(self) -> int:
@@ -260,11 +287,18 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
 
+    def requeue(self, req: Request) -> None:
+        """Put a preempted resident back at the FRONT of the queue: it
+        keeps its seniority within its priority class (``pop_next`` is
+        FIFO per class), so equal-priority churn cannot starve it."""
+        self.queue.appendleft(req)
+
     def admit(self, i: int, req: Request, prompt_len: int) -> _Slot:
         assert self.slots[i] is None
-        slot = _Slot(req=req, prompt_len=prompt_len)
-        self.slots[i] = slot
         self.n_admitted += 1
+        slot = _Slot(req=req, prompt_len=prompt_len,
+                     admit_seq=self.n_admitted)
+        self.slots[i] = slot
         return slot
 
     def release(self, i: int) -> None:
@@ -323,6 +357,26 @@ class ServeSession:
             the effective ``capacity_factor``; trip 2 falls back to the
             always-exact ``'jnp'`` serve path. Each trip rebuilds the
             jitted decode step (one extra compile per trip).
+        paged: replace the per-slot contiguous cache rows with the
+            fixed-size-page arena (``repro.serve.paged_cache``). Tokens
+            are bit-identical to the contiguous cache; what changes is
+            capacity behavior — chunk-aligned prompt prefixes are
+            prefilled once and shared copy-on-write (with
+            ``prefill_chunk``), and arena exhaustion preempts-and-
+            requeues the lowest-priority resident instead of failing.
+            Requires ``max_seq_len % page_size == 0`` (and
+            ``% prefill_chunk == 0`` when chunked).
+        page_size: cache positions per page (paged mode).
+        page_arena: allocatable KV pages in the arena. Default
+            ``n_slots * max_seq_len / page_size`` — the contiguous
+            capacity, so nothing preempts unless prompts stop sharing.
+            Smaller arenas trade memory for preemption pressure.
+        state_arena: allocatable conv/ssm state pages (ssm/hybrid
+            families): one live page per resident plus boundary
+            snapshots for prefix sharing. Default ``4 * n_slots``.
+        prefix_sharing: register/adopt shared prompt prefixes (paged +
+            chunked only). ``False`` keeps the arena but prefills every
+            prompt in full.
     """
 
     def __init__(self, bundle: ModelBundle, params, ds_state_or_table, *,
@@ -332,7 +386,11 @@ class ServeSession:
                  stream_cb: Optional[Callable[[Request, int], None]] = None,
                  queue_limit: Optional[int] = None,
                  overflow_threshold: float = 0.5,
-                 overflow_window: int = 8):
+                 overflow_window: int = 8,
+                 paged: bool = False, page_size: int = 16,
+                 page_arena: Optional[int] = None,
+                 state_arena: Optional[int] = None,
+                 prefix_sharing: bool = True):
         cfg = bundle.cfg
         if cfg.family == "encdec":
             raise ValueError(
@@ -354,6 +412,21 @@ class ServeSession:
             )
         if param_mode == "fsdp" and mesh is None:
             raise ValueError("param_mode='fsdp' requires mesh=")
+        if paged:
+            if max_seq_len % page_size:
+                raise ValueError(
+                    f"paged mode needs max_seq_len ({max_seq_len}) divisible "
+                    f"by page_size ({page_size})"
+                )
+            if prefill_chunk is not None and max_seq_len % prefill_chunk:
+                # a preempted request resumes by re-prefilling
+                # prompt ++ emitted tokens; the tail chunk's padded writes
+                # round that length up to a prefill_chunk multiple, which
+                # must never index a page past the per-slot table
+                raise ValueError(
+                    f"paged chunked prefill needs max_seq_len ({max_seq_len}) "
+                    f"divisible by prefill_chunk ({prefill_chunk})"
+                )
         self.bundle = bundle
         self.cfg = cfg
         self.params = params
@@ -414,20 +487,57 @@ class ServeSession:
                 sum(x.nbytes for x in jax.tree.leaves(params)) / 1e6,
             )
 
-        shape = ShapeConfig(name="serve", seq_len=max_seq_len,
-                            global_batch=n_slots, kind="decode")
-        specs = cache_specs(cfg, shape)
+        self._mgr: Optional[PagedCacheManager] = None
+        self._prefix_sharing = prefix_sharing and paged \
+            and prefill_chunk is not None
+        self._n_preempted = 0
+        self._n_prefill_chunks = 0
+        self._n_prefill_chunks_saved = 0
+        if paged:
+            from repro.models.hybrid import n_attn_apps
+
+            has_state = cfg.family in ("ssm", "hybrid")
+            has_kv = cfg.family in ("dense", "moe", "vlm") \
+                or (cfg.family == "hybrid" and n_attn_apps(cfg) > 0)
+            n_alloc = page_arena if page_arena is not None \
+                else n_slots * (max_seq_len // page_size)
+            n_state = (state_arena if state_arena is not None
+                       else 4 * n_slots) if has_state else 0
+            self._mgr = PagedCacheManager(
+                n_slots=n_slots, n_pages=N_RESERVED + n_alloc,
+                page_size=page_size, max_seq_len=max_seq_len,
+                has_state=has_state, has_kv=has_kv,
+                n_state_pages=(N_RESERVED + n_state) if has_state else None,
+            )
+            self._kv_leaf = cache_kv_leaves(cfg)
+            specs = paged_cache_specs(cfg, N_RESERVED + n_alloc, page_size,
+                                      (N_RESERVED + n_state) if has_state
+                                      else 0)
+            log.info("paged cache: %d pages x %d positions (+%d state pages)",
+                     n_alloc, page_size, n_state)
+        else:
+            shape = ShapeConfig(name="serve", seq_len=max_seq_len,
+                                global_batch=n_slots, kind="decode")
+            specs = cache_specs(cfg, shape)
         self._cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
         self._cache_shardings = None
         if mesh is not None:
-            # slots → (pod, data); sequence stays whole per device so the
-            # per-slot decode math is bit-identical to the unsharded session
-            from repro.distributed.sharding import serve_cache_shardings
+            # slots (or arena pages) → (pod, data); sequence stays whole per
+            # device so per-slot decode math is bit-identical to the
+            # unsharded session
+            from repro.distributed.sharding import (
+                serve_cache_shardings,
+                serve_paged_cache_shardings,
+            )
 
-            self._cache_shardings = serve_cache_shardings(mesh, cfg, specs,
-                                                          n_slots)
+            if paged:
+                self._cache_shardings = serve_paged_cache_shardings(
+                    mesh, cfg, specs)
+            else:
+                self._cache_shardings = serve_cache_shardings(mesh, cfg, specs,
+                                                              n_slots)
             self._cache = jax.device_put(self._cache, self._cache_shardings)
-        if prefill_chunk is not None:
+        if prefill_chunk is not None and not paged:
             self._row_zero = jax.tree.map(
                 lambda s: jnp.zeros((s.shape[0], 1) + s.shape[2:], s.dtype), specs
             )
@@ -456,44 +566,106 @@ class ServeSession:
 
         self._build_decode_fn()
         if prefill_chunk is not None:
-            def _chunk(p, t, c, toks, pos0, nv):
-                vals, ids, c = bundle.prefill_chunk(
-                    self._pin_p(p), t, c, toks, pos0, nv, k=k,
-                    kernel=self._kernel, mesh=self.mesh, gather=self._gather
-                )
-                if self.mesh is not None:
-                    c = jax.tree.map(
-                        lambda x: jax.lax.with_sharding_constraint(
-                            x, self._row_sharding), c)
-                return vals, ids, c
+            if paged:
+                def _chunk(p, t, c, toks, pos0, nv, pages, spages):
+                    # chunked prefill straight into the SHARED arena: the
+                    # (1, n_pg) page row scatters the chunk's K/V into the
+                    # slot's prepared pages (state families update their
+                    # live state page in place)
+                    vals, ids, c = bundle.prefill_chunk(
+                        self._pin_p(p), t, c, toks, pos0, nv, k=k,
+                        kernel=self._kernel, mesh=self.mesh,
+                        gather=self._gather, pages=pages, state_pages=spages,
+                    )
+                    return vals, ids, self._pin(c)
+            else:
+                def _chunk(p, t, c, toks, pos0, nv):
+                    vals, ids, c = bundle.prefill_chunk(
+                        self._pin_p(p), t, c, toks, pos0, nv, k=k,
+                        kernel=self._kernel, mesh=self.mesh,
+                        gather=self._gather
+                    )
+                    if self.mesh is not None:
+                        c = jax.tree.map(
+                            lambda x: jax.lax.with_sharding_constraint(
+                                x, self._row_sharding), c)
+                    return vals, ids, c
 
             self._chunk_fn = jax.jit(_chunk)
 
-        def _insert(shared, row, slot):
-            # Write a (·, 1, S, ·) prefilled request cache into slot
-            # ``slot`` of the (·, n_slots, S_max, ·) shared cache. Leaves
-            # with a sequence axis keep positions >= S stale — they stay
-            # masked (arange <= pos) until the slot's own decode steps
-            # overwrite them; state leaves (ssm/conv) are fully replaced.
-            def put(sh, r, ax):
-                if ax == 2:
-                    return sh.at[:, slot, : r.shape[2]].set(r[:, 0].astype(sh.dtype))
-                return sh.at[:, slot].set(r[:, 0].astype(sh.dtype))
+        if paged:
+            kvl = self._kv_leaf
+            ps = page_size
 
-            return self._pin(jax.tree.map(put, shared, row, axes))
+            def _copy_page(c, src, dst):
+                # one-page KV copy (CoW): page ids are traced scalars, so
+                # every (src, dst) pair shares ONE compile
+                return self._pin(jax.tree.map(
+                    lambda sh, kv: sh.at[:, dst].set(sh[:, src]) if kv else sh,
+                    c, kvl))
 
-        self._insert_fn = jax.jit(_insert)
+            def _zero_kv_page(c, pid):
+                return self._pin(jax.tree.map(
+                    lambda sh, kv: sh.at[:, pid].set(0) if kv else sh,
+                    c, kvl))
 
-        def _scrub(shared, slot):
-            # Zero EVERY cache row of slot ``slot``. Run after a FAILED
-            # (poisoned) request: inserts only overwrite the next
-            # prompt's length, so a residual NaN row past it — masked
-            # but still multiplied (0·NaN = NaN) — would re-poison the
-            # slot's next tenant.
-            return self._pin(
-                jax.tree.map(lambda sh: sh.at[:, slot].set(0), shared))
+            def _copy_state_page(c, src, dst):
+                return self._pin(jax.tree.map(
+                    lambda sh, kv: sh if kv else sh.at[:, dst].set(sh[:, src]),
+                    c, kvl))
 
-        self._scrub_fn = jax.jit(_scrub)
+            def _zero_state_page(c, pid):
+                return self._pin(jax.tree.map(
+                    lambda sh, kv: sh if kv else sh.at[:, pid].set(0),
+                    c, kvl))
+
+            self._copy_page_fn = jax.jit(_copy_page)
+            self._zero_kv_page_fn = jax.jit(_zero_kv_page)
+            self._copy_state_page_fn = jax.jit(_copy_state_page)
+            self._zero_state_page_fn = jax.jit(_zero_state_page)
+
+            def _insert_paged(c, row, page_row, state_pid):
+                # Scatter a whole-prompt (·, 1, S, ·) prefilled cache into
+                # the arena along the slot's page row. Positions past S in
+                # the final page keep stale (finite) garbage — masked to
+                # an exact 0 contribution, like the contiguous stale tail.
+                def put(sh, r, kv):
+                    if kv:
+                        pos = jnp.arange(r.shape[2])
+                        return sh.at[:, page_row[pos // ps], pos % ps].set(
+                            r[:, 0].astype(sh.dtype))
+                    return sh.at[:, state_pid].set(r[:, 0].astype(sh.dtype))
+
+                return self._pin(jax.tree.map(put, c, row, kvl))
+
+            self._insert_paged_fn = jax.jit(_insert_paged)
+        else:
+            def _insert(shared, row, slot):
+                # Write a (·, 1, S, ·) prefilled request cache into slot
+                # ``slot`` of the (·, n_slots, S_max, ·) shared cache. Leaves
+                # with a sequence axis keep positions >= S stale — they stay
+                # masked (arange <= pos) until the slot's own decode steps
+                # overwrite them; state leaves (ssm/conv) are fully replaced.
+                def put(sh, r, ax):
+                    if ax == 2:
+                        return sh.at[:, slot, : r.shape[2]].set(
+                            r[:, 0].astype(sh.dtype))
+                    return sh.at[:, slot].set(r[:, 0].astype(sh.dtype))
+
+                return self._pin(jax.tree.map(put, shared, row, axes))
+
+            self._insert_fn = jax.jit(_insert)
+
+            def _scrub(shared, slot):
+                # Zero EVERY cache row of slot ``slot``. Run after a FAILED
+                # (poisoned) request: inserts only overwrite the next
+                # prompt's length, so a residual NaN row past it — masked
+                # but still multiplied (0·NaN = NaN) — would re-poison the
+                # slot's next tenant.
+                return self._pin(
+                    jax.tree.map(lambda sh: sh.at[:, slot].set(0), shared))
+
+            self._scrub_fn = jax.jit(_scrub)
 
     # -- sharding fixed points ----------------------------------------------
 
@@ -525,14 +697,30 @@ class ServeSession:
         nothing; the jit object must be replaced."""
         bundle, k = self.bundle, self.k
 
-        def _decode(p, t, c, tok, pos):
-            out = bundle.decode_step(
-                self._pin_p(p), t, c, tok, pos, k=k, kernel=self._eff_kernel,
-                mesh=self.mesh, gather=self._gather,
-                capacity_factor=self._eff_capacity_factor, with_stats=True,
-            )
-            vals, ids, c, stats = out
-            return vals, ids, self._pin(c), stats
+        if self._mgr is not None:
+            def _decode(p, t, c, tok, pos, pages, spages):
+                # pages/spages are DATA (host page tables re-uploaded every
+                # step as same-shape int32 arrays), not shapes — the step
+                # still compiles exactly once
+                out = bundle.decode_step(
+                    self._pin_p(p), t, c, tok, pos, k=k,
+                    kernel=self._eff_kernel, mesh=self.mesh,
+                    gather=self._gather,
+                    capacity_factor=self._eff_capacity_factor,
+                    with_stats=True, pages=pages, state_pages=spages,
+                )
+                vals, ids, c, stats = out
+                return vals, ids, self._pin(c), stats
+        else:
+            def _decode(p, t, c, tok, pos):
+                out = bundle.decode_step(
+                    self._pin_p(p), t, c, tok, pos, k=k,
+                    kernel=self._eff_kernel,
+                    mesh=self.mesh, gather=self._gather,
+                    capacity_factor=self._eff_capacity_factor, with_stats=True,
+                )
+                vals, ids, c, stats = out
+                return vals, ids, self._pin(c), stats
 
         self._decode_fn = jax.jit(_decode)
 
@@ -597,6 +785,21 @@ class ServeSession:
                     f" max_seq_len ({self.max_seq_len}); raise max_seq_len"
                     " or lower prefill_chunk"
                 )
+        if self._mgr is not None and self._mgr.has_kv:
+            # worst-case page footprint must fit the arena ALONE — a
+            # request that cannot run even with every resident preempted
+            # is rejected up front rather than wedging the queue
+            worst = S + sp.max_new_tokens - 1
+            if self.prefill_chunk is not None:
+                worst = max(worst, -(-S // self.prefill_chunk)
+                            * self.prefill_chunk)
+            need = -(-worst // self._mgr.page_size)
+            if need > self._mgr.allocatable:
+                reject(
+                    f"request needs {need} pages at its max length but the"
+                    f" arena only has {self._mgr.allocatable}; raise"
+                    " page_arena or shorten the request"
+                )
         req.submit_step = self.n_steps
         self.requests.append(req)
         victim = self.scheduler.submit(req)
@@ -632,13 +835,23 @@ class ServeSession:
         work remains."""
         self._expire_queue()
         self._admit()
+        if self._mgr is not None:
+            self._prepare_decode_writes()
         act = self.scheduler.active()
         if not act:
             return self.scheduler.has_work()
-        vals, ids, self._cache, stats = self._decode_fn(
-            self.params, self.table, self._cache,
-            jnp.asarray(self._tok), jnp.asarray(self._pos),
-        )
+        if self._mgr is not None:
+            vals, ids, self._cache, stats = self._decode_fn(
+                self.params, self.table, self._cache,
+                jnp.asarray(self._tok), jnp.asarray(self._pos),
+                jnp.asarray(self._mgr.tables),
+                jnp.asarray(self._mgr.state_pid),
+            )
+        else:
+            vals, ids, self._cache, stats = self._decode_fn(
+                self.params, self.table, self._cache,
+                jnp.asarray(self._tok), jnp.asarray(self._pos),
+            )
         self.n_steps += 1
         vals, ids = np.asarray(vals), np.asarray(ids)
         self._record_overflow(stats)
@@ -683,7 +896,7 @@ class ServeSession:
                       else self.cfg.ds.capacity_factor)
         else:
             eff_cf = None
-        return {
+        out = {
             "n_admitted": self.scheduler.n_admitted,
             "n_released": self.scheduler.n_released,
             "n_steps": self.n_steps,
@@ -707,6 +920,14 @@ class ServeSession:
             "effective_capacity_factor": eff_cf,
             "effective_kernel": self._eff_kernel,
         }
+        if self._mgr is not None:
+            out["paged"] = {
+                **self._mgr.stats(),
+                "preemptions": self._n_preempted,
+                "prefill_chunks": self._n_prefill_chunks,
+                "prefill_chunks_saved": self._n_prefill_chunks_saved,
+            }
+        return out
 
     # -- internals ----------------------------------------------------------
 
@@ -732,7 +953,13 @@ class ServeSession:
         self.scheduler.release(i)
         self._tok[i] = 0
         self._pos[i] = 0
-        if status is RequestStatus.FAILED:
+        if self._mgr is not None:
+            # drop every page reference; scrub (zero) the pages that
+            # actually free when the tenant failed poisoned — a shared
+            # page survives through its co-owners and is scrubbed by
+            # whichever failing sharer drops the LAST reference
+            self._release_slot_pages(i, scrub=status is RequestStatus.FAILED)
+        elif status is RequestStatus.FAILED:
             # decontaminate: the slot's cache rows are non-finite and a
             # later (shorter) tenant's insert would not overwrite all of
             # them — masked attention still multiplies them (0·NaN=NaN)
@@ -814,7 +1041,33 @@ class ServeSession:
             prompt = np.asarray(req.prompt, np.int32).reshape(-1)
             S = len(prompt)  # validated in submit()
             sp = req.sampling_params
-            vals, ids = self._prefill_into_slot(prompt, i)
+            n_resume = len(req.out_tokens)
+            if n_resume:
+                # resuming a preempted request: re-prefill everything it
+                # had produced except the last token, which is fed back
+                # as the next decode input — the sampling stream then
+                # continues at the preserved n_emitted counter, so its
+                # tokens are identical from the preemption point
+                toks = np.concatenate(
+                    [prompt, np.asarray(req.out_tokens[:-1], np.int32)])
+            else:
+                toks = prompt
+            out = self._prefill_into_slot(toks, i, sp.priority)
+            if out is None:
+                # paged arena exhausted with nothing preemptible below
+                # this priority: requeue at the FRONT and wait for the
+                # residents to finish — unless nothing is resident to
+                # wait for (cannot happen when submit() validated the
+                # worst case; defensive terminal)
+                if sched.active():
+                    sched.requeue(req)
+                    return
+                self._finish(
+                    req, RequestStatus.FAILED,
+                    "page arena exhausted with no resident to wait for",
+                )
+                continue
+            vals, ids, pending = out
             vals, ids = np.asarray(vals), np.asarray(ids)
             if not np.isfinite(vals[0]).all() or ids[0, 0] < 0:
                 # quarantine BEFORE admission: the slot stays free and
@@ -826,32 +1079,228 @@ class ServeSession:
                     req, RequestStatus.FAILED,
                     "non-finite prefill output (request quarantined)",
                 )
-                self._cache = self._scrub_fn(self._cache, i)
+                if self._mgr is not None:
+                    self._release_slot_pages(i, scrub=True)
+                else:
+                    self._cache = self._scrub_fn(self._cache, i)
                 continue
+            # register shared prefixes only AFTER the finite guard: a
+            # poisoned prefill must never become adoptable
+            for key, length, snap in pending:
+                self._mgr.register_prefix(i, key, length,
+                                          state_snapshot=snap)
             slot = sched.admit(i, req, S)
             req.status = RequestStatus.ACTIVE
-            t0 = self._sample(vals[0], ids[0], sp, 0)
-            self._emit(i, slot, t0)
+            if n_resume:
+                # the re-prefill's head output is discarded: those tokens
+                # were already emitted before preemption
+                slot.n_emitted = n_resume
+                self._tok[i] = req.out_tokens[-1]
+                self._pos[i] = slot.pos
+            else:
+                t0 = self._sample(vals[0], ids[0], sp, 0)
+                self._emit(i, slot, t0)
 
-    def _prefill_into_slot(self, prompt: np.ndarray, i: int):
-        S = len(prompt)
+    def _prefill_into_slot(self, toks: np.ndarray, i: int, priority: int):
+        """Prefill ``toks`` into slot ``i``; returns ``(vals, ids,
+        pending_prefixes)`` or ``None`` when the paged arena could not
+        supply the pages even after preemption (the slot is left with
+        nothing mapped)."""
+        S = len(toks)
+        m = self._mgr
+        pending: List[tuple] = []
+        if m is not None and not self._alloc_state_page(i, priority):
+            return None
         if self.prefill_chunk is None:
+            if m is not None:
+                if not self._prepare_kv_write_range(i, 0, S, priority):
+                    self._release_slot_pages(i, scrub=False)
+                    return None
+                m.activate_slot(i)
             vals, ids, row = self._prefill_fn(
-                self.params, self.table, {"tokens": jnp.asarray(prompt[None])}
+                self.params, self.table, {"tokens": jnp.asarray(toks[None])}
             )
-        else:
-            cp = self.prefill_chunk
+            if m is not None:
+                self._cache = self._insert_paged_fn(
+                    self._cache, row, jnp.asarray(m.tables[i]),
+                    int(m.state_pid[i]))
+            else:
+                self._cache = self._insert_fn(self._cache, row, i)
+            return vals, ids, pending
+        cp = self.prefill_chunk
+        if m is None:
             row = self._row_zero
             for lo in range(0, S, cp):
-                tail = prompt[lo: lo + cp]
+                tail = toks[lo: lo + cp]
                 buf = np.zeros(cp, np.int32)
                 buf[: len(tail)] = tail
                 vals, ids, row = self._chunk_fn(
                     self.params, self.table, row, jnp.asarray(buf[None]),
                     lo, len(tail),
                 )
-        self._cache = self._insert_fn(self._cache, row, i)
-        return vals, ids
+            self._cache = self._insert_fn(self._cache, row, i)
+            return vals, ids, pending
+        # paged chunked prefill, straight into the shared arena
+        pos0 = 0
+        if self._prefix_sharing:
+            # max_len = S - 1: at least one tail chunk always runs and
+            # produces the head's top-k for this prompt
+            e = m.match_prefix(toks, cp, S - 1)
+            if e is not None:
+                m.adopt_prefix(i, e)
+                if e.state is not None:
+                    self._cache = self._copy_state_page_fn(
+                        self._cache, e.state[0], int(m.state_pid[i]))
+                pos0 = e.length
+                self._n_prefill_chunks_saved += pos0 // cp
+        m.activate_slot(i)
+        vals = ids = None
+        for lo in range(pos0, S, cp):
+            tail = toks[lo: lo + cp]
+            # the chunk writes its FULL cp rows (tail padding included),
+            # so the prepared range is page-exact for the whole chunk
+            if not self._prepare_kv_write_range(i, lo, lo + cp, priority):
+                self._release_slot_pages(i, scrub=False)
+                return None
+            buf = np.zeros(cp, np.int32)
+            buf[: len(tail)] = tail
+            vals, ids, self._cache = self._chunk_fn(
+                self.params, self.table, self._cache,
+                jnp.asarray(buf[None]), lo, len(tail),
+                jnp.asarray(m.tables[i])[None],
+                np.asarray(m.state_pid[i: i + 1], np.int32),
+            )
+            self._n_prefill_chunks += 1
+            hi = lo + len(tail)
+            if self._prefix_sharing and hi == lo + cp \
+                    and not m.has_prefix(prefix_hash(toks[:hi]), hi):
+                # snapshot this full-chunk boundary for later sharers;
+                # state families need a copied state page (opportunistic:
+                # never preempt anyone just for a snapshot)
+                snap = None
+                if m.has_state:
+                    snap = m.alloc_state()
+                    if snap is None:
+                        continue
+                    self._cache = self._copy_state_page_fn(
+                        self._cache, int(m.state_pid[i]), snap)
+                    m.state_holdings[i].append(snap)
+                pending.append((prefix_hash(toks[:hi]), hi, snap))
+        return vals, ids, pending
+
+    # -- paged-arena management ---------------------------------------------
+
+    def _alloc_state_page(self, i: int, priority: int) -> bool:
+        """Give slot ``i`` a private, ZEROED live state page (ssm/hybrid
+        recurrence starts from zeros, exactly like the contiguous row)."""
+        m = self._mgr
+        if not m.has_state:
+            return True
+        while True:
+            pid = m.alloc_state()
+            if pid is not None:
+                break
+            if not self._preempt_lowest_below(priority):
+                return False
+        m.state_pid[i] = pid
+        self._cache = self._zero_state_page_fn(self._cache, pid)
+        return True
+
+    def _prepare_kv_write_range(self, i: int, lo: int, hi: int,
+                                priority: int) -> bool:
+        """Make every page covering positions ``[lo, hi)`` of slot ``i``
+        exclusively writable — allocating fresh pages, running CoW copies
+        for shared ones, preempting strictly-lower-priority residents
+        while the arena is exhausted. False when even that failed."""
+        m = self._mgr
+        if not m.has_kv:
+            return True
+        for j in range(lo // m.page_size, (hi - 1) // m.page_size + 1):
+            while True:
+                plan = m.prepare_write(i, j)
+                if plan is not None:
+                    break
+                if not self._preempt_lowest_below(priority):
+                    return False
+            if plan.kind == "cow":
+                self._cache = self._copy_page_fn(self._cache, plan.src,
+                                                 plan.dst)
+        return True
+
+    def _prepare_decode_writes(self) -> None:
+        """Before the decode step, secure each resident's write position.
+        A resident that cannot get its page even after preempting every
+        lower-priority batchmate preempts ITSELF — its freed pages
+        unblock the survivors, and it resumes token-identically once
+        capacity returns."""
+        for i, slot in list(self.scheduler.active()):
+            if self.scheduler.slots[i] is not slot:
+                continue  # preempted by an earlier iteration
+            pos = int(self._pos[i])
+            pr = slot.req.sampling_params.priority
+            if not self._prepare_kv_write_range(i, pos, pos + 1, pr):
+                self._preempt_slot(i)
+
+    def _preempt_lowest_below(self, priority: int) -> bool:
+        """Preempt the lowest-priority resident strictly below
+        ``priority`` (newest admission among ties). False when nobody
+        qualifies — equal priority never preempts equal priority."""
+        victim = None
+        for i, slot in self.scheduler.active():
+            p = slot.req.sampling_params.priority
+            if p >= priority:
+                continue
+            if victim is None:
+                victim = (i, slot)
+                continue
+            vp = victim[1].req.sampling_params.priority
+            if p < vp or (p == vp and slot.admit_seq > victim[1].admit_seq):
+                victim = (i, slot)
+        if victim is None:
+            return False
+        self._preempt_slot(victim[0])
+        return True
+
+    def _preempt_slot(self, i: int) -> None:
+        """Preempt-and-requeue resident ``i``: a pure metadata swap. Its
+        page references drop (shared prefix pages survive through their
+        co-owners), the request goes back to the FRONT of the queue
+        still holding its emitted tokens, and on re-admission it
+        re-prefills ``prompt ++ out_tokens[:-1]`` and continues its
+        sampling stream at the preserved ``n_emitted``."""
+        slot = self.scheduler.slots[i]
+        req = slot.req
+        self._release_slot_pages(i, scrub=False)
+        self.scheduler.release(i)
+        self._tok[i] = 0
+        self._pos[i] = 0
+        req.status = RequestStatus.QUEUED
+        self.scheduler.requeue(req)
+        self._n_preempted += 1
+        log.info(
+            "preempted slot %d (priority=%d, %d tokens emitted); requeued",
+            i, req.sampling_params.priority, slot.n_emitted,
+        )
+
+    def _release_slot_pages(self, i: int, scrub: bool) -> None:
+        """Drop every page reference slot ``i`` holds and reset its table
+        row to the garbage sink. ``scrub`` zeroes each page that actually
+        returns to the free list (FAILED tenants: the rows may be
+        non-finite, and page reuse must never leak NaN into a later
+        tenant — a still-shared page is scrubbed by whichever failing
+        co-owner drops the last reference)."""
+        m = self._mgr
+        for pid in m.mapped_kv_pages(i):
+            if m.decref(pid) and scrub:
+                self._cache = self._zero_kv_page_fn(self._cache, pid)
+        if m.has_state:
+            live = int(m.state_pid[i])
+            if live >= N_RESERVED and m.decref_state(live) and scrub:
+                self._cache = self._zero_state_page_fn(self._cache, live)
+            for pid in list(m.state_holdings[i]):
+                if m.decref_state(pid) and scrub:
+                    self._cache = self._zero_state_page_fn(self._cache, pid)
+        m.reset_slot(i)
 
     def _sample(self, vals: np.ndarray, ids: np.ndarray, sp: SamplingParams,
                 n_emitted: int) -> int:

@@ -25,10 +25,13 @@ from repro.models import build
 from repro.testing import (
     CancelAfter,
     RaisingStreamCB,
+    exhaust_pages,
     oversized_prompt,
     poison_cache_slot,
     poison_layer,
+    poison_page,
     poison_token_embedding,
+    release_hoarded_pages,
     skew_gate,
 )
 from repro.train import Request, RequestStatus, SamplingParams, ServeSession
@@ -470,6 +473,168 @@ def test_serve_engine_warns_deprecation_once_per_process(tiny):
                  kernel="jnp").run([direct])
     assert req.status is RequestStatus.COMPLETED
     assert req.out_tokens == direct.out_tokens
+
+
+# ---------------------------------------------------------------------------
+# Satellite (ISSUE 7): paged-arena faults — pressure + shared-page poison
+# ---------------------------------------------------------------------------
+
+def _assert_no_page_leak(sess):
+    """The chaos invariant: after a drained run, EVERY fault scenario
+    must return the free-page counts to their initial values (no leaked
+    pages, no stale refcounts)."""
+    st = sess.stats()["paged"]
+    assert st["pages_in_use"] == 0, st
+    assert st["state_pages_in_use"] == 0, st
+    assert not sess.scheduler.has_work()
+
+
+def test_exhaust_pages_forces_preemption_then_recovers(tiny):
+    """Hoarding the free list mid-flight forces the session to preempt
+    its lowest-priority resident for the high-priority one; releasing
+    the pressure lets the victim resume and complete with tokens
+    identical to an uncontended run."""
+    bundle, params, table = tiny
+    rng = np.random.RandomState(11)
+    low = Request(prompt=rng.randint(1, 100, 8).astype(np.int32),
+                  sampling=SamplingParams(max_new_tokens=16, priority=0))
+    high = Request(prompt=rng.randint(1, 100, 8).astype(np.int32),
+                   sampling=SamplingParams(max_new_tokens=16, priority=5))
+    ref = _clean_reference(bundle, params, table, [low, high],
+                           n_slots=1, max_seq_len=32, prefill_chunk=4)
+    sess = ServeSession(bundle, params, table, n_slots=2, max_seq_len=32,
+                        kernel="jnp", prefill_chunk=4, paged=True,
+                        page_size=4, prefix_sharing=False)
+    sess.submit(low)
+    sess.submit(high)
+    for _ in range(2):
+        sess.step()
+    hoard = exhaust_pages(sess)   # arena pressure: next growth must evict
+    steps = 0
+    while sess.step() and sess.stats()["paged"]["preemptions"] == 0:
+        steps += 1
+        assert steps < 64, "pressure never triggered a preemption"
+    assert low.status is RequestStatus.QUEUED  # the low-priority victim
+    release_hoarded_pages(sess, hoard)
+    sess.run()
+    assert low.status is RequestStatus.COMPLETED
+    assert high.status is RequestStatus.COMPLETED
+    assert [low.out_tokens, high.out_tokens] == ref
+    _assert_no_page_leak(sess)
+
+
+def test_poison_shared_page_quarantines_all_sharers(tiny):
+    """NaN a SHARED prefix page: every sharer reads it on its next decode
+    step and must fail quarantined — one at a time, without corrupting
+    the free list (the page is scrubbed by whichever failing sharer
+    drops the last reference) — and the session then serves a fresh
+    request that reuses those pages cleanly."""
+    bundle, params, table = tiny
+    rng = np.random.RandomState(12)
+    sysp = rng.randint(1, 100, 16).astype(np.int32)
+    reqs = [Request(
+        prompt=np.concatenate([sysp, rng.randint(1, 100, 4).astype(np.int32)]),
+        sampling=SamplingParams(max_new_tokens=10)) for _ in range(3)]
+    sess = ServeSession(bundle, params, table, n_slots=3, max_seq_len=64,
+                        kernel="jnp", prefill_chunk=4, paged=True,
+                        page_size=8)
+    for r in reqs:
+        sess.submit(r)
+    sess.step()
+    assert sess.stats()["paged"]["prefix_hits"] == 2
+    shared = sess._mgr.shared_pages()
+    assert shared, "prefix sharing produced no shared pages"
+    poison_page(sess, shared[0])
+    sess.run()
+    for r in reqs:                  # ALL sharers quarantined
+        assert r.status is RequestStatus.FAILED
+        assert "quarantined" in r.error
+    _assert_no_page_leak(sess)
+    # the freed (and scrubbed) pages serve a new request bit-identically
+    fresh = Request(prompt=rng.randint(1, 100, 6).astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=5))
+    ref = _clean_reference(bundle, params, table, [fresh],
+                           n_slots=1, max_seq_len=32, prefill_chunk=4)
+    sess.run([fresh])
+    assert fresh.status is RequestStatus.COMPLETED
+    assert fresh.out_tokens == ref[0]
+    assert sess._decode_fn._cache_size() == 1
+    _assert_no_page_leak(sess)
+
+
+def test_paged_chaos_scenarios_leak_free(tiny):
+    """Every earlier fault class, replayed on a PAGED session: poisoned
+    prefill, raising stream_cb, mid-flight cancel, deadlines — the free
+    page count returns to its initial value after each drain and the
+    survivors stay bit-identical."""
+    bundle, params, table = tiny
+    mk = lambda: ServeSession(bundle, params, table, n_slots=2,
+                              max_seq_len=32, kernel="jnp", prefill_chunk=4,
+                              paged=True, page_size=8)
+    # 1) poisoned embedding fails only its request at prefill
+    reqs = _requests(128, n=3, seed=13, max_new=4)
+    clean = reqs[1:]
+    ref = _clean_reference(bundle, params, table, clean,
+                           n_slots=2, max_seq_len=32, prefill_chunk=4)
+    tok = _absent_token(128, clean, ref)
+    reqs[0].prompt[0] = tok
+    sess = mk()
+    sess.params = poison_token_embedding(params, tok)
+    sess.run(reqs)
+    assert reqs[0].status is RequestStatus.FAILED
+    assert [r.out_tokens for r in clean] == ref
+    _assert_no_page_leak(sess)
+    # 2) raising stream_cb
+    reqs = _requests(128, n=3, seed=14, max_new=5)
+    sess = mk()
+    sess.stream_cb = RaisingStreamCB(target=reqs[1], after=2)
+    sess.run(reqs)
+    assert reqs[1].status is RequestStatus.FAILED
+    _assert_no_page_leak(sess)
+    # 3) mid-flight cancel + queued deadline
+    sess = mk()
+    reqs = _requests(128, n=2, seed=15, max_new=8)
+    waiter = Request(prompt=np.arange(4, dtype=np.int32),
+                     sampling=SamplingParams(max_new_tokens=4,
+                                             deadline_steps=2))
+    for r in reqs:
+        sess.submit(r)
+    sess.step()
+    sess.submit(waiter)
+    sess.cancel(reqs[0])
+    sess.run()
+    assert reqs[0].status is RequestStatus.CANCELLED
+    assert reqs[1].status is RequestStatus.COMPLETED
+    assert waiter.status in (RequestStatus.TIMED_OUT,
+                             RequestStatus.COMPLETED)
+    _assert_no_page_leak(sess)
+
+
+@needs8
+def test_poison_shared_page_on_mesh(tiny):
+    """The shared-page quarantine contract holds when the arena's page
+    axis is sharded over the mesh's data axis."""
+    bundle, params, table = tiny
+    mesh = make_test_mesh("4x2")
+    rng = np.random.RandomState(16)
+    sysp = rng.randint(1, 100, 16).astype(np.int32)
+    reqs = [Request(
+        prompt=np.concatenate([sysp, rng.randint(1, 100, 4).astype(np.int32)]),
+        sampling=SamplingParams(max_new_tokens=8)) for _ in range(2)]
+    sess = ServeSession(bundle, params, table, n_slots=2, max_seq_len=64,
+                        kernel="jnp", prefill_chunk=4, paged=True,
+                        page_size=8, mesh=mesh)
+    for r in reqs:
+        sess.submit(r)
+    sess.step()
+    shared = sess._mgr.shared_pages()
+    assert shared
+    poison_page(sess, shared[0])
+    sess.run()
+    for r in reqs:
+        assert r.status is RequestStatus.FAILED
+    _assert_no_page_leak(sess)
+    assert sess._decode_fn._cache_size() == 1
 
 
 # ---------------------------------------------------------------------------

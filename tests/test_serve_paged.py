@@ -1,0 +1,457 @@
+"""Paged KV/state cache subsystem (ISSUE 7): bit-identity vs the
+contiguous cache, copy-on-write prefix sharing, and priority preemption.
+
+Acceptance:
+
+* paged tokens are BIT-IDENTICAL to the contiguous cache across
+  transformer/ssm/hybrid, whole-prompt and chunked prefill, mixed
+  workloads with mid-flight admits, and mesh/param-mode combos — with
+  the decode step still compiled exactly once (page tables are data,
+  not shapes);
+* N requests sharing a chunk-aligned system prompt prefill it ONCE
+  (prefill-chunk call count and compile count asserted) and their
+  divergent continuations match independent sessions;
+* a preempted-then-resumed request emits tokens identical from the
+  preemption point;
+* zero pages leak: the free-page count returns to its initial value
+  after every scenario, including capacity overflow and faults.
+
+Pure page-table unit tests live here too (no jax compute needed for
+refcount/CoW/generation bookkeeping).
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_test_mesh, needs_devices
+from repro.configs import get_config, reduce_config
+from repro.models import build
+from repro.serve import N_RESERVED, PagedCacheManager, prefix_hash
+from repro.train import Request, RequestStatus, SamplingParams, ServeSession
+
+needs8 = needs_devices(8)
+
+
+def _tiny(arch, vocab=128):
+    cfg = reduce_config(get_config(arch), vocab=vocab)
+    if cfg.head == "ds":
+        cfg = cfg.replace(ds=get_config(arch).ds.replace(num_experts=4))
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    return bundle, params, ds_state
+
+
+@pytest.fixture(scope="module")
+def tiny_tf():
+    return _tiny("qwen2-1.5b")
+
+
+@pytest.fixture(scope="module")
+def tiny_ssm():
+    return _tiny("mamba2-130m", 96)
+
+
+@pytest.fixture(scope="module")
+def tiny_hybrid():
+    return _tiny("zamba2-7b", 96)
+
+
+def _mixed_requests(vocab, n=5, seed=0, max_new=(2, 6, 3, 5, 4)):
+    rng = np.random.RandomState(seed)
+    return [Request(prompt=rng.randint(1, vocab, rng.randint(3, 12)).astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=max_new[i % len(max_new)]))
+            for i in range(n)]
+
+
+def _clone(reqs):
+    return [Request(prompt=r.prompt.copy(), sampling=r.sampling_params)
+            for r in reqs]
+
+
+def _assert_leak_free(sess):
+    st = sess.stats()["paged"]
+    assert st["pages_in_use"] == 0, st
+    assert st["state_pages_in_use"] == 0, st
+    assert not sess.scheduler.has_work()
+
+
+# ---------------------------------------------------------------------------
+# Page-table unit tests (pure host-side bookkeeping)
+# ---------------------------------------------------------------------------
+
+def test_manager_alloc_free_refcounts():
+    m = PagedCacheManager(n_slots=2, n_pages=N_RESERVED + 4, page_size=4,
+                          max_seq_len=16)
+    assert m.allocatable == 4 and m.pages_free == 4
+    p = m.alloc()
+    assert p >= N_RESERVED and m.ref[p] == 1 and m.pages_free == 3
+    m.incref(p)
+    assert not m.decref(p)          # co-owner keeps it alive
+    assert m.decref(p)              # last ref frees
+    assert m.pages_free == 4
+    # exhaustion returns None, table untouched
+    held = [m.alloc() for _ in range(4)]
+    assert m.alloc() is None
+    for q in held:
+        m.decref(q)
+
+
+def test_manager_prepare_write_fresh_cow_ok():
+    m = PagedCacheManager(n_slots=2, n_pages=N_RESERVED + 6, page_size=4,
+                          max_seq_len=16)
+    plan = m.prepare_write(0, 0)
+    assert plan.kind == "fresh" and m.tables[0, 0] == plan.dst
+    assert m.prepare_write(0, 0).kind == "ok"   # exclusive: no-op
+    # share it, then the next write must CoW
+    m.incref(int(m.tables[0, 0]))
+    m.tables[1, 0] = m.tables[0, 0]
+    plan = m.prepare_write(0, 0)
+    assert plan.kind == "cow" and plan.src != plan.dst
+    assert m.n_cow == 1
+    assert m.tables[1, 0] == plan.src and m.ref[plan.src] == 1
+
+
+def test_manager_generation_invalidates_prefix_entries():
+    m = PagedCacheManager(n_slots=2, n_pages=N_RESERVED + 4, page_size=4,
+                          max_seq_len=16)
+    toks = np.arange(8, dtype=np.int32)
+    m.prepare_write(0, 0)
+    m.prepare_write(0, 1)
+    key = prefix_hash(toks)
+    m.register_prefix(0, key, 8)
+    assert m.has_prefix(key, 8)
+    assert m.match_prefix(np.arange(12, dtype=np.int32), 4, 11).length == 8
+    # freeing a registered page bumps its generation -> entry dies, the
+    # free list is whole (entries never hold refcounts)
+    for pid in m.mapped_kv_pages(0):
+        m.decref(pid)
+    m.reset_slot(0)
+    assert not m.has_prefix(key, 8)
+    assert m.match_prefix(np.arange(12, dtype=np.int32), 4, 11) is None
+    assert m.pages_free == m.allocatable
+
+
+def test_manager_activate_flips_garbage_to_zero():
+    from repro.serve import PAGE_GARBAGE, PAGE_ZERO
+
+    m = PagedCacheManager(n_slots=1, n_pages=N_RESERVED + 4, page_size=4,
+                          max_seq_len=16)
+    assert (m.tables[0] == PAGE_GARBAGE).all()   # inactive: write sink
+    m.prepare_write(0, 0)
+    m.activate_slot(0)
+    assert m.tables[0, 0] >= N_RESERVED
+    assert (m.tables[0, 1:] == PAGE_ZERO).all()  # active tail: exact zeros
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: bit-identity vs the contiguous cache, all families
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture,vocab", [("tiny_tf", 128),
+                                           ("tiny_ssm", 96),
+                                           ("tiny_hybrid", 96)])
+@pytest.mark.parametrize("chunk", [None, 4])
+def test_paged_token_identity(fixture, vocab, chunk, request):
+    """Mixed workload with slot churn (more requests than slots, hence
+    mid-flight admits): paged == contiguous bit-for-bit, decode compiled
+    once, no leaked pages."""
+    bundle, params, state = request.getfixturevalue(fixture)
+    reqs = _mixed_requests(vocab, n=5, seed=1)
+    ref = _clone(reqs)
+    ServeSession(bundle, params, state, n_slots=2, max_seq_len=32, k=8,
+                 prefill_chunk=chunk).run(ref)
+    sess = ServeSession(bundle, params, state, n_slots=2, max_seq_len=32,
+                        k=8, prefill_chunk=chunk, paged=True, page_size=8)
+    sess.run(reqs)
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in ref]
+    assert all(r.status is RequestStatus.COMPLETED for r in reqs)
+    assert sess._decode_fn._cache_size() == 1
+    if chunk is not None:
+        assert sess._chunk_fn._cache_size() == 1
+    _assert_leak_free(sess)
+
+
+def test_paged_mid_flight_admit_identical(tiny_tf):
+    """A request submitted while others are mid-decode lands in a freed
+    slot whose pages were recycled — still bit-identical."""
+    bundle, params, state = tiny_tf
+    reqs = _mixed_requests(128, n=4, seed=2)
+    late = Request(prompt=np.arange(5, dtype=np.int32) + 7,
+                   sampling=SamplingParams(max_new_tokens=4))
+    ref = _clone(reqs + [late])
+    ServeSession(bundle, params, state, n_slots=2, max_seq_len=32, k=8,
+                 prefill_chunk=4).run(ref)
+    sess = ServeSession(bundle, params, state, n_slots=2, max_seq_len=32,
+                        k=8, prefill_chunk=4, paged=True, page_size=8)
+    for r in reqs:
+        sess.submit(r)
+    sess.step()
+    sess.step()
+    sess.submit(late)
+    while sess.step():
+        pass
+    assert [r.out_tokens for r in reqs + [late]] \
+        == [r.out_tokens for r in ref]
+    _assert_leak_free(sess)
+
+
+def test_paged_validation():
+    bundle, params, state = _tiny("qwen2-1.5b")
+    with pytest.raises(ValueError, match="page_size"):
+        ServeSession(bundle, params, state, max_seq_len=30, paged=True,
+                     page_size=8)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeSession(bundle, params, state, max_seq_len=32, paged=True,
+                     page_size=8, prefill_chunk=5)
+
+
+def test_paged_submit_rejects_never_fitting_request(tiny_tf):
+    """A request whose worst-case page footprint exceeds the whole arena
+    can never run (even with every resident preempted): rejected at
+    submit() before any compute."""
+    bundle, params, state = tiny_tf
+    sess = ServeSession(bundle, params, state, n_slots=2, max_seq_len=32,
+                        k=8, paged=True, page_size=8, page_arena=2)
+    req = Request(prompt=np.arange(20, dtype=np.int32),
+                  sampling=SamplingParams(max_new_tokens=4))
+    with pytest.raises(ValueError, match="pages"):
+        sess.submit(req)
+    assert req.status is RequestStatus.REJECTED
+    _assert_leak_free(sess)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: copy-on-write prefix sharing
+# ---------------------------------------------------------------------------
+
+def _shared_prefix_requests(vocab, n, prefix_len, tail_len, seed=3,
+                            max_new=6):
+    rng = np.random.RandomState(seed)
+    sysp = rng.randint(1, vocab, prefix_len).astype(np.int32)
+    return [Request(
+        prompt=np.concatenate([sysp, rng.randint(1, vocab, tail_len).astype(np.int32)]),
+        sampling=SamplingParams(max_new_tokens=max_new)) for _ in range(n)]
+
+
+def test_prefix_prefilled_once_and_divergence_identical(tiny_tf):
+    """4 concurrent requests with a 16-token system prompt (chunk 4):
+    the prefix's 4 chunks run ONCE; the other 3 requests adopt the pages
+    and only prefill their tails. Continuations match fully independent
+    sessions, and the chunked prefill stays at one compile."""
+    bundle, params, state = tiny_tf
+    reqs = _shared_prefix_requests(128, n=4, prefix_len=16, tail_len=4)
+    ref = []
+    for r in _clone(reqs):
+        ServeSession(bundle, params, state, n_slots=1, max_seq_len=64, k=8,
+                     prefill_chunk=4).run([r])
+        ref.append(r.out_tokens)
+    sess = ServeSession(bundle, params, state, n_slots=4, max_seq_len=64,
+                        k=8, prefill_chunk=4, paged=True, page_size=8)
+    sess.run(reqs)
+    assert [r.out_tokens for r in reqs] == ref
+    st = sess.stats()["paged"]
+    assert st["prefix_hits"] == 3
+    # each adopter skipped the prefix's 4 chunks
+    assert st["prefill_chunks_saved"] == 12
+    assert st["prefix_tokens_reused"] == 48
+    # total chunk calls == the no-sharing count minus the saved ones
+    total = sum(-(-len(r.prompt) // 4) for r in reqs)
+    assert sess._n_prefill_chunks == total - 12
+    assert sess._chunk_fn._cache_size() == 1
+    assert sess._decode_fn._cache_size() == 1
+    _assert_leak_free(sess)
+
+
+def test_cow_on_partially_shared_page(tiny_tf):
+    """A 12-token prefix with page_size 8 ends mid-page: the adopters'
+    own tail chunk writes into the SHARED boundary page, which must be
+    copied first (n_cow > 0) — and everyone still matches independent
+    sessions."""
+    bundle, params, state = tiny_tf
+    reqs = _shared_prefix_requests(128, n=3, prefix_len=12, tail_len=5,
+                                   seed=4, max_new=8)
+    ref = []
+    for r in _clone(reqs):
+        ServeSession(bundle, params, state, n_slots=1, max_seq_len=64, k=8,
+                     prefill_chunk=4).run([r])
+        ref.append(r.out_tokens)
+    sess = ServeSession(bundle, params, state, n_slots=3, max_seq_len=64,
+                        k=8, prefill_chunk=4, paged=True, page_size=8)
+    sess.run(reqs)
+    assert [r.out_tokens for r in reqs] == ref
+    st = sess.stats()["paged"]
+    assert st["prefix_hits"] == 2
+    assert st["cow_copies"] > 0
+    _assert_leak_free(sess)
+
+
+@pytest.mark.parametrize("fixture,vocab", [("tiny_ssm", 96),
+                                           ("tiny_hybrid", 96)])
+def test_prefix_sharing_state_families(fixture, vocab, request):
+    """ssm/hybrid prefix sharing carries the conv/ssm recurrence through
+    boundary state snapshots: adopters copy the snapshot into their live
+    state page and must still match independent sessions exactly."""
+    bundle, params, state = request.getfixturevalue(fixture)
+    reqs = _shared_prefix_requests(vocab, n=3, prefix_len=16, tail_len=3,
+                                   seed=5)
+    ref = []
+    for r in _clone(reqs):
+        ServeSession(bundle, params, state, n_slots=1, max_seq_len=32, k=8,
+                     prefill_chunk=4).run([r])
+        ref.append(r.out_tokens)
+    sess = ServeSession(bundle, params, state, n_slots=3, max_seq_len=32,
+                        k=8, prefill_chunk=4, paged=True, page_size=8)
+    sess.run(reqs)
+    assert [r.out_tokens for r in reqs] == ref
+    assert sess.stats()["paged"]["prefix_hits"] == 2
+    assert sess.stats()["paged"]["prefill_chunks_saved"] > 0
+    _assert_leak_free(sess)
+
+
+def test_prefix_sharing_disabled_still_paged(tiny_tf):
+    bundle, params, state = tiny_tf
+    reqs = _shared_prefix_requests(128, n=3, prefix_len=16, tail_len=4)
+    ref = _clone(reqs)
+    ServeSession(bundle, params, state, n_slots=3, max_seq_len=64, k=8,
+                 prefill_chunk=4).run(ref)
+    sess = ServeSession(bundle, params, state, n_slots=3, max_seq_len=64,
+                        k=8, prefill_chunk=4, paged=True, page_size=8,
+                        prefix_sharing=False)
+    sess.run(reqs)
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in ref]
+    st = sess.stats()["paged"]
+    assert st["prefix_hits"] == 0 and st["prefill_chunks_saved"] == 0
+    _assert_leak_free(sess)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: priority preemption under arena pressure
+# ---------------------------------------------------------------------------
+
+def test_preempted_request_resumes_identically(tiny_tf):
+    """An undersized arena forces preemption of the low-priority resident
+    when high-priority work arrives; the victim resumes later and its
+    FULL token sequence matches an uncontended solo run — identical from
+    the preemption point."""
+    bundle, params, state = tiny_tf
+    rng = np.random.RandomState(6)
+    low = Request(prompt=rng.randint(1, 100, 10).astype(np.int32),
+                  sampling=SamplingParams(max_new_tokens=20, priority=0))
+    high = Request(prompt=rng.randint(1, 100, 10).astype(np.int32),
+                   sampling=SamplingParams(max_new_tokens=20, priority=5))
+    ref = []
+    for r in _clone([low, high]):
+        ServeSession(bundle, params, state, n_slots=1, max_seq_len=64, k=8,
+                     prefill_chunk=4).run([r])
+        ref.append(r.out_tokens)
+    # arena of 5 pages cannot hold both requests' full footprint (each
+    # needs ceil(29/8)=4): admitting `high` must evict `low`
+    sess = ServeSession(bundle, params, state, n_slots=2, max_seq_len=64,
+                        k=8, prefill_chunk=4, paged=True, page_size=8,
+                        page_arena=5, prefix_sharing=False)
+    sess.submit(low)
+    for _ in range(3):
+        sess.step()
+    assert low.status is RequestStatus.ACTIVE
+    sess.submit(high)
+    while sess.step():
+        pass
+    assert sess.stats()["paged"]["preemptions"] > 0
+    assert low.status is RequestStatus.COMPLETED
+    assert high.status is RequestStatus.COMPLETED
+    assert [low.out_tokens, high.out_tokens] == ref
+    _assert_leak_free(sess)
+
+
+def test_equal_priority_never_preempts_self_preempt_converges(tiny_tf):
+    """Equal-priority residents cannot evict each other; under pressure a
+    resident that cannot grow self-preempts (freeing pages for the
+    batchmates) and everyone eventually completes identically."""
+    bundle, params, state = tiny_tf
+    rng = np.random.RandomState(7)
+    reqs = [Request(prompt=rng.randint(1, 100, 8).astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=16))
+            for _ in range(3)]
+    ref = []
+    for r in _clone(reqs):
+        ServeSession(bundle, params, state, n_slots=1, max_seq_len=32, k=8,
+                     prefill_chunk=4).run([r])
+        ref.append(r.out_tokens)
+    sess = ServeSession(bundle, params, state, n_slots=3, max_seq_len=32,
+                        k=8, prefill_chunk=4, paged=True, page_size=8,
+                        page_arena=6, prefix_sharing=False)
+    sess.run(reqs)
+    assert all(r.status is RequestStatus.COMPLETED for r in reqs)
+    assert [r.out_tokens for r in reqs] == ref
+    _assert_leak_free(sess)
+
+
+def test_preemption_keeps_seniority(tiny_tf):
+    """A preempted resident re-enters at the FRONT of its priority class:
+    equal-priority queue churn cannot starve it."""
+    bundle, params, state = tiny_tf
+    sess = ServeSession(bundle, params, state, n_slots=1, max_seq_len=32,
+                        k=8, paged=True, page_size=8)
+    victim = Request(prompt=np.arange(4, dtype=np.int32),
+                     sampling=SamplingParams(max_new_tokens=4))
+    sess.submit(victim)
+    sess.step()
+    later = Request(prompt=np.arange(4, dtype=np.int32) + 1,
+                    sampling=SamplingParams(max_new_tokens=4))
+    sess.submit(later)
+    sess._preempt_slot(0)           # force the metadata swap directly
+    assert victim.status is RequestStatus.QUEUED
+    assert sess.scheduler.queue[0] is victim  # ahead of `later`
+    sess.run()
+    assert victim.status is RequestStatus.COMPLETED
+    _assert_leak_free(sess)
+
+
+# ---------------------------------------------------------------------------
+# Distributed CI job: paged serving on the 8-fake-device mesh
+# ---------------------------------------------------------------------------
+
+@needs8
+@pytest.mark.parametrize("param_mode", ["replicated", "fsdp"])
+def test_paged_on_mesh_token_identical(tiny_tf, param_mode):
+    """4x2 mesh, arena page axis sharded over 'data': paged chunked
+    serving with prefix sharing matches the unsharded contiguous oracle
+    bit-for-bit and the decode step compiles exactly once."""
+    bundle, params, state = tiny_tf
+    mesh = make_test_mesh("4x2")
+    reqs = _shared_prefix_requests(128, n=4, prefix_len=16, tail_len=4,
+                                   seed=8)
+    ref = _clone(reqs)
+    ServeSession(bundle, params, state, n_slots=4, max_seq_len=64, k=8,
+                 prefill_chunk=4).run(ref)
+    sess = ServeSession(bundle, params, state, n_slots=4, max_seq_len=64,
+                        k=8, prefill_chunk=4, paged=True, page_size=8,
+                        mesh=mesh, param_mode=param_mode)
+    sess.run(reqs)
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in ref]
+    assert sess.stats()["paged"]["prefix_hits"] == 3
+    assert sess._decode_fn._cache_size() == 1
+    _assert_leak_free(sess)
+
+
+@needs8
+def test_paged_preemption_on_mesh(tiny_tf):
+    bundle, params, state = tiny_tf
+    mesh = make_test_mesh("4x2")
+    rng = np.random.RandomState(9)
+    reqs = [Request(prompt=rng.randint(1, 100, 8).astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=12,
+                                            priority=i % 2))
+            for i in range(3)]
+    ref = []
+    for r in _clone(reqs):
+        ServeSession(bundle, params, state, n_slots=1, max_seq_len=32, k=8,
+                     prefill_chunk=4).run([r])
+        ref.append(r.out_tokens)
+    sess = ServeSession(bundle, params, state, n_slots=3, max_seq_len=32,
+                        k=8, prefill_chunk=4, paged=True, page_size=8,
+                        page_arena=6, prefix_sharing=False, mesh=mesh)
+    sess.run(reqs)
+    assert all(r.status is RequestStatus.COMPLETED for r in reqs)
+    assert [r.out_tokens for r in reqs] == ref
+    _assert_leak_free(sess)
