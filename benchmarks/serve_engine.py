@@ -42,6 +42,14 @@ Metrics written to ``BENCH_serve_engine.json``:
                          (the FSDP memory ceiling, ~ndata× lower on the
                          sharded leaves), tokens/s, and a token-identity
                          assert between the modes.
+* ``skewed_traffic``   — Zipf-skewed class traffic against a deliberately
+                         undersized ``capacity_factor`` (sustained grouped
+                         -path overflow), one adaptive repack + hot-swap
+                         mid-run (``ServeSession.adapt_now()``): windowed
+                         overflow rate and p95 token latency BEFORE vs
+                         AFTER the swap (overflow strictly lower after,
+                         by assertion — the repack prices capacity to the
+                         observed hottest expert).
 """
 from __future__ import annotations
 
@@ -499,6 +507,116 @@ def run_overload(fast: bool) -> dict:
     return out
 
 
+def run_skewed_traffic(fast: bool) -> dict:
+    """Traffic-adaptive serving under Zipf-skewed class traffic. The
+    config undersizes ``capacity_factor`` (0.25 → ONE grouped-dispatch
+    slot per expert at B=n_slots), so the skewed workload pays the
+    overflow fixup on most rows of every decode step. Mid-run, one
+    ``adapt_now()`` repacks the table to the observed window (selective
+    mitosis of persistently-overflowing experts + a capacity factor
+    sized to the hottest expert's share) and hot-swaps it under the
+    residents. Headline columns: windowed ``overflow_rate`` and p95
+    token latency before vs after — overflow MUST be strictly lower
+    after; the breaker is disabled (threshold > 1) so the repair is
+    attributable to the repack alone."""
+    from repro.serve import AdaptPolicy
+
+    if fast:
+        n_slots, prompt_len, max_new, vocab = 8, 8, 10, 512
+        adapt_after = 6
+    else:
+        n_slots, prompt_len, max_new, vocab = 8, 16, 32, 2048
+        adapt_after = 12
+    cfg = reduce_config(get_config("qwen2-1.5b"), vocab=vocab)
+    cfg = cfg.replace(ds=cfg.ds.replace(capacity_factor=0.25))
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+
+    lat, last, paused = [], {}, [False]
+
+    def on_token(req, token):
+        now = time.perf_counter()
+        if not paused[0]:
+            lat.append(now - last.get(id(req), now))
+        last[id(req)] = now
+
+    session = ServeSession(
+        bundle, params, ds_state, n_slots=n_slots,
+        max_seq_len=prompt_len + max_new, kernel="grouped",
+        overflow_threshold=1.1, stream_cb=on_token,
+        adapt_policy=AdaptPolicy(interval=10_000, min_window_steps=2),
+    )
+    # Zipf-skewed token classes (clipped to the vocab): the hot classes
+    # concentrate dispatch on few experts, the cold tail still appears
+    rng = np.random.RandomState(0)
+    reqs = [Request(prompt=(np.minimum(rng.zipf(1.2, prompt_len), vocab) - 1)
+                    .astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=max_new))
+            for _ in range(n_slots)]
+    # warmup compile off the clock
+    paused[0] = True
+    session.run([Request(prompt=np.zeros(prompt_len, np.int32),
+                         sampling=SamplingParams(max_new_tokens=2))])
+    session.requests.clear()
+    paused[0] = False
+
+    for r in reqs:
+        session.submit(r)
+    t0 = time.perf_counter()
+    for _ in range(adapt_after):
+        session.step()
+    before_overflow = session.stats()["overflow_rate_window"]
+    before_p95 = float(np.percentile(np.asarray(lat) * 1e3, 95))
+    swapped = session.adapt_now()
+    # the swap re-jits decode exactly once; keep that compile out of the
+    # post-swap latency column (it is a per-swap constant, not a
+    # per-token cost — the repack cost model in ROADMAP.md)
+    paused[0] = True
+    session.step()
+    paused[0] = False
+    lat.clear()
+    while session.step():
+        pass
+    wall = time.perf_counter() - t0
+    s = session.stats()
+    after_overflow = s["overflow_rate_window"]
+    after_p95 = (float(np.percentile(np.asarray(lat) * 1e3, 95))
+                 if lat else 0.0)
+
+    assert swapped and s["n_swaps"] == 1, "adaptation never swapped"
+    assert s["decode_builds"] == 2, "swap must rebuild decode exactly once"
+    assert before_overflow > 0.0, \
+        "skewed trace failed to overflow: retune capacity_factor"
+    assert after_overflow < before_overflow, (
+        f"adaptive repack did not lower overflow "
+        f"({before_overflow:.3f} -> {after_overflow:.3f})"
+    )
+    assert all(r.done for r in reqs)
+    n_tok = sum(len(r.out_tokens) for r in reqs)
+    out = {
+        "n_slots": n_slots,
+        "capacity_factor_base": 0.25,
+        "capacity_factor_after": s["effective_capacity_factor"],
+        "tokens": n_tok,
+        "wall_s": wall,
+        "tokens_per_s": n_tok / wall,
+        "overflow_rate_before": before_overflow,
+        "overflow_rate_after": after_overflow,
+        "p95_ms_before": before_p95,
+        "p95_ms_after": after_p95,
+        "n_swaps": s["n_swaps"],
+        "table_version": s["table_version"],
+        "decode_builds": s["decode_builds"],
+        "experts_after": len(s["expert_dispatched_window"] or []),
+    }
+    print(f"# skewed traffic: overflow {before_overflow:.3f} -> "
+          f"{after_overflow:.3f} after 1 adaptive repack "
+          f"(capacity_factor 0.25 -> {out['capacity_factor_after']:.2f}, "
+          f"K -> {out['experts_after']}), p95 {before_p95:.1f}ms -> "
+          f"{after_p95:.1f}ms")
+    return out
+
+
 def main():
     if FAST:
         n_requests, n_slots, rate = 10, 2, 50.0
@@ -580,6 +698,7 @@ def main():
         "ssm_hybrid_chunked": run_ssm_hybrid_chunked(FAST),
         "sharded": run_sharded(FAST),
         "param_modes": run_param_modes(FAST),
+        "skewed_traffic": run_skewed_traffic(FAST),
     }
     assert all(r.done for r in session.requests)
     assert results["admits"] == n_requests

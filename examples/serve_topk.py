@@ -10,23 +10,24 @@ import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.models import build
-from repro.train import Request, ServeEngine
+from repro.train import Request, SamplingParams, ServeSession
 
 cfg = reduce_config(get_config("qwen2-1.5b"), vocab=2048)
 bundle = build(cfg)
 params, ds_state = bundle.init(jax.random.PRNGKey(0))
 
-engine = ServeEngine(bundle, params, ds_state)
+session = ServeSession(bundle, params, ds_state, n_slots=8, max_seq_len=32)
 requests = [
-    Request(prompt=np.arange(10, dtype=np.int32) + i * 3, max_new_tokens=12)
+    Request(prompt=np.arange(10, dtype=np.int32) + i * 3,
+            sampling=SamplingParams(max_new_tokens=12))
     for i in range(8)
 ]
 t0 = time.time()
-out = engine.generate(requests)
+out = session.run(requests)
 dt = time.time() - t0
 for i, r in enumerate(out[:4]):
     print(f"request {i}: prompt={r.prompt[:6]}... -> tokens={r.out_tokens}")
 n_tok = sum(len(r.out_tokens) for r in out)
 print(f"\n{n_tok} tokens in {dt:.2f}s "
-      f"({n_tok/dt:.1f} tok/s on CPU; DS head V_pad={engine.table.v_pad}, "
+      f"({n_tok/dt:.1f} tok/s on CPU; DS head V_pad={session.table.v_pad}, "
       f"full vocab={cfg.vocab_size})")

@@ -409,6 +409,22 @@ class ServeTable(NamedTuple):
         return shard_table(self, mesh)
 
 
+def as_serve_table(table):
+    """Unwrap a versioned table resource to its CURRENT table.
+
+    Duck-typed so ``core`` need not import ``repro.serve``: anything
+    exposing a ``.table`` attribute that is a :class:`ServeTable`
+    (``repro.serve.table_manager.TableResource``) unwraps to it; a raw
+    ``ServeTable`` (or a non-DS head state) passes through unchanged.
+    Serving entry points call this, so a swappable resource can stand in
+    anywhere a packed table is accepted. The unwrap runs at trace time —
+    a jitted wrapper rebuilt after a swap (``ServeSession.swap_table``)
+    prices the current ``(K, V_pad)``, never a stale version.
+    """
+    inner = getattr(table, "table", None)
+    return inner if isinstance(inner, ServeTable) else table
+
+
 def _round_up(x: int, m: int = 128) -> int:
     return ((x + m - 1) // m) * m
 
@@ -518,6 +534,7 @@ def serve_topk(
     from repro.distributed.hints import constrain_batch
     from repro.kernels.registry import get_spec, resolve_kernel
 
+    table = as_serve_table(table)
     kernel = resolve_kernel(
         kernel, serve_kernel_context(table, h, k, capacity_factor)
     )
@@ -805,6 +822,7 @@ def serve_topk_sharded(
 
     from repro.kernels.registry import get_spec, resolve_kernel
 
+    table = as_serve_table(table)
     if "model" not in mesh.axis_names:
         return serve_topk(gate_w, table, h, k, kernel=kernel,
                           capacity_factor=capacity_factor,
@@ -876,6 +894,7 @@ def serve_full_probs(
 ) -> jax.Array:
     """Full sparse categorical distribution (probability mass only on the
     chosen expert's surviving classes). For evaluation/debug. (B, N)."""
+    table = as_serve_table(table)
     expert_idx, g, _ = top1_gate(gate_w, h)
     w_sel = table.weights[expert_idx]
     ids_sel = table.ids[expert_idx]

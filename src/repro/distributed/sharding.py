@@ -237,7 +237,10 @@ def serve_table_ep_shardings(mesh: Mesh, table) -> Any:
     stores K/ep experts' packed rows — the serve analogue of the MoE EP
     rule above); replicated over the batch axes, which shard tokens at
     call time. K must already divide the model axis
-    (``core.dssoftmax.shard_table`` pads it)."""
+    (``core.dssoftmax.shard_table`` pads it). The specs are
+    shape-agnostic over K and V_pad, so the same rule re-places every
+    hot-swapped table ``ServeSession.swap_table`` pushes through
+    ``shard_table`` — swaps never need new sharding plumbing."""
     return type(table)(
         ids=NamedSharding(mesh, P("model", None)),
         weights=NamedSharding(mesh, P("model", None, None)),
@@ -321,7 +324,13 @@ def serve_param_shardings(mesh: Mesh, params: Any) -> Any:
     """NamedSharding tree for FSDP-stored serving weights (works on
     ShapeDtypeStructs): per-device resident bytes drop ~``ndata``× on the
     sharded leaves; :class:`ServeParamGather` reconstructs full layers
-    just in time inside the decode/prefill step."""
+    just in time inside the decode/prefill step.
+
+    The tree is PATH-keyed, not shape-keyed: the ``head/gate`` rule
+    shards the (K, d) gate as ``(None, 'data')`` regardless of K, so a
+    gate with a different expert count (``ServeSession.swap_table``
+    after mitosis/pruning) is placed with the spec built at init — no
+    re-derivation on swap."""
 
     def leaf(path, x):
         return NamedSharding(mesh, serve_param_pspec(path, tuple(x.shape), mesh))

@@ -35,7 +35,7 @@ When each path wins:
   once B ≫ K (measured in ``benchmarks/serve_topk.py``), pays a
   (K,C,V_pad) logit spill the fused kernel avoids.
 * ``pallas`` — TPU, B ≲ K decode edge case.
-* ``pallas_grouped`` — TPU production serving default (ServeEngine).
+* ``pallas_grouped`` — TPU production serving default (ServeSession).
 """
 from __future__ import annotations
 

@@ -81,6 +81,14 @@ class KernelContext:
     ``wbytes``/``hbytes`` are the per-element sizes of the packed expert
     weights and the hidden states (bf16 serving => 2/2, fp32 oracle =>
     4/4); ``backend`` is ``jax.default_backend()`` at trace time.
+
+    Contexts are built at trace time from the CURRENT serve table
+    (``core.dssoftmax.serve_kernel_context`` reads ``table.ids.shape``),
+    so they always price the table actually being served: when
+    ``ServeSession.swap_table`` installs a table with a different
+    ``(K, v_pad)``, its rebuild-once re-trace reprices every policy
+    decision automatically — no construction-time constants survive a
+    swap.
     """
 
     B: int                    # tokens in this serve_topk call

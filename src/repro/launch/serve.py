@@ -21,7 +21,13 @@ import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.models import build
-from repro.train import Request, RequestStatus, SamplingParams, ServeSession
+from repro.train import (
+    AdaptPolicy,
+    Request,
+    RequestStatus,
+    SamplingParams,
+    ServeSession,
+)
 
 
 def main():
@@ -73,6 +79,26 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens to "
                          "every request so prefix sharing has work to do")
+    ap.add_argument("--adapt", action="store_true",
+                    help="traffic-adaptive serving: when the windowed "
+                         "overflow rate exceeds --adapt-overflow-threshold, "
+                         "repack the DS table to the observed traffic "
+                         "(optional re-prune + selective mitosis of "
+                         "overflowing experts) and hot-swap it between "
+                         "steps — residents keep decoding, tokens "
+                         "identical from the swap point")
+    ap.add_argument("--adapt-interval", type=int, default=32,
+                    help="decode steps between adaptation checks")
+    ap.add_argument("--adapt-overflow-threshold", type=float, default=0.05,
+                    help="windowed overflow rate that triggers a repack")
+    ap.add_argument("--adapt-prune-gamma", type=float, default=None,
+                    help="group-lasso gamma for re-pruning during repack "
+                         "(default: no re-pruning)")
+    ap.add_argument("--adapt-max-swaps", type=int, default=4,
+                    help="cap on hot-swaps per session")
+    ap.add_argument("--stats-window", type=int, default=128,
+                    help="step-stamped per-expert stats window length "
+                         "(what the adaptation loop reads)")
     args = ap.parse_args()
     if args.param_mode == "fsdp" and not args.mesh:
         ap.error("--param-mode fsdp requires --mesh")
@@ -105,6 +131,13 @@ def main():
         page_arena=args.page_arena,
         state_arena=args.state_arena,
         prefix_sharing=not args.no_prefix_sharing,
+        stats_window=args.stats_window,
+        adapt_policy=(AdaptPolicy(
+            interval=args.adapt_interval,
+            overflow_threshold=args.adapt_overflow_threshold,
+            prune_gamma=args.adapt_prune_gamma,
+            max_swaps=args.adapt_max_swaps,
+        ) if args.adapt else None),
     )
     rng = np.random.RandomState(0)
     sysp = rng.randint(0, cfg.vocab_size,
@@ -141,6 +174,14 @@ def main():
               f"tokens_reused={pg['prefix_tokens_reused']}, "
               f"prefill_chunks={pg['prefill_chunks']} "
               f"(saved {pg['prefill_chunks_saved']})")
+    if args.adapt:
+        print(f"adaptive table: version={stats['table_version']} "
+              f"swaps={stats['n_swaps']} "
+              f"decode_builds={stats['decode_builds']}, "
+              f"window overflow={stats['overflow_rate_window']:.3f} "
+              f"over {stats['window_steps']} steps, "
+              f"effective capacity_factor="
+              f"{stats['effective_capacity_factor']}")
     if stats["n_failed"]:
         for r in out:
             if r.status is RequestStatus.FAILED:

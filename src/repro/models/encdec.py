@@ -194,7 +194,9 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: EncDecCache, token
     ``capacity_factor``/``with_stats`` thread to the head (circuit-breaker
     override + per-expert overflow telemetry). ``gather`` serves from
     FSDP-stored weights (per-layer just-in-time all-gather; embed/pos
-    tables stay sharded, only rows cross the wire)."""
+    tables stay sharded, only rows cross the wire). ``serve_table``
+    accepts a raw packed ServeTable or a versioned ``TableResource``
+    (unwrapped in ``heads.head_topk``)."""
     pos = jnp.asarray(pos)
     if gather is not None:
         pe = gather.rows("pos_embed", params["pos_embed"],

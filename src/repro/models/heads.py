@@ -135,7 +135,16 @@ def head_topk(
     rare); ``with_stats=True`` appends the O(K) per-expert
     ``{'dispatched', 'overflow'}`` telemetry dict (zeros, shape (1,), for
     non-DS heads — a full softmax has no capacity to overflow).
+
+    ``serve_table`` may be a raw packed
+    :class:`~repro.core.dssoftmax.ServeTable` or a versioned
+    ``repro.serve.table_manager.TableResource`` — the single unwrap here
+    (``ds.as_serve_table``) resolves the resource's CURRENT version at
+    trace time, so every family's ``decode_step``/``prefill_chunk``
+    accepts a swappable resource unchanged and a wrapper rebuilt after
+    ``ServeSession.swap_table`` prices the new ``(K, V_pad)``.
     """
+    serve_table = ds.as_serve_table(serve_table)
     if gather is not None:
         if cfg.head == "ds":
             # only the tiny (K, d) gate is consumed — the expert rows live

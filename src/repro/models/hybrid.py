@@ -304,7 +304,10 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token
     (circuit-breaker override + per-expert overflow telemetry). ``gather``
     serves from FSDP-stored weights (per-layer just-in-time all-gather;
     the shared attention block gathers once). ``pages``/``state_pages``
-    switch to the paged cache layout (see :func:`prefill_chunk`)."""
+    switch to the paged cache layout (see :func:`prefill_chunk`).
+    ``serve_table`` accepts a raw packed ServeTable or a versioned
+    ``TableResource`` (unwrapped in ``heads.head_topk``); the ssm/conv
+    recurrence never reads it, so a hot-swap preserves resident state."""
     if gather is not None:
         x = gather.rows("embed/table", params["embed"]["table"], token)[:, None, :]
         sa_full = gather.full("shared_attn", params["shared_attn"]) \

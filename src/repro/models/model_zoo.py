@@ -56,6 +56,12 @@ def build(cfg: ModelConfig) -> ModelBundle:
     # different kernels inside one engine. ``gather`` (a
     # ``repro.distributed.sharding.ServeParamGather``) serves from
     # FSDP-stored weights with per-layer just-in-time all-gathers.
+    # The ``t`` threaded through every serving entry point is the serve
+    # table ARGUMENT (never a closure constant): a raw packed ServeTable
+    # or a versioned ``repro.serve.table_manager.TableResource`` —
+    # ``heads.head_topk`` unwraps the current version at trace time, so
+    # a hot-swapped table flows through decode/prefill/prefill_chunk
+    # without any bundle rebuild.
     chunk = None
     if fam in ("dense", "moe", "vlm"):
         chunk = lambda p, t, cache, tokens, pos0, n_valid, k=8, kernel=None, \

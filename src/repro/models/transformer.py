@@ -253,7 +253,11 @@ def decode_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache, token
     (per-layer just-in-time all-gather inside the scan body). ``pages``
     ((B, n_pg) int32) switches the cache to the paged-arena layout (see
     ``layers.attention_decode``); ``state_pages`` is ignored (KV-only
-    family)."""
+    family). ``serve_table`` accepts a raw packed ServeTable or a
+    versioned ``TableResource`` (unwrapped once in
+    ``heads.head_topk``) — the backbone never reads it, which is why a
+    hot-swap leaves resident requests' tokens identical from the swap
+    point."""
     del state_pages
     if gather is not None:
         x = gather.rows("embed/table", params["embed"]["table"], token)[:, None, :]

@@ -7,6 +7,15 @@ from repro.serve.paged_cache import (
     WritePlan,
     prefix_hash,
 )
+from repro.serve.table_manager import (
+    AdaptPolicy,
+    RepackResult,
+    TableResource,
+    TrafficProfile,
+    clone_selected,
+    repack_for_traffic,
+    suggested_capacity_factor,
+)
 
 __all__ = [
     "N_RESERVED",
@@ -16,4 +25,11 @@ __all__ = [
     "PrefixEntry",
     "WritePlan",
     "prefix_hash",
+    "AdaptPolicy",
+    "RepackResult",
+    "TableResource",
+    "TrafficProfile",
+    "clone_selected",
+    "repack_for_traffic",
+    "suggested_capacity_factor",
 ]

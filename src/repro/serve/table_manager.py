@@ -1,0 +1,318 @@
+"""Versioned serve-table resource + traffic-adaptive repacking.
+
+The packed :class:`~repro.core.dssoftmax.ServeTable` used to be a frozen
+artifact captured at session construction. This module makes table
+ownership a **versioned, swappable resource** and builds the paper's
+"adaptive" serving loop on top of it:
+
+* :class:`TableResource` — double-buffered holder of the current
+  ``(ServeTable, gate, version)`` triple. ``swap(new_table)`` places the
+  incoming table on the session mesh first (reusing
+  :func:`~repro.core.dssoftmax.shard_table`'s dummy-expert padding
+  rules), only then retires the old table into the back buffer and bumps
+  the version — a reader holding the old version keeps a fully-resident
+  table until the next swap (version fencing).
+* :class:`TrafficProfile` — a windowed O(K) host-side view of the
+  per-expert dispatch/overflow counters the decode step already returns
+  (``ServeSession.traffic_profile()`` builds one from its step-stamped
+  stats window).
+* :func:`repack_for_traffic` — the adaptation policy: optional
+  group-lasso re-pruning (``kernels.lasso_prune`` + ``keep_one_copy``),
+  selective mitosis of persistently-overflowing experts
+  (:func:`clone_selected`, the serving-side variant of
+  ``core.mitosis.clone_experts``), a fresh ``pack_experts`` whose pad is
+  fitted to the post-prune expert sizes (cold experts shrink the table;
+  hot experts keep every surviving row), and a conservative
+  ``capacity_factor`` suggestion sized to the observed hot-expert load.
+* :class:`AdaptPolicy` — the knobs ``ServeSession(adapt_policy=...)``
+  uses to run this loop online, swapping strictly BETWEEN decode steps.
+
+Repack cost model (all host-side, off the decode path): one
+``pack_experts`` is O(K·V_pad·d) bytes of host copying plus a device
+upload; the optional lasso re-prune is one fused row-norm kernel over
+the (K, N, d) training weights; mitosis adds O(|hot|·N·d). The swap
+itself re-jits the session's decode/prefill closures exactly once — the
+table is a jit *argument*, but a changed (K, V_pad) would otherwise grow
+every compile cache and leave stale traces pricing the old table.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dssoftmax as ds
+from repro.core import pruning
+from repro.utils import get_logger
+
+log = get_logger("table_manager")
+
+
+class TableResource:
+    """Double-buffered, versioned owner of the serving table.
+
+    Holds the CURRENT ``(table, gate, version)`` and the one retired
+    predecessor (``prev``/``prev_version``). For DS heads ``table`` is a
+    packed :class:`~repro.core.dssoftmax.ServeTable`; non-DS heads store
+    their opaque head state here unchanged (swap still versions it).
+
+    Placement happens on the way IN: a ``ServeTable`` swapped into a
+    resource constructed with ``mesh=`` is expert-parallel sharded via
+    :func:`~repro.core.dssoftmax.shard_table` (K padded to a multiple of
+    the ``model`` axis with all-padding dummy experts) before it becomes
+    visible, so readers only ever observe fully-placed tables.
+    """
+
+    def __init__(self, table, gate: Optional[jax.Array] = None, mesh=None):
+        self.mesh = mesh
+        self.version = 0
+        self.prev = None
+        self.prev_version: Optional[int] = None
+        self.gate = gate
+        self.table = self._place(table)
+
+    def _place(self, table):
+        if self.mesh is not None and isinstance(table, ds.ServeTable):
+            return ds.shard_table(table, self.mesh)
+        return table
+
+    def swap(self, new_table, gate: Optional[jax.Array] = None) -> int:
+        """Install ``new_table`` (and optionally a matching gate) as the
+        current version. The incoming table is mesh-placed FIRST; only
+        then is the old table retired to the back buffer — there is
+        never a moment with no resident table. Returns the new version.
+        """
+        placed = self._place(new_table)
+        self.prev, self.prev_version = self.table, self.version
+        self.table = placed
+        if gate is not None:
+            self.gate = gate
+        self.version += 1
+        return self.version
+
+    def drop_retired(self) -> None:
+        """Release the back buffer (frees the old table's device bytes)."""
+        self.prev = None
+        self.prev_version = None
+
+
+@dataclass(frozen=True)
+class TrafficProfile:
+    """Windowed per-expert traffic: the O(K) accumulators
+    :func:`repack_for_traffic` consumes.
+
+    ``dispatched``/``overflow`` are (K,) int64 sums over the stats
+    window; ``start_step``/``end_step`` are the monotonic session-step
+    stamps bounding it (``steps`` decode steps total). Shapes match the
+    REAL expert count — ``ServeSession.traffic_profile()`` slices off
+    ``shard_table``'s dummy-expert padding rows before building one.
+    """
+
+    dispatched: np.ndarray
+    overflow: np.ndarray
+    steps: int
+    start_step: int
+    end_step: int
+
+    @property
+    def n_experts(self) -> int:
+        return int(self.dispatched.shape[0])
+
+    @property
+    def total_dispatched(self) -> int:
+        return int(self.dispatched.sum())
+
+    @property
+    def overflow_rate(self) -> float:
+        """Window-wide overflowed/dispatched token fraction."""
+        return float(self.overflow.sum()) / max(1.0, float(self.dispatched.sum()))
+
+    @property
+    def load_share(self) -> np.ndarray:
+        """(K,) fraction of window traffic each expert received."""
+        return self.dispatched / max(1, self.total_dispatched)
+
+    def per_expert_overflow_rate(self) -> np.ndarray:
+        """(K,) overflowed fraction of each expert's OWN traffic."""
+        return self.overflow / np.maximum(self.dispatched, 1)
+
+    def hot_experts(self, overflow_threshold: float,
+                    min_dispatch: int = 1) -> np.ndarray:
+        """Indices of persistently-overflowing experts: overflow rate
+        above ``overflow_threshold`` on at least ``min_dispatch`` tokens."""
+        rates = self.per_expert_overflow_rate()
+        return np.nonzero((rates > overflow_threshold)
+                          & (self.dispatched >= min_dispatch))[0]
+
+
+def clone_selected(key: jax.Array, head_params: dict, state: ds.DSState,
+                   experts: Sequence[int], noise: float = 1e-2):
+    """Serving-side selective mitosis: clone only ``experts`` (K → K+m).
+
+    The serving variant of :func:`~repro.core.mitosis.clone_experts`
+    (which doubles EVERY expert for the training schedule): each
+    selected parent keeps ``gate + eps`` while its offspring gets
+    ``gate - eps`` appended at the END (indices K..K+m-1), and the
+    offspring inherits the parent's expert rows and sparsity mask
+    verbatim. Appending — never reordering — means every existing expert
+    index (and its packed-table row) keeps its meaning across the swap.
+    """
+    sel = np.asarray(experts, np.int32).reshape(-1)
+    gate = head_params["gate"]            # (K, d)
+    w = head_params["experts"]            # (K, N, d)
+    if sel.size == 0:
+        return dict(head_params), state
+    if sel.min() < 0 or sel.max() >= gate.shape[0]:
+        raise ValueError(
+            f"clone_selected expert ids {sel.tolist()} out of range "
+            f"[0, {gate.shape[0]})"
+        )
+    eps = jax.random.normal(key, (sel.size, gate.shape[1]), gate.dtype) \
+        * noise * jnp.std(gate.astype(jnp.float32)).astype(gate.dtype)
+    parent = gate[sel]
+    new_gate = jnp.concatenate([gate.at[sel].set(parent + eps), parent - eps])
+    new_w = jnp.concatenate([w, w[sel]])
+    new_mask = jnp.concatenate([state.mask, state.mask[sel]])
+    return (dict(head_params, gate=new_gate, experts=new_w),
+            ds.DSState(mask=new_mask))
+
+
+def suggested_capacity_factor(profile: TrafficProfile, n_experts_new: int,
+                              headroom: float = 1.5,
+                              base: Optional[float] = None) -> float:
+    """Capacity factor sized so the observed hottest expert fits its
+    grouped-dispatch buffer with ``headroom`` to spare.
+
+    The grouped serve paths allocate ``capacity = round(B/K·cf)`` slots
+    per expert, so covering a ``max_share`` traffic fraction needs
+    ``cf >= max_share·K``. The bound deliberately uses the PRE-mitosis
+    ``max_share`` (mitosis halves the hot expert's expected load, but a
+    conservative cap means the swap can only reduce overflow) and never
+    shrinks below ``base`` (the session's current effective factor) —
+    adaptation degrades capacity pressure monotonically.
+    """
+    max_share = float(profile.load_share.max()) if profile.total_dispatched \
+        else 0.0
+    cf = headroom * max_share * n_experts_new
+    if base is not None:
+        cf = max(cf, float(base))
+    return float(cf)
+
+
+@dataclass(frozen=True)
+class RepackResult:
+    """Everything :meth:`ServeSession.swap_table` needs, in one bundle:
+    the evolved head params/state (inputs to the NEXT repack), the
+    freshly packed table, and the capacity suggestion."""
+
+    head_params: dict
+    state: ds.DSState
+    table: ds.ServeTable
+    capacity_factor: float
+    cloned: tuple
+    rows_pruned: int
+
+
+def repack_for_traffic(
+    head_params: dict,
+    state: ds.DSState,
+    profile: TrafficProfile,
+    *,
+    key: Optional[jax.Array] = None,
+    prune_gamma: Optional[float] = None,
+    mitosis_overflow_threshold: float = 0.25,
+    min_overflow_dispatch: int = 1,
+    headroom: float = 1.5,
+    base_capacity_factor: Optional[float] = None,
+    noise: float = 1e-2,
+    pad: Optional[int] = None,
+) -> RepackResult:
+    """Fit the serve table to the observed traffic.
+
+    Three moves, each optional, in order:
+
+    1. **Re-prune** (``prune_gamma``): one fused group-lasso pass
+       (``kernels.lasso_prune``) drops expert rows whose norm fell below
+       ``gamma``; :func:`~repro.core.pruning.keep_one_copy` preserves
+       the paper's ≥1-copy-per-class guarantee. Cold experts shrink, so
+       the repacked ``V_pad`` (and every serve matmul) shrinks with them.
+    2. **Mitosis** (``key`` + overflowing experts): experts whose
+       windowed overflow rate exceeds ``mitosis_overflow_threshold`` are
+       cloned via :func:`clone_selected` — the gate split steers roughly
+       half the hot expert's traffic to its offspring.
+    3. **Pack + capacity**: ``pack_experts`` with the pad fitted to the
+       post-prune sizes (``pad=None`` → auto), and
+       :func:`suggested_capacity_factor` sized to the hottest observed
+       expert so the grouped paths stop paying the overflow fixup.
+
+    Pure with respect to its inputs (new pytrees throughout); the caller
+    decides when to :meth:`~TableResource.swap` the result in.
+    """
+    if profile.n_experts != head_params["gate"].shape[0]:
+        raise ValueError(
+            f"profile covers {profile.n_experts} experts but the gate has "
+            f"{head_params['gate'].shape[0]} — slice off dummy-expert padding"
+        )
+    rows_pruned = 0
+    if prune_gamma is not None:
+        from repro.kernels.lasso_prune import lasso_prune
+
+        norms, candidate = lasso_prune(
+            head_params["experts"], state.mask, gamma=prune_gamma
+        )
+        new_mask = pruning.keep_one_copy(candidate, norms, state.mask)
+        rows_pruned = int(np.asarray(state.mask).sum()
+                          - np.asarray(new_mask).sum())
+        state = ds.DSState(mask=new_mask)
+
+    hot = profile.hot_experts(mitosis_overflow_threshold,
+                              min_dispatch=min_overflow_dispatch)
+    if key is None:
+        hot = hot[:0]  # no key -> mitosis disabled, report nothing cloned
+    if hot.size:
+        head_params, state = clone_selected(key, head_params, state, hot,
+                                            noise=noise)
+
+    table = ds.pack_experts(head_params, state, pad=pad)
+    cf = suggested_capacity_factor(
+        profile, head_params["gate"].shape[0],
+        headroom=headroom, base=base_capacity_factor,
+    )
+    log.info(
+        "repack_for_traffic: K=%d (cloned %s), V_pad=%d, %d rows pruned, "
+        "capacity_factor -> %.2f (window overflow %.3f over %d steps)",
+        head_params["gate"].shape[0], hot.tolist(), table.v_pad, rows_pruned,
+        cf, profile.overflow_rate, profile.steps,
+    )
+    return RepackResult(
+        head_params=head_params, state=state, table=table,
+        capacity_factor=cf, cloned=tuple(int(e) for e in hot),
+        rows_pruned=rows_pruned,
+    )
+
+
+@dataclass(frozen=True)
+class AdaptPolicy:
+    """Online adaptation knobs for ``ServeSession(adapt_policy=...)``.
+
+    Every ``interval`` decode steps the session inspects its windowed
+    :class:`TrafficProfile` (at least ``min_window_steps`` steps old);
+    if the window overflow rate exceeds ``overflow_threshold`` it runs
+    :func:`repack_for_traffic` and hot-swaps the result — strictly
+    between steps, at most ``max_swaps`` times per session. Swaps evolve
+    the session's tracked ``(head_params, ds_state)`` pair, so repeated
+    adaptations compound (a cloned expert can later be pruned).
+    """
+
+    interval: int = 32
+    overflow_threshold: float = 0.05
+    mitosis_overflow_threshold: float = 0.25
+    prune_gamma: Optional[float] = None
+    headroom: float = 1.5
+    max_swaps: int = 4
+    min_window_steps: int = 8
+    noise: float = 1e-2
+    seed: int = 0

@@ -9,6 +9,7 @@ from repro.testing.faults import (
     poison_token_embedding,
     release_hoarded_pages,
     skew_gate,
+    swap_storm,
 )
 
 __all__ = [
@@ -22,4 +23,5 @@ __all__ = [
     "poison_token_embedding",
     "release_hoarded_pages",
     "skew_gate",
+    "swap_storm",
 ]

@@ -23,6 +23,11 @@ lifecycle's typed outcome for it:
   is scrubbed by whichever failing sharer drops the last reference;
 * :func:`oversized_prompt` — a prompt that cannot fit the cache:
   rejected at ``submit()`` before any compute;
+* :func:`swap_storm` — repeated table hot-swaps under load: every few
+  steps an IDENTITY repack (same head, same mask → value-identical
+  table) is swapped in mid-drain, so residents must stay bit-identical
+  to a storm-free run while each swap pays the full protocol (mesh
+  re-shard, version bump, exactly one decode/prefill rebuild);
 * :class:`RaisingStreamCB` / :class:`CancelAfter` — callback faults:
   a ``stream_cb`` that raises on a chosen request, and one that cancels
   a request from inside the callback (the reentrancy path).
@@ -158,6 +163,34 @@ def skew_gate(params):
     head = dict(params["head"])
     head["gate"] = jnp.zeros_like(head["gate"])
     return dict(params, head=head)
+
+
+def swap_storm(session, head_params, ds_state, *,
+               count: int = 4, every: int = 1) -> int:
+    """Drain ``session`` while hot-swapping an identity-repacked table
+    every ``every`` decode steps (``count`` swaps total).
+
+    Each swap re-runs ``pack_experts`` on the UNCHANGED ``(head_params,
+    ds_state)`` pair, so the incoming table (and gate) is value-identical
+    to the resident one: survivors' tokens must be bit-identical to a
+    storm-free run, while every swap still exercises the full protocol —
+    mesh re-shard, version fencing, telemetry reset, and exactly one
+    decode/prefill rebuild (``stats()['decode_builds'] == 1 + n_swaps``,
+    each rebuilt jit compiling exactly once). Swaps happen strictly
+    between steps, like the real adaptation loop. Returns the number of
+    swaps performed.
+    """
+    from repro.core import dssoftmax as ds
+
+    done = 0
+    stepped = session.scheduler.has_work()
+    while stepped:
+        stepped = session.step()
+        if done < count and stepped and session.n_steps % every == 0:
+            table = ds.pack_experts(head_params, ds_state)
+            session.swap_table(table, new_gate=head_params["gate"])
+            done += 1
+    return done
 
 
 def oversized_prompt(vocab: int, max_seq_len: int,

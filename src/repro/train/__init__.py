@@ -5,9 +5,9 @@ from repro.train.serve import (
     RequestStatus,
     SamplingParams,
     Scheduler,
-    ServeEngine,
     ServeSession,
 )
+from repro.serve.table_manager import AdaptPolicy
 
 __all__ = [
     "TrainState",
@@ -17,6 +17,6 @@ __all__ = [
     "RequestStatus",
     "SamplingParams",
     "Scheduler",
-    "ServeEngine",
     "ServeSession",
+    "AdaptPolicy",
 ]

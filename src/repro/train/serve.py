@@ -83,15 +83,25 @@ bit-identical to the contiguous cache (the gathered page view feeds the
 exact same attention math), and the decode step still compiles exactly
 once — page tables are data, not shapes.
 
-``ServeEngine`` remains as a thin deprecated shim over ``ServeSession``
-for the existing examples/benchmarks (it emits a ``DeprecationWarning``
-once per process).
+The packed DS table is no longer frozen at construction: the session
+owns a versioned :class:`~repro.serve.table_manager.TableResource` and
+``swap_table(new_table)`` hot-swaps a re-packed / re-pruned / mitosed
+table strictly BETWEEN decode steps — the incoming table is re-sharded
+onto the session mesh first, the jitted decode/prefill fns are rebuilt
+exactly ONCE per swap (the table is a jit *argument*, but a changed
+``(K, V_pad)`` would otherwise grow every compile cache), and resident
+requests' tokens are bit-identical from the swap point to a fresh
+session on the new table. ``adapt_policy=`` closes the loop online: the
+step-stamped per-expert stats window becomes a
+:class:`~repro.serve.table_manager.TrafficProfile`, and
+``repack_for_traffic`` re-packs (optionally re-prunes and selectively
+clones persistently-overflowing experts) when the windowed overflow
+rate says the table no longer fits the traffic.
 """
 from __future__ import annotations
 
 import collections
 import enum
-import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Deque, List, Optional
 
@@ -112,6 +122,12 @@ from repro.serve.paged_cache import (
     N_RESERVED,
     PagedCacheManager,
     prefix_hash,
+)
+from repro.serve.table_manager import (
+    AdaptPolicy,
+    TableResource,
+    TrafficProfile,
+    repack_for_traffic,
 )
 from repro.utils import get_logger
 
@@ -377,6 +393,21 @@ class ServeSession:
         prefix_sharing: register/adopt shared prompt prefixes (paged +
             chunked only). ``False`` keeps the arena but prefills every
             prompt in full.
+        stats_window: length (in decode steps) of the step-stamped
+            per-expert dispatch/overflow window behind
+            ``stats()['expert_dispatched_window']`` and
+            :meth:`traffic_profile` — O(K) host memory per step, so
+            recent skew stays visible on a long-lived session whose
+            cumulative counters have flattened out.
+        adapt_policy: optional
+            :class:`~repro.serve.table_manager.AdaptPolicy` enabling the
+            online adaptation loop: every ``interval`` steps the session
+            inspects its windowed :class:`TrafficProfile` and, when the
+            overflow rate exceeds the policy threshold, runs
+            ``repack_for_traffic`` and :meth:`swap_table`'s the result
+            in — strictly between decode steps. Requires a DS head and
+            the raw DS mask state (``ds_state_or_table`` must NOT be a
+            pre-packed table: repacking needs the (head, mask) pair).
     """
 
     def __init__(self, bundle: ModelBundle, params, ds_state_or_table, *,
@@ -390,7 +421,9 @@ class ServeSession:
                  paged: bool = False, page_size: int = 16,
                  page_arena: Optional[int] = None,
                  state_arena: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 stats_window: int = 128,
+                 adapt_policy: Optional[AdaptPolicy] = None):
         cfg = bundle.cfg
         if cfg.family == "encdec":
             raise ValueError(
@@ -440,20 +473,38 @@ class ServeSession:
         self.n_steps = 0
         self.mesh = mesh
 
+        self._head_params = None    # replicated (head, mask) pair tracked
+        self._ds_state = None       # across swaps so repacks compound
         if cfg.head == "ds":
             if isinstance(ds_state_or_table, ds.ServeTable):
-                self.table = ds_state_or_table
+                table = ds_state_or_table
             else:
-                self.table = ds.pack_experts(params["head"], ds_state_or_table)
-            if mesh is not None:
-                # experts → model axis (K padded to a multiple of ep)
-                self.table = ds.shard_table(self.table, mesh)
+                self._ds_state = ds_state_or_table
+                table = ds.pack_experts(params["head"], ds_state_or_table)
+            self._head_params = params["head"]
+            # TableResource places onto the mesh (experts → model axis,
+            # K padded to a multiple of ep) on the way in — at init and
+            # on every later swap_table()
+            self._table_res = TableResource(table, gate=params["head"]["gate"],
+                                            mesh=mesh)
             log.info("packed serve table: V_pad=%d kernel=%s n_slots=%d mesh=%s",
                      self.table.v_pad, kernel or cfg.ds.serve_kernel, n_slots,
                      dict(mesh.shape) if mesh is not None else None)
         else:
-            self.table = ds_state_or_table
+            self._table_res = TableResource(ds_state_or_table)
         self._kernel = kernel
+        self._adapt_policy = adapt_policy
+        self._n_swaps = 0
+        self._last_adapt_step = 0
+        self._n_decode_builds = 0
+        if adapt_policy is not None:
+            if cfg.head != "ds":
+                raise ValueError("adapt_policy requires a DS head")
+            if self._ds_state is None:
+                raise ValueError(
+                    "adapt_policy needs the raw DS mask state to repack; "
+                    "pass ds_state, not a pre-packed ServeTable"
+                )
 
         # ---- request-lifecycle / degradation state ------------------------
         self._outcomes: collections.Counter = collections.Counter()
@@ -465,6 +516,10 @@ class ServeSession:
         self._eff_capacity_factor = None       # None → cfg.ds.capacity_factor
         self._expert_dispatched: Optional[np.ndarray] = None
         self._expert_overflow: Optional[np.ndarray] = None
+        # step-stamped window over the same per-expert counters: each
+        # entry is (n_steps stamp, dispatched (K,), overflow (K,))
+        self._stats_window = max(1, stats_window)
+        self._win: Deque[tuple] = collections.deque(maxlen=self._stats_window)
 
         self._gather = None
         self._param_shardings = None
@@ -557,41 +612,8 @@ class ServeSession:
         self._tok = np.zeros(n_slots, np.int32)
         self._pos = np.zeros(n_slots, np.int32)
 
-        self._prefill_fn = jax.jit(
-            lambda p, t, b: bundle.prefill(self._pin_p(p), t, b, k=k,
-                                           kernel=self._kernel,
-                                           mesh=self.mesh,
-                                           gather=self._gather)
-        )
-
         self._build_decode_fn()
-        if prefill_chunk is not None:
-            if paged:
-                def _chunk(p, t, c, toks, pos0, nv, pages, spages):
-                    # chunked prefill straight into the SHARED arena: the
-                    # (1, n_pg) page row scatters the chunk's K/V into the
-                    # slot's prepared pages (state families update their
-                    # live state page in place)
-                    vals, ids, c = bundle.prefill_chunk(
-                        self._pin_p(p), t, c, toks, pos0, nv, k=k,
-                        kernel=self._kernel, mesh=self.mesh,
-                        gather=self._gather, pages=pages, state_pages=spages,
-                    )
-                    return vals, ids, self._pin(c)
-            else:
-                def _chunk(p, t, c, toks, pos0, nv):
-                    vals, ids, c = bundle.prefill_chunk(
-                        self._pin_p(p), t, c, toks, pos0, nv, k=k,
-                        kernel=self._kernel, mesh=self.mesh,
-                        gather=self._gather
-                    )
-                    if self.mesh is not None:
-                        c = jax.tree.map(
-                            lambda x: jax.lax.with_sharding_constraint(
-                                x, self._row_sharding), c)
-                    return vals, ids, c
-
-            self._chunk_fn = jax.jit(_chunk)
+        self._build_prefill_fns()
 
         if paged:
             kvl = self._kv_leaf
@@ -667,6 +689,21 @@ class ServeSession:
 
             self._scrub_fn = jax.jit(_scrub)
 
+    # -- versioned table resource -------------------------------------------
+
+    @property
+    def table(self):
+        """The CURRENT table version (a packed
+        :class:`~repro.core.dssoftmax.ServeTable` for DS heads). Passed
+        to every jitted step as an ARGUMENT — readers always see the
+        version resident when the step was launched, never a mid-step
+        mix (swaps happen strictly between steps)."""
+        return self._table_res.table
+
+    @property
+    def table_version(self) -> int:
+        return self._table_res.version
+
     # -- sharding fixed points ----------------------------------------------
 
     def _pin(self, cache):
@@ -691,10 +728,13 @@ class ServeSession:
 
     def _build_decode_fn(self) -> None:
         """(Re)build the jitted decode step. Called once at init and again
-        whenever the overflow breaker changes the effective capacity
-        factor or kernel — jit closures capture their constants at trace
-        time, so mutating ``self._eff_*`` alone would silently do
-        nothing; the jit object must be replaced."""
+        whenever (a) the overflow breaker changes the effective capacity
+        factor or kernel, or (b) ``swap_table`` installs a new table
+        version — jit closures capture their constants at trace time, so
+        mutating ``self._eff_*`` alone would silently do nothing; the
+        jit object must be replaced. ``_n_decode_builds`` counts these
+        rebuilds (the swap protocol asserts exactly one per swap)."""
+        self._n_decode_builds += 1
         bundle, k = self.bundle, self.k
 
         if self._mgr is not None:
@@ -723,6 +763,208 @@ class ServeSession:
                 return vals, ids, self._pin(c), stats
 
         self._decode_fn = jax.jit(_decode)
+
+    def _build_prefill_fns(self) -> None:
+        """(Re)build the jitted prefill closures. Like the decode step,
+        these take the table as an argument but are rebuilt on every
+        ``swap_table`` so a changed ``(K, V_pad)`` cannot grow their
+        compile caches. The paged page-copy/insert/scrub jits are
+        table-independent and are built once in ``__init__``."""
+        bundle, k = self.bundle, self.k
+
+        self._prefill_fn = jax.jit(
+            lambda p, t, b: bundle.prefill(self._pin_p(p), t, b, k=k,
+                                           kernel=self._kernel,
+                                           mesh=self.mesh,
+                                           gather=self._gather)
+        )
+        if self.prefill_chunk is None:
+            return
+        if self._mgr is not None:
+            def _chunk(p, t, c, toks, pos0, nv, pages, spages):
+                # chunked prefill straight into the SHARED arena: the
+                # (1, n_pg) page row scatters the chunk's K/V into the
+                # slot's prepared pages (state families update their
+                # live state page in place)
+                vals, ids, c = bundle.prefill_chunk(
+                    self._pin_p(p), t, c, toks, pos0, nv, k=k,
+                    kernel=self._kernel, mesh=self.mesh,
+                    gather=self._gather, pages=pages, state_pages=spages,
+                )
+                return vals, ids, self._pin(c)
+        else:
+            def _chunk(p, t, c, toks, pos0, nv):
+                vals, ids, c = bundle.prefill_chunk(
+                    self._pin_p(p), t, c, toks, pos0, nv, k=k,
+                    kernel=self._kernel, mesh=self.mesh,
+                    gather=self._gather
+                )
+                if self.mesh is not None:
+                    c = jax.tree.map(
+                        lambda x: jax.lax.with_sharding_constraint(
+                            x, self._row_sharding), c)
+                return vals, ids, c
+
+        self._chunk_fn = jax.jit(_chunk)
+
+    # -- table hot-swap + online adaptation ---------------------------------
+
+    def swap_table(self, new_table: ds.ServeTable,
+                   new_gate: Optional[jax.Array] = None, *,
+                   capacity_factor: Optional[float] = None) -> int:
+        """Hot-swap the serve table (and optionally its matching gate)
+        between decode steps. Returns the new table version.
+
+        The swap protocol, in order:
+
+        1. **Version fencing** — the incoming (unpadded) table is placed
+           on the session mesh via the :class:`TableResource`
+           (``shard_table``'s dummy-expert padding rules), and only then
+           becomes the current version; the old table retires to the
+           back buffer, so a launched step always reads one complete
+           version.
+        2. **Gate update** — a new gate (required when K changed) swaps
+           as one pair with the table; under FSDP it is placed with the
+           path-keyed ``head/gate`` sharding built at init (the
+           ``(None, 'data')`` rule is K-independent, so the spec stays
+           valid across swaps).
+        3. **Per-version telemetry reset** — cumulative + windowed
+           per-expert counters and the breaker's overflow history clear
+           (K/V_pad may have changed shape; the breaker re-evaluates
+           against the new table from a fresh window).
+        4. **Rebuild-once** — the jitted decode and prefill fns are
+           rebuilt exactly once (``_n_decode_builds`` += 1). The table
+           is a jit *argument*, but without the rebuild a changed
+           ``(K, V_pad)`` would silently grow every compile cache and
+           keep serving kernel choices priced against the OLD table —
+           ``serve_kernel_context`` reads shapes at trace time, so the
+           rebuild reprices ``KernelContext``/``AutoPolicy`` for free.
+
+        Identity-from-swap-point: backbone params and the KV/state cache
+        are table-independent, so resident requests' tokens after the
+        swap are bit-identical to a fresh session on the new table
+        replaying ``prompt ++ pre_swap_tokens``.
+        """
+        if self.cfg.head != "ds":
+            raise ValueError("swap_table requires a DS head")
+        if not isinstance(new_table, ds.ServeTable):
+            raise ValueError(
+                "swap_table takes a packed, unpadded ServeTable (the "
+                "resource re-pads for the mesh)"
+            )
+        if new_gate is None:
+            if new_table.ids.shape[0] != self.params["head"]["gate"].shape[0]:
+                raise ValueError(
+                    f"table has {new_table.ids.shape[0]} experts but the "
+                    f"resident gate has {self.params['head']['gate'].shape[0]}"
+                    " rows; pass new_gate — gate and table swap as one pair"
+                )
+        else:
+            if new_gate.shape[0] != new_table.ids.shape[0]:
+                raise ValueError(
+                    f"gate rows ({new_gate.shape[0]}) must match table "
+                    f"experts ({new_table.ids.shape[0]}) — gate and table "
+                    "swap as one versioned pair"
+                )
+            gate = jnp.asarray(new_gate)
+            if self._param_shardings is not None:
+                gate = jax.device_put(gate,
+                                      self._param_shardings["head"]["gate"])
+            head = dict(self.params["head"], gate=gate)
+            self.params = dict(self.params, head=head)
+        version = self._table_res.swap(
+            new_table, gate=self.params["head"]["gate"])
+        self._n_swaps += 1
+        if capacity_factor is not None:
+            self._eff_capacity_factor = float(capacity_factor)
+        # per-expert telemetry is per table version (K/V_pad can change
+        # shape across swaps); the breaker window restarts too
+        self._expert_dispatched = None
+        self._expert_overflow = None
+        self._win.clear()
+        self._overflow_hist.clear()
+        self._build_decode_fn()
+        self._build_prefill_fns()
+        log.info(
+            "table swap -> v%d: K=%d V_pad=%d capacity_factor=%s "
+            "(decode/prefill rebuilt once)",
+            version, self.table.ids.shape[0], self.table.v_pad,
+            self._eff_capacity_factor,
+        )
+        return version
+
+    def traffic_profile(self) -> Optional[TrafficProfile]:
+        """The stats window as a
+        :class:`~repro.serve.table_manager.TrafficProfile`, sliced to
+        the REAL expert count (a sharded session's stats cover
+        ``shard_table``'s dummy-expert padding rows; dummies receive no
+        traffic). ``None`` until the current table version has served at
+        least one decode step with per-expert stats."""
+        if not self._win:
+            return None
+        disp = np.sum([d for _, d, _ in self._win], axis=0, dtype=np.int64)
+        over = np.sum([o for _, _, o in self._win], axis=0, dtype=np.int64)
+        if self._head_params is not None:
+            kreal = int(self._head_params["gate"].shape[0])
+            disp, over = disp[:kreal], over[:kreal]
+        return TrafficProfile(
+            dispatched=disp, overflow=over, steps=len(self._win),
+            start_step=self._win[0][0], end_step=self._win[-1][0],
+        )
+
+    def adapt_now(self) -> bool:
+        """Force one adaptation pass immediately (the policy's interval
+        and overflow threshold are ignored; a non-empty stats window is
+        still required). Returns True when a swap happened."""
+        if self._adapt_policy is None:
+            raise ValueError("adapt_now() requires adapt_policy=")
+        prof = self.traffic_profile()
+        if prof is None:
+            return False
+        self._last_adapt_step = self.n_steps
+        return self._adapt(prof)
+
+    def _maybe_adapt(self) -> None:
+        """End-of-step adaptation check — swaps only ever happen HERE or
+        in :meth:`adapt_now`, strictly between decode steps."""
+        pol = self._adapt_policy
+        if pol is None or self._n_swaps >= pol.max_swaps:
+            return
+        if self.n_steps - self._last_adapt_step < pol.interval:
+            return
+        prof = self.traffic_profile()
+        if prof is None or prof.steps < pol.min_window_steps:
+            return
+        self._last_adapt_step = self.n_steps
+        if prof.overflow_rate <= pol.overflow_threshold:
+            return
+        self._adapt(prof)
+
+    def _adapt(self, prof: TrafficProfile) -> bool:
+        pol = self._adapt_policy
+        if self._n_swaps >= pol.max_swaps:
+            return False
+        key = jax.random.fold_in(jax.random.PRNGKey(pol.seed), self._n_swaps)
+        res = repack_for_traffic(
+            self._head_params, self._ds_state, prof, key=key,
+            prune_gamma=pol.prune_gamma,
+            mitosis_overflow_threshold=pol.mitosis_overflow_threshold,
+            headroom=pol.headroom, noise=pol.noise,
+            base_capacity_factor=(self._eff_capacity_factor
+                                  if self._eff_capacity_factor is not None
+                                  else self.cfg.ds.capacity_factor),
+        )
+        # evolve the tracked (head, mask) pair so later repacks compound
+        self._head_params, self._ds_state = res.head_params, res.state
+        log.info(
+            "adaptive repack at step %d: window overflow %.3f over %d "
+            "steps; cloned=%s pruned=%d rows",
+            self.n_steps, prof.overflow_rate, prof.steps, res.cloned,
+            res.rows_pruned,
+        )
+        self.swap_table(res.table, new_gate=res.head_params["gate"],
+                        capacity_factor=res.capacity_factor)
+        return True
 
     # -- public API ---------------------------------------------------------
 
@@ -873,6 +1115,10 @@ class ServeSession:
             t = self._sample(vals[i], ids[i], slot.req.sampling_params,
                              slot.n_emitted)
             self._emit(i, slot, t)
+        if self._adapt_policy is not None:
+            # adaptation swaps strictly BETWEEN steps: the decode above
+            # ran to completion on the old table version
+            self._maybe_adapt()
         return self.scheduler.has_work()
 
     def run(self, requests: Optional[List[Request]] = None) -> List[Request]:
@@ -887,7 +1133,11 @@ class ServeSession:
     def stats(self) -> dict:
         """Host-side counters snapshot: queue/slot occupancy, per-outcome
         request counts, shed count, per-expert dispatch/overflow totals
-        and the circuit-breaker state."""
+        AND the step-stamped window over them (``*_window`` keys with
+        ``window_start_step``/``window_end_step`` stamps — what
+        :meth:`traffic_profile` consumes), the circuit-breaker state,
+        and the table-swap accounting (``table_version``, ``n_swaps``,
+        ``decode_builds``)."""
         o = self._outcomes
         hist = self._overflow_hist
         if self.cfg.head == "ds":
@@ -919,7 +1169,28 @@ class ServeSession:
             "breaker_trips": self._breaker_trips,
             "effective_capacity_factor": eff_cf,
             "effective_kernel": self._eff_kernel,
+            "table_version": self._table_res.version,
+            "n_swaps": self._n_swaps,
+            "decode_builds": self._n_decode_builds,
         }
+        if self._win:
+            wd = np.sum([d for _, d, _ in self._win], axis=0, dtype=np.int64)
+            wo = np.sum([ov for _, _, ov in self._win], axis=0,
+                        dtype=np.int64)
+            out["expert_dispatched_window"] = wd.tolist()
+            out["expert_overflow_window"] = wo.tolist()
+            out["window_start_step"] = self._win[0][0]
+            out["window_end_step"] = self._win[-1][0]
+            out["window_steps"] = len(self._win)
+            out["overflow_rate_window"] = \
+                float(wo.sum()) / max(1.0, float(wd.sum()))
+        else:
+            out["expert_dispatched_window"] = None
+            out["expert_overflow_window"] = None
+            out["window_start_step"] = None
+            out["window_end_step"] = None
+            out["window_steps"] = 0
+            out["overflow_rate_window"] = 0.0
         if self._mgr is not None:
             out["paged"] = {
                 **self._mgr.stats(),
@@ -983,11 +1254,18 @@ class ServeSession:
     def _record_overflow(self, stats) -> None:
         disp = np.asarray(stats["dispatched"], np.int64)
         over = np.asarray(stats["overflow"], np.int64)
-        if self._expert_dispatched is None:
+        if self._expert_dispatched is None \
+                or self._expert_dispatched.shape != disp.shape:
+            # first step on this table version (swap_table resets the
+            # accumulators; the shape guard is defensive — K can change)
             self._expert_dispatched = np.zeros_like(disp)
             self._expert_overflow = np.zeros_like(over)
+            self._win.clear()
         self._expert_dispatched += disp
         self._expert_overflow += over
+        # n_steps was already incremented for the step these stats came
+        # from, so the stamp is the 1-based id of the completed step
+        self._win.append((self.n_steps, disp, over))
         rate = float(over.sum()) / max(float(disp.sum()), 1.0)
         self._overflow_hist.append(rate)
         self._maybe_trip_breaker()
@@ -1345,82 +1623,3 @@ class ServeSession:
             return
         self._tok[i] = token
         self._pos[i] = slot.pos
-
-
-_ENGINE_WARNED = False
-
-
-class ServeEngine:
-    """DEPRECATED compatibility shim over :class:`ServeSession`.
-
-    The original ``ServeEngine`` marched every request in lock-step to the
-    batch-max ``max_new_tokens`` (its docstring claimed slot-based
-    continuous batching it never implemented) and froze the serve kernel
-    as a raw string at engine init. ``generate`` now delegates to a
-    ``ServeSession`` sized to the request list: per-request
-    ``max_new_tokens``/``eos_id`` are honored exactly, prompts are
-    prefilled unpadded (the old engine left-padded to a shared length and
-    *attended the padding*), and ``serve_kernel=None`` resolves through
-    the kernel-policy registry ('auto') per call site instead of a
-    backend-only default. Sessions are cached per ``(n_slots, bucketed
-    max_seq_len)`` so repeated ``generate()`` calls reuse the jitted
-    prefill/decode closures instead of re-tracing every call. Prefer
-    ``ServeSession`` directly for new code.
-    """
-
-    def __init__(self, bundle: ModelBundle, params, ds_state, *, greedy: bool = True,
-                 serve_kernel=None):
-        global _ENGINE_WARNED
-        if not _ENGINE_WARNED:
-            _ENGINE_WARNED = True
-            warnings.warn(
-                "ServeEngine is deprecated; use ServeSession directly",
-                DeprecationWarning, stacklevel=2,
-            )
-        self.bundle = bundle
-        self.cfg = bundle.cfg
-        self.params = params
-        self.greedy = greedy
-        self._serve_kernel = serve_kernel
-        self._sessions: dict[tuple[int, int], ServeSession] = {}
-        if self.cfg.head == "ds":
-            self.table = ds.pack_experts(params["head"], ds_state)
-            log.info("packed serve table: V_pad=%d kernel=%s",
-                     self.table.v_pad, serve_kernel or self.cfg.ds.serve_kernel)
-        else:
-            self.table = ds_state
-
-    @staticmethod
-    def _bucket_seq_len(n: int) -> int:
-        """Round the required cache length up to the next power of two
-        (min 32) so nearby request sizes share one compiled session."""
-        b = 32
-        while b < n:
-            b *= 2
-        return b
-
-    def generate(self, requests: List[Request]) -> List[Request]:
-        if not requests:
-            return requests
-        smax = max(len(np.asarray(r.prompt).reshape(-1))
-                   + r.sampling_params.max_new_tokens for r in requests)
-        key = (len(requests), self._bucket_seq_len(smax))
-        session = self._sessions.pop(key, None)
-        if session is None:
-            session = ServeSession(
-                self.bundle, self.params, self.table,
-                n_slots=key[0], max_seq_len=key[1],
-                kernel=self._serve_kernel,
-            )
-        session.run(requests)
-        # the session is long-lived across generate() calls: drop its
-        # served-request history so prompts/outputs aren't retained forever
-        session.requests.clear()
-        # (re-)cache only AFTER a clean run — an exception above leaves
-        # queued/resident state that must not replay into a later call
-        self._sessions[key] = session
-        while len(self._sessions) > 8:
-            # each session pins a full (L, n_slots, seq, ...) device cache;
-            # evict the least recently used so a shape sweep can't hoard HBM
-            self._sessions.pop(next(iter(self._sessions)))
-        return requests

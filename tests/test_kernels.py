@@ -163,7 +163,7 @@ def test_dss_topk_grouped_overflow_last_token_exact(kern):
     """Regression: when the LAST token overflows and shares a fixup chunk
     with sentinel padding, the clamped sentinel scatter used to clobber its
     corrected result with the stale slot value (observed as one request
-    receiving another request's top-k in ServeEngine decode)."""
+    receiving another request's top-k in ServeSession decode)."""
     from repro.core import dssoftmax as ds
     from repro.core.gating import top1_gate
 

@@ -1,4 +1,7 @@
-"""Mitosis training tests (paper §2.3 / Fig. 2 / Fig. 5a)."""
+"""Mitosis training tests (paper §2.3 / Fig. 2 / Fig. 5a) plus the
+serve-shaped edge cases (ISSUE 8): ``clone_experts`` gate/row
+correspondence surviving ``pack_experts``, ``keep_one_copy`` idempotence
+against ``ServeTable`` round-trips."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,6 +9,8 @@ import numpy as np
 from repro.configs.base import DSSoftmaxConfig
 from repro.core import dssoftmax as ds
 from repro.core import mitosis
+from repro.core.losses import row_norms
+from repro.core.pruning import keep_one_copy
 
 
 def test_clone_doubles_and_inherits_sparsity():
@@ -37,3 +42,75 @@ def test_memory_ratio():
 def test_schedule():
     assert mitosis.mitosis_schedule(2, 64) == [2, 4, 8, 16, 32, 64]
     assert mitosis.mitosis_schedule(8, 8) == [8]
+
+
+def test_schedule_start_equals_target_not_power_of_two():
+    # start == target must be a single-stage schedule even off the
+    # doubling grid (no spurious extra stage, no doubling past target)
+    assert mitosis.mitosis_schedule(3, 3) == [3]
+    assert mitosis.mitosis_schedule(3, 5) == [3, 5]  # 6 clamps to target
+
+
+def test_clone_correspondence_survives_pack_experts():
+    """Serve-shaped round trip: clone every expert, then pack. Offspring
+    k+K must pack the SAME class ids in the SAME row order as parent k
+    (inherited mask, identical weights), and the gate must split as
+    (g+eps, g-eps) so parent+offspring average back to the original."""
+    cfg = DSSoftmaxConfig(num_experts=2)
+    params, state = ds.init(jax.random.PRNGKey(0), 8, 32, cfg)
+    mask = np.asarray(state.mask).copy()
+    mask[0, ::3] = False  # uneven per-expert sizes, like a pruned head
+    mask[1, 20:] = False
+    state = ds.DSState(mask=jnp.asarray(mask))
+    p2, s2 = mitosis.clone_experts(jax.random.PRNGKey(1), params, state)
+
+    g, g2 = np.asarray(params["gate"]), np.asarray(p2["gate"])
+    K = g.shape[0]
+    np.testing.assert_allclose(g2[:K] + g2[K:], 2.0 * g, rtol=1e-5,
+                               atol=1e-6)
+
+    table = ds.pack_experts(p2, s2)
+    ids = np.asarray(table.ids)
+    w = np.asarray(table.weights)
+    for k in range(K):
+        np.testing.assert_array_equal(ids[k], ids[k + K])
+        np.testing.assert_array_equal(w[k], w[k + K])
+        # the packed row set is exactly the surviving mask columns
+        alive = np.nonzero(mask[k])[0]
+        np.testing.assert_array_equal(ids[k, : len(alive)], alive)
+        assert (ids[k, len(alive):] == -1).all()
+
+
+def test_keep_one_copy_idempotent_and_table_stable():
+    """keep_one_copy is a projection: applying it to its own output
+    changes nothing, so re-packing yields a bit-identical ServeTable —
+    an adaptation loop can re-prune every window without drift."""
+    cfg = DSSoftmaxConfig(num_experts=4)
+    params, state = ds.init(jax.random.PRNGKey(2), 8, 24, cfg)
+    norms = row_norms(params["experts"], state.mask)
+    # aggressive candidate: kills whole columns -> forces resurrections
+    candidate = jnp.asarray(norms > np.quantile(np.asarray(norms), 0.9))
+    m1 = keep_one_copy(candidate, norms, state.mask)
+    # every previously-alive class keeps >= 1 copy
+    assert bool(jnp.all(jnp.any(m1, axis=0))), "a class went extinct"
+    m2 = keep_one_copy(m1, norms, m1)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+    t1 = ds.pack_experts(params, ds.DSState(mask=m1))
+    t2 = ds.pack_experts(params, ds.DSState(mask=m2))
+    np.testing.assert_array_equal(np.asarray(t1.ids), np.asarray(t2.ids))
+    np.testing.assert_array_equal(np.asarray(t1.weights),
+                                  np.asarray(t2.weights))
+
+
+def test_keep_one_copy_never_resurrects_extinct_columns():
+    cfg = DSSoftmaxConfig(num_experts=2)
+    params, state = ds.init(jax.random.PRNGKey(3), 8, 16, cfg)
+    prev = np.asarray(state.mask).copy()
+    prev[:, 5] = False  # column 5 already extinct before this prune
+    prev = jnp.asarray(prev)
+    norms = row_norms(params["experts"], prev)
+    candidate = jnp.zeros_like(prev)  # candidate kills everything
+    m = np.asarray(keep_one_copy(candidate, norms, prev))
+    assert not m[:, 5].any()           # once-pruned-always-pruned
+    assert m.sum(axis=0)[np.asarray(prev).any(axis=0)].min() == 1

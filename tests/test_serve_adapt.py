@@ -1,0 +1,391 @@
+"""Traffic-adaptive serving (ISSUE 8): the versioned table resource,
+the step-stamped traffic window, ``repack_for_traffic``, and the
+hot-swap protocol inside a live ``ServeSession``.
+
+The load-bearing invariant is identity-from-swap-point: backbone params
+and the KV/state cache are table-independent, so a resident request's
+tokens AFTER a swap must be bit-identical to a fresh session on the new
+table replaying ``prompt ++ pre_swap_tokens`` — asserted here across
+families (transformer/ssm/hybrid), cache layouts (contiguous/paged) and
+a 4x2 expert-parallel mesh in both param modes, with exactly ONE decode
+rebuild (and one compile) per swap.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_test_mesh, needs_devices
+from repro.configs import get_config, reduce_config
+from repro.core import dssoftmax as ds
+from repro.serve import (
+    AdaptPolicy,
+    TableResource,
+    TrafficProfile,
+    repack_for_traffic,
+    suggested_capacity_factor,
+)
+from repro.testing import skew_gate
+from repro.train import Request, RequestStatus, SamplingParams, ServeSession
+
+needs8 = needs_devices(8)
+
+
+def _tiny(arch, vocab, **ds_over):
+    cfg = reduce_config(get_config(arch), vocab=vocab).replace(
+        ds=get_config(arch).ds.replace(num_experts=4, **ds_over)
+    )
+    from repro.models import build
+
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    return bundle, params, ds_state
+
+
+def _profile(dispatched, overflow, steps=10, start=1, end=10):
+    return TrafficProfile(
+        dispatched=np.asarray(dispatched, np.int64),
+        overflow=np.asarray(overflow, np.int64),
+        steps=steps, start_step=start, end_step=end,
+    )
+
+
+# a window where expert 0 took 83% of traffic and overflowed on 40% of
+# its own tokens -> repack_for_traffic clones it (K=4 -> 5)
+HOT0 = _profile([100, 10, 5, 5], [40, 0, 0, 0])
+
+
+def _requests(vocab, n=2, seed=0, max_new=8):
+    rng = np.random.RandomState(seed)
+    return [Request(prompt=rng.randint(0, vocab, rng.randint(4, 9))
+                    .astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=max_new))
+            for _ in range(n)]
+
+
+def _swap_midflight_and_check_identity(bundle, params, ds_state, *,
+                                       vocab, mesh=None,
+                                       param_mode="replicated",
+                                       n_slots=2, **sess_kw):
+    """Shared body: start a session, decode 3 steps, repack-with-mitosis
+    off a fabricated hot window, hot-swap mid-flight, drain, then check
+    the post-swap suffix of every request against a fresh session on the
+    new table replaying ``prompt ++ pre_swap_tokens``."""
+    max_new = 8
+    reqs = _requests(vocab, n=n_slots, max_new=max_new)
+    sess = ServeSession(bundle, params, ds_state, n_slots=n_slots,
+                        max_seq_len=32, kernel="jnp", mesh=mesh,
+                        param_mode=param_mode, **sess_kw)
+    for r in reqs:
+        sess.submit(r)
+    for _ in range(3):
+        sess.step()
+    pre = [list(r.out_tokens) for r in reqs]
+
+    res = repack_for_traffic(params["head"], ds_state, HOT0,
+                             key=jax.random.PRNGKey(3))
+    assert res.cloned == (0,)
+    assert res.head_params["gate"].shape[0] == 5
+    version = sess.swap_table(res.table, new_gate=res.head_params["gate"],
+                              capacity_factor=res.capacity_factor)
+    assert version == 1
+    while sess.step():
+        pass
+
+    s = sess.stats()
+    assert s["n_swaps"] == 1 and s["table_version"] == 1
+    assert s["decode_builds"] == 2          # init + exactly one per swap
+    assert sess._decode_fn._cache_size() == 1
+
+    # fresh single-device session on the NEW table replays each resident
+    params2 = dict(params, head=res.head_params)
+    fresh = ServeSession(bundle, params2, res.table, n_slots=n_slots,
+                         max_seq_len=32, kernel="jnp")
+    refs = []
+    for r, p in zip(reqs, pre):
+        assert r.status is RequestStatus.COMPLETED
+        assert len(r.out_tokens) == max_new
+        refs.append(Request(
+            prompt=np.concatenate([r.prompt,
+                                   np.asarray(p, np.int32)]),
+            sampling=SamplingParams(max_new_tokens=max_new - len(p))))
+    fresh.run(refs)
+    for r, p, ref in zip(reqs, pre, refs):
+        assert r.out_tokens[len(p):] == ref.out_tokens
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: hot-swap identity across families and cache layouts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,vocab", [
+    ("qwen2-1.5b", 128),      # transformer
+    ("mamba2-130m", 96),      # ssm
+    ("zamba2-7b", 96),        # hybrid
+])
+@pytest.mark.parametrize("paged", [False, True])
+def test_hot_swap_identity(arch, vocab, paged):
+    bundle, params, ds_state = _tiny(arch, vocab)
+    kw = dict(paged=True, page_size=4, prefill_chunk=4) if paged else {}
+    _swap_midflight_and_check_identity(bundle, params, ds_state,
+                                       vocab=vocab, **kw)
+
+
+@needs8
+@pytest.mark.parametrize("param_mode", ["replicated", "fsdp"])
+def test_hot_swap_identity_on_mesh(param_mode):
+    """On a 4x2 mesh the swap re-shards the table (K=5 padded to 6 with
+    a dummy expert) and, under fsdp, re-places the gate with the
+    init-time path-keyed spec — suffixes still match a single-device
+    fresh session."""
+    bundle, params, ds_state = _tiny("qwen2-1.5b", 128)
+    mesh = make_test_mesh("4x2")
+    _swap_midflight_and_check_identity(bundle, params, ds_state,
+                                       vocab=128, mesh=mesh,
+                                       param_mode=param_mode, n_slots=4)
+
+
+# ---------------------------------------------------------------------------
+# TableResource: version fencing
+# ---------------------------------------------------------------------------
+
+def test_table_resource_versions_and_back_buffer():
+    bundle, params, ds_state = _tiny("qwen2-1.5b", 128)
+    t0 = ds.pack_experts(params["head"], ds_state)
+    res = TableResource(t0, gate=params["head"]["gate"])
+    assert res.version == 0 and res.prev is None
+    t1 = ds.pack_experts(params["head"], ds_state)
+    assert res.swap(t1) == 1
+    # old table retired, fully resident, until the NEXT swap
+    assert res.table is t1 and res.prev is t0 and res.prev_version == 0
+    res.drop_retired()
+    assert res.prev is None and res.prev_version is None
+    assert res.version == 1    # dropping the back buffer is not a swap
+
+
+def test_table_resource_places_on_mesh_on_the_way_in():
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices")
+    bundle, params, ds_state = _tiny("qwen2-1.5b", 128)
+    mesh = make_test_mesh("4x2")
+    t0 = ds.pack_experts(params["head"], ds_state)
+    res = TableResource(t0, gate=params["head"]["gate"], mesh=mesh)
+    # K=4 already divides the model axis (2): no dummy padding, but the
+    # resident table must be the mesh-placed copy, not the host one
+    assert res.table.ids.shape[0] == 4
+    assert not res.table.ids.is_fully_replicated \
+        or len(res.table.ids.devices()) == 8
+    v = res.swap(ds.pack_experts(params["head"], ds_state))
+    assert v == 1 and len(res.table.ids.devices()) == 8
+
+
+def test_table_resource_non_ds_passthrough():
+    """Non-DS heads store opaque state; swap still versions it and never
+    tries to shard it."""
+    state = {"w": np.ones(3)}
+    res = TableResource(state)
+    assert res.table is state
+    new = {"w": np.zeros(3)}
+    assert res.swap(new) == 1
+    assert res.table is new and res.prev is state
+
+
+# ---------------------------------------------------------------------------
+# Satellite: step-stamped stats window
+# ---------------------------------------------------------------------------
+
+def test_stats_window_stamps_and_maxlen():
+    bundle, params, ds_state = _tiny("qwen2-1.5b", 128)
+    sess = ServeSession(bundle, params, ds_state, n_slots=2, max_seq_len=32,
+                        kernel="jnp", stats_window=4)
+    for r in _requests(128, n=2, max_new=10):
+        sess.submit(r)
+    while sess.step():
+        pass
+    s = sess.stats()
+    assert s["window_steps"] == 4                 # deque maxlen honoured
+    assert s["window_end_step"] == sess.n_steps
+    assert s["window_end_step"] - s["window_start_step"] == 3
+    assert len(s["expert_dispatched_window"]) == 4  # K, real experts
+    # the window is a SUM over its steps, bounded by the cumulative total
+    assert sum(s["expert_dispatched_window"]) <= sum(s["expert_dispatched"])
+    prof = sess.traffic_profile()
+    assert prof.steps == 4
+    assert prof.n_experts == 4
+    assert (prof.dispatched == np.asarray(s["expert_dispatched_window"])).all()
+
+
+def test_window_resets_on_swap():
+    bundle, params, ds_state = _tiny("qwen2-1.5b", 128)
+    sess = ServeSession(bundle, params, ds_state, n_slots=2, max_seq_len=32,
+                        kernel="jnp")
+    for r in _requests(128, n=2, max_new=8):
+        sess.submit(r)
+    for _ in range(3):
+        sess.step()
+    assert sess.traffic_profile() is not None
+    sess.swap_table(ds.pack_experts(params["head"], ds_state))
+    # per-version telemetry: the new table starts from an empty window
+    assert sess.traffic_profile() is None
+    assert sess.stats()["window_steps"] == 0
+    sess.step()
+    assert sess.traffic_profile().steps == 1
+
+
+# ---------------------------------------------------------------------------
+# repack_for_traffic / capacity suggestion
+# ---------------------------------------------------------------------------
+
+def test_repack_rejects_padded_profile():
+    bundle, params, ds_state = _tiny("qwen2-1.5b", 128)
+    bad = _profile([1] * 6, [0] * 6)   # 6 rows: dummy-padded K, not real K
+    with pytest.raises(ValueError, match="dummy-expert padding"):
+        repack_for_traffic(params["head"], ds_state, bad)
+
+
+def test_repack_mitosis_appends_offspring():
+    bundle, params, ds_state = _tiny("qwen2-1.5b", 128)
+    gate = np.asarray(params["head"]["gate"], np.float32)
+    res = repack_for_traffic(params["head"], ds_state, HOT0,
+                             key=jax.random.PRNGKey(0))
+    g2 = np.asarray(res.head_params["gate"], np.float32)
+    assert res.cloned == (0,)
+    assert g2.shape[0] == 5
+    # parent keeps gate+eps, offspring gets gate-eps APPENDED at the end
+    # (existing expert indices keep their meaning across the swap)
+    np.testing.assert_allclose(g2[0] + g2[4], 2.0 * gate[0], rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(g2[1:4], gate[1:4], rtol=0, atol=0)
+    # offspring inherits the parent's packed rows verbatim
+    ids = np.asarray(res.table.ids)
+    np.testing.assert_array_equal(ids[4], ids[0])
+    assert res.table.ids.shape[0] == 5
+
+
+def test_repack_without_key_skips_mitosis():
+    bundle, params, ds_state = _tiny("qwen2-1.5b", 128)
+    res = repack_for_traffic(params["head"], ds_state, HOT0, key=None)
+    assert res.cloned == ()
+    assert res.head_params["gate"].shape[0] == 4
+
+
+def test_suggested_capacity_factor_math():
+    # hottest expert holds 100/120 of the window -> cf >= 1.5 * (5/6) * K
+    cf = suggested_capacity_factor(HOT0, n_experts_new=5, headroom=1.5)
+    assert cf == pytest.approx(1.5 * (100 / 120) * 5)
+    # never shrinks below the session's current effective factor
+    assert suggested_capacity_factor(HOT0, 5, headroom=1.5, base=50.0) == 50.0
+    # no traffic -> only the base survives
+    empty = _profile([0, 0], [0, 0])
+    assert suggested_capacity_factor(empty, 2, base=2.0) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# swap_table validation
+# ---------------------------------------------------------------------------
+
+def test_swap_table_validates_pairing():
+    bundle, params, ds_state = _tiny("qwen2-1.5b", 128)
+    sess = ServeSession(bundle, params, ds_state, n_slots=1, max_seq_len=16,
+                        kernel="jnp")
+    res = repack_for_traffic(params["head"], ds_state, HOT0,
+                             key=jax.random.PRNGKey(0))
+    # K grew 4 -> 5: swapping the table WITHOUT its gate must refuse
+    with pytest.raises(ValueError, match="gate and table swap as one pair"):
+        sess.swap_table(res.table)
+    # and a mismatched (gate, table) pair must refuse too
+    with pytest.raises(ValueError, match="one versioned pair"):
+        sess.swap_table(res.table, new_gate=params["head"]["gate"])
+    assert sess.table_version == 0 and sess.stats()["decode_builds"] == 1
+
+    with pytest.raises(ValueError, match="ServeTable"):
+        sess.swap_table("not-a-table")
+
+
+def test_adapt_policy_requires_raw_state():
+    bundle, params, ds_state = _tiny("qwen2-1.5b", 128)
+    table = ds.pack_experts(params["head"], ds_state)
+    with pytest.raises(ValueError, match="raw DS mask state"):
+        ServeSession(bundle, params, table, n_slots=1, max_seq_len=16,
+                     adapt_policy=AdaptPolicy())
+
+
+# ---------------------------------------------------------------------------
+# Online adaptation loop
+# ---------------------------------------------------------------------------
+
+def _skewed_setup(max_new=16, n=8):
+    """Gate zeroed -> every token routes to expert 0; grouped kernel with
+    round(8/4*0.25) = 1 slot per expert -> sustained overflow the
+    adaptation loop must repair. Breaker disabled (threshold > 1) so the
+    repair is attributable to the repack alone."""
+    bundle, params, ds_state = _tiny("qwen2-1.5b", 128,
+                                     capacity_factor=0.25)
+    return bundle, skew_gate(params), ds_state, _requests(128, n=n,
+                                                          max_new=max_new)
+
+
+def test_adapt_loop_swaps_once_and_clears_overflow():
+    bundle, params, ds_state, reqs = _skewed_setup()
+    sess = ServeSession(
+        bundle, params, ds_state, n_slots=8, max_seq_len=32,
+        kernel="grouped", overflow_threshold=1.1,
+        adapt_policy=AdaptPolicy(interval=6, min_window_steps=4,
+                                 overflow_threshold=0.05,
+                                 mitosis_overflow_threshold=0.1,
+                                 max_swaps=1),
+    )
+    sess.run(reqs)
+    s = sess.stats()
+    assert s["n_swaps"] == 1
+    assert s["decode_builds"] == 2
+    assert s["breaker_trips"] == 0
+    # the suggested capacity sized the hot expert's buffer to its actual
+    # share — the post-swap window must be overflow-free
+    assert s["overflow_rate_window"] == 0.0
+    assert s["effective_capacity_factor"] > 0.25
+    for r in reqs:
+        assert r.status is RequestStatus.COMPLETED
+        assert len(r.out_tokens) == 16
+
+
+def test_adapt_now_before_after_overflow():
+    """The benchmark shape: huge interval (no auto-swap), drive traffic,
+    force one adaptation, and require the windowed overflow rate to be
+    strictly lower after."""
+    bundle, params, ds_state, reqs = _skewed_setup(max_new=24)
+    sess = ServeSession(
+        bundle, params, ds_state, n_slots=8, max_seq_len=40,
+        kernel="grouped", overflow_threshold=1.1,
+        adapt_policy=AdaptPolicy(interval=10_000, min_window_steps=4),
+    )
+    for r in reqs:
+        sess.submit(r)
+    for _ in range(8):
+        sess.step()
+    before = sess.stats()["overflow_rate_window"]
+    assert before > 0.0
+    assert sess.adapt_now() is True
+    while sess.step():
+        pass
+    after = sess.stats()["overflow_rate_window"]
+    assert after < before
+    assert sess.stats()["n_swaps"] == 1
+
+
+def test_adapt_loop_respects_max_swaps():
+    bundle, params, ds_state, reqs = _skewed_setup(max_new=20)
+    sess = ServeSession(
+        bundle, params, ds_state, n_slots=8, max_seq_len=36,
+        kernel="grouped", overflow_threshold=1.1,
+        adapt_policy=AdaptPolicy(interval=2, min_window_steps=1,
+                                 overflow_threshold=-1.0,  # always "hot"
+                                 mitosis_overflow_threshold=0.1,
+                                 max_swaps=2),
+    )
+    sess.run(reqs)
+    s = sess.stats()
+    assert s["n_swaps"] == 2                       # capped, not every 2 steps
+    assert s["decode_builds"] == 1 + 2
+    for r in reqs:
+        assert r.status is RequestStatus.COMPLETED

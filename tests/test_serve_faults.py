@@ -12,8 +12,6 @@ Fault injectors live in ``repro.testing.faults``; the 8-fake-device
 mesh/fsdp variants run in the distributed CI job (see
 ``conftest.make_test_mesh``).
 """
-import warnings
-
 import jax
 import numpy as np
 import pytest
@@ -33,9 +31,9 @@ from repro.testing import (
     poison_token_embedding,
     release_hoarded_pages,
     skew_gate,
+    swap_storm,
 )
 from repro.train import Request, RequestStatus, SamplingParams, ServeSession
-from repro.train import serve as serve_mod
 
 needs8 = needs_devices(8)
 
@@ -449,30 +447,61 @@ def test_breaker_quiet_workload_never_trips(tiny):
 
 
 # ---------------------------------------------------------------------------
-# Satellite: ServeEngine shim deprecation (+ still routes via ServeSession)
+# Satellite (ISSUE 8): swap_storm — repeated table hot-swaps under load
 # ---------------------------------------------------------------------------
 
-def test_serve_engine_warns_deprecation_once_per_process(tiny):
+def test_swap_storm_survivors_bit_identical(tiny):
+    """Repeated identity-repack hot-swaps mid-drain must be invisible to
+    residents (tokens bit-identical to a storm-free run) while each swap
+    pays the full protocol: version bump, telemetry reset, exactly one
+    decode/prefill rebuild with one compile each."""
     bundle, params, table = tiny
-    cfg = reduce_config(get_config("qwen2-1.5b"), vocab=128).replace(
-        ds=get_config("qwen2-1.5b").ds.replace(num_experts=4))
+    _, ds_state = bundle.init(jax.random.PRNGKey(0))  # fixture's own state
+    reqs = _requests(128, n=6, max_new=8)
+    ref = _clean_reference(bundle, params, table, reqs,
+                           n_slots=2, max_seq_len=32)
+    sess = ServeSession(bundle, params, ds_state, n_slots=2, max_seq_len=32,
+                        kernel="jnp")
+    for r in reqs:
+        sess.submit(r)
+    n = swap_storm(sess, params["head"], ds_state, count=3, every=2)
+    assert n == 3
+    for r, expected in zip(reqs, ref):
+        assert r.status is RequestStatus.COMPLETED
+        assert r.out_tokens == expected
+    s = sess.stats()
+    assert s["n_swaps"] == 3
+    assert s["table_version"] == 3
+    assert s["decode_builds"] == 1 + 3  # init + exactly one per swap
+    assert sess._decode_fn._cache_size() == 1
+
+
+@needs8
+@pytest.mark.parametrize("param_mode", ["replicated", "fsdp"])
+def test_swap_storm_on_mesh(param_mode):
+    """The storm on a 4x2 expert-parallel mesh: every swap re-shards the
+    incoming table onto the mesh (dummy-expert padding included) and,
+    under fsdp, re-places the gate with the init-time path-keyed spec —
+    survivors still bit-identical to the single-device clean run."""
+    bundle, params, table = _tiny_family("qwen2-1.5b", 128)
     _, ds_state = bundle.init(jax.random.PRNGKey(0))
-    serve_mod._ENGINE_WARNED = False
-    from repro.train import ServeEngine
-    with pytest.warns(DeprecationWarning, match="ServeEngine is deprecated"):
-        eng = ServeEngine(bundle, params, ds_state, serve_kernel="jnp")
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")  # a second warning would raise
-        ServeEngine(bundle, params, ds_state, serve_kernel="jnp")
-    # the shim still routes through ServeSession with identical tokens
-    req = Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=4)
-    eng.generate([req])
-    direct = Request(prompt=np.arange(5, dtype=np.int32),
-                     sampling=SamplingParams(max_new_tokens=4))
-    ServeSession(bundle, params, table, n_slots=1, max_seq_len=32,
-                 kernel="jnp").run([direct])
-    assert req.status is RequestStatus.COMPLETED
-    assert req.out_tokens == direct.out_tokens
+    mesh = make_test_mesh("4x2")
+    reqs = _requests(128, n=6, max_new=8)
+    ref = _clean_reference(bundle, params, table, reqs,
+                           n_slots=4, max_seq_len=32)
+    sess = ServeSession(bundle, params, ds_state, n_slots=4, max_seq_len=32,
+                        kernel="jnp", mesh=mesh, param_mode=param_mode)
+    for r in reqs:
+        sess.submit(r)
+    n = swap_storm(sess, params["head"], ds_state, count=2, every=2)
+    assert n == 2
+    for r, expected in zip(reqs, ref):
+        assert r.status is RequestStatus.COMPLETED
+        assert r.out_tokens == expected
+    s = sess.stats()
+    assert s["n_swaps"] == 2
+    assert s["decode_builds"] == 1 + 2
+    assert sess._decode_fn._cache_size() == 1
 
 
 # ---------------------------------------------------------------------------

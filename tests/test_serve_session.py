@@ -11,7 +11,7 @@ import pytest
 from repro.configs import get_config, reduce_config
 from repro.core import dssoftmax as ds
 from repro.models import build
-from repro.train import Request, SamplingParams, ServeEngine, ServeSession
+from repro.train import Request, SamplingParams, ServeSession
 
 
 @pytest.fixture(scope="module")
@@ -91,16 +91,18 @@ def test_mixed_workload_token_identical_with_slot_reuse(
 
 
 def test_heterogeneous_max_new_exact_lengths(tiny, reference_outputs):
-    """Regression (old ServeEngine bug): a request with max_new_tokens
-    below the batch max kept stale append-then-drop semantics and its
-    `done` flag only flipped on the NEXT step. Lengths must now be exact
-    per request and every request marked done, through the engine shim."""
+    """Regression (old lock-step engine bug): a request with
+    max_new_tokens below the batch max kept stale append-then-drop
+    semantics and its `done` flag only flipped on the NEXT step. Lengths
+    must be exact per request and every request marked done — including
+    via the legacy ``Request.max_new_tokens`` field (no SamplingParams)."""
     bundle, params, ds_state, table = tiny
     prompts, max_news = _mixed_requests()
-    eng = ServeEngine(bundle, params, ds_state, serve_kernel="jnp")
+    sess = ServeSession(bundle, params, table, n_slots=len(prompts),
+                        max_seq_len=32, kernel="jnp")
     reqs = [Request(prompt=p, max_new_tokens=m)
             for p, m in zip(prompts, max_news)]
-    eng.generate(reqs)
+    sess.run(reqs)
     for r, m, expected in zip(reqs, max_news, reference_outputs):
         assert r.done
         assert len(r.out_tokens) == m
@@ -244,21 +246,20 @@ def test_ssm_hybrid_chunked_prefill_token_identical(arch):
     assert sess_c._prefill_fn._cache_size() == 0  # whole-prompt path unused
 
 
-def test_engine_generate_reuses_cached_session(tiny):
-    """Regression: ``ServeEngine.generate`` built a fresh ServeSession
-    (new jit closures → full re-trace) on every call. Sessions are now
-    cached on (n_slots, bucketed max_seq_len): a second call with nearby
-    shapes reuses the SAME session and compiles nothing new."""
+def test_session_reuse_compiles_nothing_new(tiny):
+    """A long-lived session serving successive request waves reuses its
+    jitted closures: a second wave with already-seen prompt lengths
+    compiles nothing new (the regression the removed ``ServeEngine``
+    shim's session cache used to guard)."""
     bundle, params, ds_state, table = tiny
-    eng = ServeEngine(bundle, params, ds_state, serve_kernel="jnp")
-    eng.generate([Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=3)])
-    assert len(eng._sessions) == 1
-    sess = next(iter(eng._sessions.values()))
+    sess = ServeSession(bundle, params, table, n_slots=1, max_seq_len=32,
+                        kernel="jnp")
+    sess.run([Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=3)])
     assert sess._decode_fn._cache_size() == 1
     n_prefill = sess._prefill_fn._cache_size()
     # same prompt length again: zero new compiles anywhere
-    eng.generate([Request(prompt=np.arange(5, dtype=np.int32) + 1, max_new_tokens=4)])
-    assert next(iter(eng._sessions.values())) is sess
+    sess.run([Request(prompt=np.arange(5, dtype=np.int32) + 1,
+                      max_new_tokens=4)])
     assert sess._decode_fn._cache_size() == 1
     assert sess._prefill_fn._cache_size() == n_prefill
 

@@ -8,7 +8,7 @@ from repro.configs import get_config, reduce_config
 from repro.configs.base import TrainConfig
 from repro.data import DataPipeline, TopicLMStream
 from repro.models import build
-from repro.train import Request, ServeEngine, Trainer
+from repro.train import Request, ServeSession, Trainer
 from repro.train.train_step import make_train_step
 
 
@@ -83,13 +83,14 @@ def test_mitosis_in_trainer(tmp_path):
     assert state.params["head"]["gate"].shape[0] == 8  # 4 -> 8 experts
 
 
-def test_serve_engine_generates(tmp_path):
+def test_serve_session_generates(tmp_path):
     bundle, pipe, tcfg = _tiny_lm(tmp_path)
     params, ds_state = bundle.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(bundle, params, ds_state)
+    session = ServeSession(bundle, params, ds_state, n_slots=2,
+                           max_seq_len=16)
     reqs = [Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=4),
             Request(prompt=np.arange(3, dtype=np.int32) + 7, max_new_tokens=4)]
-    out = eng.generate(reqs)
+    out = session.run(reqs)
     for r in out:
         assert len(r.out_tokens) == 4
         assert all(0 <= t < bundle.cfg.vocab_size for t in r.out_tokens)
