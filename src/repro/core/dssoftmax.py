@@ -409,36 +409,229 @@ class ServeTable(NamedTuple):
         return shard_table(self, mesh)
 
 
+class QuantizedServeTable(NamedTuple):
+    """Int8 serve table with per-expert-row fp32 scales (PR 9).
+
+    Drop-in for :class:`ServeTable` everywhere serving accepts one (the
+    ``as_serve_table`` duck-unwrap, ``TableResource``, ``ServeSession``,
+    sharded serving). Expert rows are stored symmetric-quantized —
+    ``w[k, v] ≈ qweights[k, v] * scales[k, v]`` with
+    ``scales[k, v] = max|w[k, v, :]| / 127`` — and dequantized
+    *in-register*: every serve path casts the int8 rows to the token
+    dtype for the MXU matmul, accumulates in fp32 and applies the row
+    scale to the accumulator (exactly like the gate scale), so the
+    (K, V_pad, d) table is read at 1 byte/elem and no fp copy of it
+    ever exists in HBM.
+
+    Mixed precision: experts whose top-k *ids* flip vs the fp32 oracle
+    on calibration traffic (see :func:`calibrate_quantized_table`) keep
+    their exact full-precision rows in ``fb_weights`` and are served
+    through the gather path. ``fb_index[k]`` is the row of expert ``k``
+    in ``fb_weights`` (-1 → int8-served); ``fb_weights.shape[0]`` is a
+    static trace-time constant, so a gate-clean table compiles with no
+    fallback branch at all.
+
+    ids:        (K, V_pad) int32 — class id per packed row; -1 padding.
+    qweights:   (K, V_pad, d) int8 — symmetric-quantized rows.
+    scales:     (K, V_pad) float32 — per-row dequant scale (1.0 on
+                all-zero/padding rows so dequant is well-defined).
+    fb_index:   (K,) int32 — row into ``fb_weights``; -1 = int8-served.
+    fb_weights: (n_fb, V_pad, d) source dtype — exact rows of the
+                fallback experts (empty when the gate passed clean).
+    """
+
+    ids: jax.Array
+    qweights: jax.Array
+    scales: jax.Array
+    fb_index: jax.Array
+    fb_weights: jax.Array
+
+    @property
+    def v_pad(self) -> int:
+        return self.ids.shape[1]
+
+    @property
+    def n_fallback(self) -> int:
+        return self.fb_weights.shape[0]
+
+    def shard(self, mesh) -> "QuantizedServeTable":
+        """Expert-parallel placement over ``mesh`` (see :func:`shard_table`)."""
+        return shard_table(self, mesh)
+
+
+def quantize_table(table: ServeTable, fb_mask=None) -> QuantizedServeTable:
+    """Symmetric int8 row quantization of a packed :class:`ServeTable`.
+
+    ``fb_mask`` (K,) bool marks experts kept at full precision (their
+    exact rows move to ``fb_weights``; their ``qweights`` stay populated
+    but are never read). Host-side numpy, like :func:`pack_experts` —
+    a one-off packing step, not a jitted op.
+    """
+    ids = np.asarray(jax.device_get(table.ids))
+    w = np.asarray(jax.device_get(table.weights))
+    K = w.shape[0]
+    amax = np.abs(w.astype(np.float32)).max(axis=2)  # (K, V_pad)
+    scales = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(
+        np.rint(w.astype(np.float32) / scales[..., None]), -127, 127
+    ).astype(np.int8)
+    fb = (np.zeros((K,), bool) if fb_mask is None
+          else np.asarray(jax.device_get(fb_mask), bool))
+    fb_rows = np.nonzero(fb)[0]
+    fb_index = np.full((K,), -1, np.int32)
+    fb_index[fb_rows] = np.arange(len(fb_rows), dtype=np.int32)
+    return QuantizedServeTable(
+        ids=jnp.asarray(ids),
+        qweights=jnp.asarray(q),
+        scales=jnp.asarray(scales),
+        fb_index=jnp.asarray(fb_index),
+        fb_weights=jnp.asarray(w[fb_rows]),
+    )
+
+
+def dequantize_table(table: QuantizedServeTable) -> ServeTable:
+    """Materialize the fp32 table a :class:`QuantizedServeTable` serves:
+    ``q * s`` rows, with fallback experts' exact rows substituted. Debug /
+    oracle helper (host-side; the serve paths never build this)."""
+    q = np.asarray(jax.device_get(table.qweights))
+    s = np.asarray(jax.device_get(table.scales))
+    w = q.astype(np.float32) * s[..., None]
+    fb_index = np.asarray(jax.device_get(table.fb_index))
+    if table.n_fallback:
+        fb_w = np.asarray(jax.device_get(table.fb_weights), np.float32)
+        for e in np.nonzero(fb_index >= 0)[0]:
+            w[e] = fb_w[fb_index[e]]
+    return ServeTable(ids=table.ids, weights=jnp.asarray(w))
+
+
+class ExactnessReport(NamedTuple):
+    """Quantized-serving exactness gate (PR 9).
+
+    Produced by :func:`calibrate_quantized_table`: top-k ids of the
+    all-int8 table are compared positionally against the fp32 oracle on
+    calibration traffic; experts whose token flip rate exceeds
+    ``flip_threshold`` fall back to full-precision rows. Flips from
+    tokens of non-fallback experts remain *unguarded* — the gate passes
+    iff there are none (with the default threshold 0.0 every flipping
+    expert falls back, so the served table is measured-exact on the
+    calibration trace by construction).
+    """
+
+    n_tokens: int
+    n_flips_raw: int           # all-int8 table vs fp32 oracle, pre-fallback
+    n_unguarded_flips: int     # flips surviving the per-expert fallback
+    flip_threshold: float
+    per_expert_flip_rate: tuple  # (K,) floats, calibration-token weighted
+    fallback_experts: tuple      # expert ids served from full-precision rows
+
+    @property
+    def passed(self) -> bool:
+        return self.n_unguarded_flips == 0
+
+    def as_dict(self) -> dict:
+        return {
+            "n_tokens": int(self.n_tokens),
+            "n_flips_raw": int(self.n_flips_raw),
+            "n_unguarded_flips": int(self.n_unguarded_flips),
+            "flip_rate_raw": (float(self.n_flips_raw) / self.n_tokens
+                              if self.n_tokens else 0.0),
+            "flip_threshold": float(self.flip_threshold),
+            "per_expert_flip_rate": [float(r) for r in self.per_expert_flip_rate],
+            "fallback_experts": [int(e) for e in self.fallback_experts],
+            "n_fallback": len(self.fallback_experts),
+            "passed": bool(self.passed),
+        }
+
+
+def calibrate_quantized_table(
+    gate_w: jax.Array,
+    table: ServeTable,
+    calib_h: jax.Array,
+    k: int = 8,
+    flip_threshold: float = 0.0,
+) -> tuple[QuantizedServeTable, ExactnessReport]:
+    """Quantize ``table`` to int8 under an exactness gate.
+
+    Runs the jnp oracle on the fp table and on the all-int8 table over
+    ``calib_h`` (n, d) calibration activations, compares top-``k`` ids
+    positionally, and re-quantizes with per-expert bf16/fp fallback for
+    every expert whose flip rate (among the tokens its top-1 gate
+    captured) exceeds ``flip_threshold``. Returns the (possibly
+    mixed-precision) table and the gate report.
+    """
+    if not isinstance(table, ServeTable):
+        raise TypeError(
+            "calibrate_quantized_table expects a full-precision ServeTable, "
+            f"got {type(table).__name__}"
+        )
+    calib_h = jnp.asarray(calib_h)
+    qt_all = quantize_table(table)
+    _, ids_ref = serve_topk(gate_w, table, calib_h, k, kernel="jnp")
+    _, ids_q = serve_topk(gate_w, qt_all, calib_h, k, kernel="jnp")
+    eidx = np.asarray(jax.device_get(top1_gate(gate_w, calib_h)[0]))
+    flips = np.asarray(jax.device_get(
+        (ids_ref != ids_q).any(axis=1)
+    ))
+    K = table.ids.shape[0]
+    tok_e = np.bincount(eidx, minlength=K).astype(np.int64)
+    flip_e = np.bincount(eidx, weights=flips.astype(np.float64), minlength=K)
+    rate = flip_e / np.maximum(tok_e, 1)
+    fb = rate > flip_threshold
+    qtable = quantize_table(table, fb_mask=fb) if fb.any() else qt_all
+    unguarded = int(flips[~fb[eidx]].sum())
+    report = ExactnessReport(
+        n_tokens=int(calib_h.shape[0]),
+        n_flips_raw=int(flips.sum()),
+        n_unguarded_flips=unguarded,
+        flip_threshold=float(flip_threshold),
+        per_expert_flip_rate=tuple(float(r) for r in rate),
+        fallback_experts=tuple(int(e) for e in np.nonzero(fb)[0]),
+    )
+    return qtable, report
+
+
 def as_serve_table(table):
     """Unwrap a versioned table resource to its CURRENT table.
 
     Duck-typed so ``core`` need not import ``repro.serve``: anything
-    exposing a ``.table`` attribute that is a :class:`ServeTable`
-    (``repro.serve.table_manager.TableResource``) unwraps to it; a raw
-    ``ServeTable`` (or a non-DS head state) passes through unchanged.
-    Serving entry points call this, so a swappable resource can stand in
-    anywhere a packed table is accepted. The unwrap runs at trace time —
-    a jitted wrapper rebuilt after a swap (``ServeSession.swap_table``)
-    prices the current ``(K, V_pad)``, never a stale version.
+    exposing a ``.table`` attribute that is a :class:`ServeTable` or
+    :class:`QuantizedServeTable` (``repro.serve.table_manager.
+    TableResource``) unwraps to it; a raw table (or a non-DS head state)
+    passes through unchanged. Serving entry points call this, so a
+    swappable resource can stand in anywhere a packed table is accepted.
+    The unwrap runs at trace time — a jitted wrapper rebuilt after a
+    swap (``ServeSession.swap_table``) prices the current
+    ``(K, V_pad)`` and dtype, never a stale version.
     """
     inner = getattr(table, "table", None)
-    return inner if isinstance(inner, ServeTable) else table
+    return (inner if isinstance(inner, (ServeTable, QuantizedServeTable))
+            else table)
 
 
 def _round_up(x: int, m: int = 128) -> int:
     return ((x + m - 1) // m) * m
 
 
-def pack_experts(params, state: DSState, pad: Optional[int] = None) -> ServeTable:
+def pack_experts(params, state: DSState, pad: Optional[int] = None,
+                 quantize: Optional[str] = None):
     """Compact each expert's surviving rows into a padded static table.
 
     ``pad`` must cover the largest expert (``pad >= max_k |v_k|``) —
     a smaller pad would silently drop surviving classes from serving, so
     it raises instead.
 
+    ``quantize='int8'`` returns a :class:`QuantizedServeTable` (int8 rows
+    + per-row fp32 scales, no fallback experts — run the packed table
+    through :func:`calibrate_quantized_table` for the gated
+    mixed-precision variant).
+
     NOTE: sizes come from the concrete mask, so this runs outside jit
     (it is a one-off packing step after training / checkpoint load).
     """
+    if quantize not in (None, "int8"):
+        raise ValueError(
+            f"pack_experts quantize={quantize!r}: only 'int8' is supported"
+        )
     mask = jax.device_get(state.mask)
     w = jax.device_get(params["experts"])
     K, N, d = w.shape
@@ -462,7 +655,8 @@ def pack_experts(params, state: DSState, pad: Optional[int] = None) -> ServeTabl
         idx = np.nonzero(mask[k])[0]
         ids[k, : len(idx)] = idx
         weights[k, : len(idx)] = w[k, idx]
-    return ServeTable(ids=jnp.asarray(ids), weights=jnp.asarray(weights))
+    table = ServeTable(ids=jnp.asarray(ids), weights=jnp.asarray(weights))
+    return quantize_table(table) if quantize == "int8" else table
 
 
 def serve_kernel_context(
@@ -473,9 +667,17 @@ def serve_kernel_context(
     ``serve_topk`` call site (shapes are trace-time constants, so policies
     resolve per distinct call-site shape — prefill vs decode differ).
     ``ep``/``ndata`` are the expert-parallel and batch-shard degrees of a
-    sharded call site (1 on a single device)."""
+    sharded call site (1 on a single device).
+
+    ``wbytes`` always derives from the ACTUAL table row dtype (1 for an
+    int8 :class:`QuantizedServeTable`, whose ``quantized`` flag also
+    adds the scale-read bytes to the registry's cost model) — every
+    serve entry point (local, sharded, head) builds its context here, so
+    the bytes model can never drift from what the kernel reads."""
     from repro.kernels.registry import KernelContext
 
+    quantized = isinstance(table, QuantizedServeTable)
+    rows = table.qweights if quantized else table.weights
     return KernelContext(
         B=h.shape[0],
         d=h.shape[1],
@@ -484,10 +686,11 @@ def serve_kernel_context(
         k=k,
         backend=jax.default_backend(),
         capacity_factor=capacity_factor,
-        wbytes=jnp.dtype(table.weights.dtype).itemsize,
+        wbytes=jnp.dtype(rows.dtype).itemsize,
         hbytes=jnp.dtype(h.dtype).itemsize,
         ep=ep,
         ndata=ndata,
+        quantized=quantized,
     )
 
 
@@ -518,6 +721,10 @@ def serve_topk(
                        grouped dispatch feeds (block_b, d)×(d, block_v) MXU
                        matmuls with a running top-k carried in VMEM; only
                        O(B·k) values/ids reach HBM. Production serving path.
+    kernel='pallas_fused' — gate→dispatch→retrieve in ONE Pallas launch:
+                       the (K, d) gate matvec + top-1 selection run in the
+                       kernel prologue (VMEM), so no dispatch indices ever
+                       round-trip through HBM. Quantized decode default.
     kernel='auto'    — ``AutoPolicy``: cheapest feasible path by the
                        registry's bytes-moved model (per-token at B ≲ K,
                        grouped at B ≫ K; Pallas paths only on TPU).
@@ -545,6 +752,9 @@ def serve_topk(
             "pass a mesh through ServeSession)"
         )
     h = constrain_batch(h)
+    if get_spec(kernel).fused:
+        # gating happens inside the kernel prologue — no XLA pre-pass
+        return _serve_topk_fused(gate_w, table, h, k, with_stats=with_stats)
     expert_idx, g, _ = top1_gate(gate_w, h)
     return _serve_topk_local(
         table, h, expert_idx, g, k, kernel, capacity_factor=capacity_factor,
@@ -591,9 +801,13 @@ def _serve_topk_local(
             f"registered serve kernel {kernel!r} has no dispatch branch"
         )
     else:
-        w_sel = constrain(table.weights[expert_idx], BATCH, "model", None)  # (B,V_pad,d)
-        ids_sel = constrain(table.ids[expert_idx], BATCH, "model")  # (B, V_pad)
-        z = jnp.einsum("bvd,bd->bv", w_sel, h, preferred_element_type=jnp.float32)
+        if isinstance(table, QuantizedServeTable):
+            z, ids_sel = _exact_rows_logits(table, expert_idx, h)
+            ids_sel = constrain(ids_sel, BATCH, "model")
+        else:
+            w_sel = constrain(table.weights[expert_idx], BATCH, "model", None)  # (B,V_pad,d)
+            ids_sel = constrain(table.ids[expert_idx], BATCH, "model")  # (B, V_pad)
+            z = jnp.einsum("bvd,bd->bv", w_sel, h, preferred_element_type=jnp.float32)
         z = constrain(z, BATCH, "model")
         z = z * g[:, None]
         z = jnp.where(ids_sel >= 0, z, NEG_INF)
@@ -611,6 +825,35 @@ def _serve_topk_local(
     if overflow is None:
         overflow = jnp.zeros((K,), jnp.int32)
     return vals, ids, {"dispatched": dispatched, "overflow": overflow}
+
+
+def _exact_rows_logits(table, expert_idx: jax.Array, h: jax.Array):
+    """Per-token gather-path logits: (B, V_pad) fp32 UN-gated ``z`` plus the
+    gathered (B, V_pad) row ids, for both table kinds.
+
+    Quantized rule (every path must match it bit-for-bit so the kernel,
+    grouped-XLA and gather paths emit identical ids): cast the int8 rows
+    to the token dtype, matmul with fp32 accumulation, THEN apply the
+    per-row scale to the accumulator — never pre-multiply ``q·s`` into
+    the operand, which reassociates the rounding. Fallback experts'
+    tokens get their exact full-precision rows instead.
+    """
+    ids_sel = table.ids[expert_idx]
+    if isinstance(table, QuantizedServeTable):
+        q_sel = table.qweights[expert_idx]  # (B, V_pad, d) int8
+        z = jnp.einsum("bvd,bd->bv", q_sel.astype(h.dtype), h,
+                       preferred_element_type=jnp.float32)
+        z = z * table.scales[expert_idx]
+        if table.n_fallback:
+            row = table.fb_index[expert_idx]  # (B,) -1 = int8-served
+            w_fb = table.fb_weights[jnp.maximum(row, 0)]
+            z_fb = jnp.einsum("bvd,bd->bv", w_fb, h,
+                              preferred_element_type=jnp.float32)
+            z = jnp.where((row >= 0)[:, None], z_fb, z)
+    else:
+        z = jnp.einsum("bvd,bd->bv", table.weights[expert_idx], h,
+                       preferred_element_type=jnp.float32)
+    return z, ids_sel
 
 
 def _group_tokens(h: jax.Array, g: jax.Array, expert_idx: jax.Array,
@@ -633,17 +876,19 @@ def _group_tokens(h: jax.Array, g: jax.Array, expert_idx: jax.Array,
     return buf, g_buf, slot, valid
 
 
-def _overflow_fixup(table: ServeTable, h, g, expert_idx, valid, vals, ids, k,
+def _overflow_fixup(table, h, g, expert_idx, valid, vals, ids, k,
                     capacity: int):
-    """Exact fallback for capacity-overflow tokens via the gather path,
-    processed in fixed O-slot chunks inside a dynamic-trip-count loop:
-    cost O(ceil(n_over/O)·O·V_pad·d) — proportional to the *actual* overflow
-    (zero loop iterations when nothing overflowed), never B·V_pad·d unless
-    everything did. O = min(B, max(capacity, K)): one expert capacity in the
-    large-batch regime, ~one slot per expert when B ≲ K (where capacity
-    rounds to 1 and overflow is dominated by experts receiving a second
-    token). Every overflowed token is fixed up exactly, however skewed the
-    gate distribution."""
+    """Exact fallback for ~valid tokens via the gather path (capacity
+    overflow, and on quantized tables the tokens of full-precision
+    fallback experts), processed in fixed O-slot chunks inside a
+    dynamic-trip-count loop: cost O(ceil(n_over/O)·O·V_pad·d) —
+    proportional to the *actual* overflow (zero loop iterations when
+    nothing overflowed), never B·V_pad·d unless everything did.
+    O = min(B, max(capacity, K)): one expert capacity in the large-batch
+    regime, ~one slot per expert when B ≲ K (where capacity rounds to 1
+    and overflow is dominated by experts receiving a second token).
+    Every overflowed token is fixed up exactly, however skewed the gate
+    distribution."""
     B = h.shape[0]
     K = table.ids.shape[0]
     O = min(B, max(capacity, K))
@@ -657,9 +902,7 @@ def _overflow_fixup(table: ServeTable, h, g, expert_idx, valid, vals, ids, k,
         idx = jax.lax.dynamic_slice(over_all, (c * O,), (O,))  # (O,)
         take = jnp.minimum(idx, B - 1)  # clamp sentinel rows for the GATHERS
         h_o = h[take]
-        w_o = table.weights[expert_idx[take]]  # (O, V_pad, d)
-        ids_o = table.ids[expert_idx[take]]
-        z_o = jnp.einsum("ovd,od->ov", w_o, h_o, preferred_element_type=jnp.float32)
+        z_o, ids_o = _exact_rows_logits(table, expert_idx[take], h_o)
         z_o = z_o * g[take][:, None]
         z_o = jnp.where(ids_o >= 0, z_o, NEG_INF)
         v_o, p_o = jax.lax.top_k(z_o, k)
@@ -676,7 +919,7 @@ def _overflow_fixup(table: ServeTable, h, g, expert_idx, valid, vals, ids, k,
 
 
 def _serve_topk_grouped(
-    table: ServeTable, h: jax.Array, expert_idx: jax.Array, g: jax.Array, k: int,
+    table, h: jax.Array, expert_idx: jax.Array, g: jax.Array, k: int,
     capacity_factor: float = 2.0, use_pallas: bool = False,
     owned: Optional[jax.Array] = None, n_experts_global: Optional[int] = None,
 ):
@@ -705,14 +948,30 @@ def _serve_topk_grouped(
     from repro.core.dispatch import dispatch_load
     from repro.distributed.hints import constrain
 
+    quantized = isinstance(table, QuantizedServeTable)
+    rows = table.qweights if quantized else table.weights
     B, d = h.shape
-    K, v_pad, _ = table.weights.shape
+    K, v_pad, _ = rows.shape
     capacity = int(max(1, round(B / (n_experts_global or K) * capacity_factor)))
     e_disp = expert_idx if owned is None else jnp.where(owned, expert_idx, K)
+    fb_tok = None
+    if quantized and table.n_fallback:
+        # Mixed-precision rows: tokens of full-precision fallback experts
+        # route to the out-of-range sentinel K BEFORE dispatch, so they
+        # skip the int8 buffers AND the overflow telemetry (dispatch_load
+        # drops out-of-range ids — paying the exact gather fixup is by
+        # design here, not capacity pressure, and must never trip the
+        # serving overflow breaker).
+        fb_tok = table.fb_index[expert_idx] >= 0
+        if owned is not None:
+            fb_tok = fb_tok & owned
+        e_disp = jnp.where(fb_tok, K, e_disp)
     buf, g_buf, slot, valid = _group_tokens(h, g, e_disp, K, capacity)
     # overflow telemetry BEFORE non-owned tokens are masked valid — it must
     # count exactly the owned tokens that pay the fixup on this shard
     _, overflow = dispatch_load(e_disp, K, valid)
+    if fb_tok is not None:
+        valid = valid & ~fb_tok  # fallback experts always take the gather path
     if owned is not None:
         valid = valid | ~owned  # never fix up a token another shard owns
 
@@ -720,12 +979,17 @@ def _serve_topk_grouped(
         from repro.kernels import ops as kops
 
         vals_b, ids_b = kops.dss_topk_grouped(
-            table.weights, table.ids, buf, g_buf, k
+            rows, table.ids, buf, g_buf, k,
+            scales=table.scales if quantized else None,
         )  # (K, C, k) each — no per-block candidate spill
     else:
-        z = jnp.einsum("kcd,kvd->kcv", buf, table.weights,
+        z = jnp.einsum("kcd,kvd->kcv",
+                       buf, rows.astype(buf.dtype) if quantized else rows,
                        preferred_element_type=jnp.float32)  # (K, C, V_pad)
         z = constrain(z, None, None, "model")
+        if quantized:
+            # per-row dequant scale on the fp32 accumulator (like g below)
+            z = z * table.scales[:, None, :]
         z = z * g_buf[..., None]
         z = jnp.where(table.ids[:, None, :] >= 0, z, NEG_INF)
         vals_b, pos_b = jax.lax.top_k(z, k)  # (K, C, k)
@@ -739,11 +1003,47 @@ def _serve_topk_grouped(
     return vals, ids, overflow
 
 
+def _serve_topk_fused(gate_w, table, h: jax.Array, k: int, *,
+                      with_stats: bool = False):
+    """Single-launch decode: gate matvec, top-1 dispatch and expert-row
+    retrieval all inside ``kernels.dss_topk_fused`` — no dispatch-index
+    intermediate ever reaches HBM (asserted by a jaxpr walk in the tests).
+
+    On a quantized table with fallback experts, those tokens are fixed up
+    exactly outside the kernel via the bounded gather loop — the branch is
+    trace-time static (``n_fallback`` is a shape), so a gate-clean table
+    compiles to exactly one kernel launch plus the O(B·k) epilogue.
+    """
+    from repro.core.dispatch import dispatch_load
+    from repro.kernels import ops as kops
+
+    quantized = isinstance(table, QuantizedServeTable)
+    rows = table.qweights if quantized else table.weights
+    vals, ids, eidx = kops.dss_topk_fused(
+        gate_w, rows, table.ids, h, k,
+        scales=table.scales if quantized else None,
+    )
+    if quantized and table.n_fallback:
+        fb_tok = table.fb_index[eidx] >= 0
+        _, g, _ = top1_gate(gate_w, h)  # O(B·K) — tiny next to the table read
+        vals, ids = _overflow_fixup(
+            table, h, g, eidx, ~fb_tok, vals, ids, k, capacity=1
+        )
+    if not with_stats:
+        return vals, ids
+    K = table.ids.shape[0]
+    dispatched, _ = dispatch_load(eidx, K)
+    return vals, ids, {
+        "dispatched": dispatched,
+        "overflow": jnp.zeros((K,), jnp.int32),  # capacity-free path
+    }
+
+
 # ---------------------------------------------------------------------------
 # Expert-parallel sharded serving (see module docstring for the protocol)
 # ---------------------------------------------------------------------------
 
-def _pad_table_experts(table: ServeTable, ep: int) -> ServeTable:
+def _pad_table_experts(table, ep: int):
     """Append all-padding dummy experts so K divides ``ep`` (static shapes;
     gating never routes to them — the gate matrix keeps the real K rows)."""
     K = table.ids.shape[0]
@@ -751,10 +1051,28 @@ def _pad_table_experts(table: ServeTable, ep: int) -> ServeTable:
     if K_pad == K:
         return table
     n = K_pad - K
+    ids = jnp.concatenate(
+        [table.ids, jnp.full((n, table.v_pad), -1, table.ids.dtype)]
+    )
+    if isinstance(table, QuantizedServeTable):
+        return QuantizedServeTable(
+            ids=ids,
+            qweights=jnp.concatenate(
+                [table.qweights,
+                 jnp.zeros((n,) + table.qweights.shape[1:],
+                           table.qweights.dtype)]
+            ),
+            # scale 1.0 on dummy rows keeps dequant well-defined
+            scales=jnp.concatenate(
+                [table.scales, jnp.ones((n, table.v_pad), table.scales.dtype)]
+            ),
+            fb_index=jnp.concatenate(
+                [table.fb_index, jnp.full((n,), -1, table.fb_index.dtype)]
+            ),
+            fb_weights=table.fb_weights,
+        )
     return ServeTable(
-        ids=jnp.concatenate(
-            [table.ids, jnp.full((n, table.v_pad), -1, table.ids.dtype)]
-        ),
+        ids=ids,
         weights=jnp.concatenate(
             [table.weights,
              jnp.zeros((n,) + table.weights.shape[1:], table.weights.dtype)]
@@ -772,16 +1090,38 @@ def _mesh_degrees(mesh) -> tuple[int, int]:
     return ep, ndata
 
 
-def shard_table(table: ServeTable, mesh) -> ServeTable:
-    """Expert-parallel placement of a packed :class:`ServeTable`.
+def _table_pspecs(table):
+    """Per-field ``shard_map`` PartitionSpecs for a serve table pytree:
+    expert rows (and, when quantized, their scales and fallback index)
+    split over ``model``; the exact fallback rows replicate —
+    ``fb_index`` holds global rows into them, so every shard can gather
+    its own fallback experts' weights locally."""
+    from jax.sharding import PartitionSpec as P
+
+    if isinstance(table, QuantizedServeTable):
+        return QuantizedServeTable(
+            ids=P("model", None),
+            qweights=P("model", None, None),
+            scales=P("model", None),
+            fb_index=P("model"),
+            fb_weights=P(None, None, None),
+        )
+    return ServeTable(ids=P("model", None), weights=P("model", None, None))
+
+
+def shard_table(table, mesh):
+    """Expert-parallel placement of a packed serve table (either kind).
 
     Pads K to a multiple of the ``model`` axis and places experts
     ``K → model`` (each device stores K/ep experts' packed rows — the
     serve-table analogue of the MoE EP rule in
-    ``distributed.sharding``). The ``data``/``pod`` axes shard tokens at
-    call time, so the table replicates over them: its second dim stays
-    whole per device, keeping every per-device kernel unchanged and the
-    wire traffic at the O(B·k) merge carries.
+    ``distributed.sharding``). Quantized tables shard their per-row
+    scales and ``fb_index`` with the expert rows; the (small) exact
+    fallback rows replicate, since ``fb_index`` holds GLOBAL rows into
+    them. The ``data``/``pod`` axes shard tokens at call time, so the
+    table replicates over them: its second dim stays whole per device,
+    keeping every per-device kernel unchanged and the wire traffic at
+    the O(B·k) merge carries.
     """
     from repro.distributed.sharding import serve_table_ep_shardings
 
@@ -820,6 +1160,7 @@ def serve_topk_sharded(
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
+    from repro.core.dispatch import dispatch_load
     from repro.kernels.registry import get_spec, resolve_kernel
 
     table = as_serve_table(table)
@@ -841,24 +1182,55 @@ def serve_topk_sharded(
     )
     spec = get_spec(name)
     local_kernel = spec.local_name or spec.name
+    fused = spec.fused
 
     batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     bspec = batch_ax if (batch_ax and b_split > 1) else None
 
-    def body(gate_w, ids, weights, h):
-        tbl = ServeTable(ids=ids, weights=weights)
-        # 1. gating replicated (per data-shard rows; agrees across model)
-        expert_idx, g, _ = top1_gate(gate_w, h)
+    def body(gate_w, tbl, h):
         lo = jax.lax.axis_index("model") * K_loc
-        owned = (expert_idx >= lo) & (expert_idx < lo + K_loc)
-        e_loc = jnp.clip(expert_idx - lo, 0, K_loc - 1)
-        # 2. owner-local retrieval with the unchanged per-device kernel
-        loc = _serve_topk_local(
-            tbl, h, e_loc, g, k, local_kernel,
-            capacity_factor=capacity_factor, owned=owned,
-            n_experts_global=K_pad, with_stats=with_stats,
-        )
-        vals, ids_out = loc[0], loc[1]
+        if fused:
+            # gate + dispatch run INSIDE the kernel over the full gate
+            # matrix (replicated), so every shard agrees on the global
+            # top-1 expert; e_base offsets the local expert-row slice.
+            from repro.kernels import ops as kops
+
+            quantized = isinstance(tbl, QuantizedServeTable)
+            rows = tbl.qweights if quantized else tbl.weights
+            vals, ids_out, expert_idx = kops.dss_topk_fused(
+                gate_w, rows, tbl.ids, h, k,
+                scales=tbl.scales if quantized else None,
+                e_base=jnp.reshape(lo, (1,)).astype(jnp.int32),
+            )
+            owned = (expert_idx >= lo) & (expert_idx < lo + K_loc)
+            vals = jnp.where(owned[:, None], vals, NEG_INF)
+            ids_out = jnp.where(owned[:, None], ids_out, -1)
+            if quantized and tbl.n_fallback:
+                e_loc = jnp.clip(expert_idx - lo, 0, K_loc - 1)
+                fb_tok = owned & (tbl.fb_index[e_loc] >= 0)
+                _, g, _ = top1_gate(gate_w, h)
+                vals, ids_out = _overflow_fixup(
+                    tbl, h, g, e_loc, ~fb_tok, vals, ids_out, k, capacity=1
+                )
+            if with_stats:
+                disp, _ = dispatch_load(
+                    jnp.where(owned, expert_idx - lo, K_loc), K_loc
+                )
+                loc = (None, None,
+                       {"dispatched": disp,
+                        "overflow": jnp.zeros((K_loc,), jnp.int32)})
+        else:
+            # 1. gating replicated (per data-shard rows; agrees across model)
+            expert_idx, g, _ = top1_gate(gate_w, h)
+            owned = (expert_idx >= lo) & (expert_idx < lo + K_loc)
+            e_loc = jnp.clip(expert_idx - lo, 0, K_loc - 1)
+            # 2. owner-local retrieval with the unchanged per-device kernel
+            loc = _serve_topk_local(
+                tbl, h, e_loc, g, k, local_kernel,
+                capacity_factor=capacity_factor, owned=owned,
+                n_experts_global=K_pad, with_stats=with_stats,
+            )
+            vals, ids_out = loc[0], loc[1]
         # 3. O(B·k) merge: gather the carries, select each token's owner
         vals_all = jax.lax.all_gather(vals, "model")      # (ep, B_loc, k)
         ids_all = jax.lax.all_gather(ids_out, "model")
@@ -877,12 +1249,11 @@ def serve_topk_sharded(
     stat = P("model")  # shards own disjoint K_loc expert rows → concat
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P("model", None), P("model", None, None),
-                  P(bspec, None)),
+        in_specs=(P(), _table_pspecs(table), P(bspec, None)),
         out_specs=(out, out) + ((stat, stat) if with_stats else ()),
         check_rep=False,
     )
-    res = fn(gate_w, table.ids, table.weights, h)
+    res = fn(gate_w, table, h)
     if not with_stats:
         return res
     vals, ids_out, disp, over = res
@@ -896,9 +1267,13 @@ def serve_full_probs(
     chosen expert's surviving classes). For evaluation/debug. (B, N)."""
     table = as_serve_table(table)
     expert_idx, g, _ = top1_gate(gate_w, h)
-    w_sel = table.weights[expert_idx]
-    ids_sel = table.ids[expert_idx]
-    z = jnp.einsum("bvd,bd->bv", w_sel.astype(jnp.float32), h.astype(jnp.float32)) * g[:, None]
+    if isinstance(table, QuantizedServeTable):
+        z, ids_sel = _exact_rows_logits(table, expert_idx, h.astype(jnp.float32))
+        z = z * g[:, None]
+    else:
+        w_sel = table.weights[expert_idx]
+        ids_sel = table.ids[expert_idx]
+        z = jnp.einsum("bvd,bd->bv", w_sel.astype(jnp.float32), h.astype(jnp.float32)) * g[:, None]
     z = jnp.where(ids_sel >= 0, z, NEG_INF)
     p = jax.nn.softmax(z, axis=-1)
     out = jnp.zeros((h.shape[0], n_classes), jnp.float32)

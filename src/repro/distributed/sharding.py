@@ -225,7 +225,17 @@ def serve_table_shardings(mesh: Mesh, table) -> Any:
 
     This is the TRAIN-style vocab-TP layout (dry-run memory estimates).
     The expert-parallel serving path uses :func:`serve_table_ep_shardings`.
+    Quantized tables shard qweights/scales like weights/ids; the (small)
+    fallback rows stay replicated.
     """
+    if hasattr(table, "qweights"):
+        return type(table)(
+            ids=NamedSharding(mesh, P(None, "model")),
+            qweights=NamedSharding(mesh, P(None, "model", "data")),
+            scales=NamedSharding(mesh, P(None, "model")),
+            fb_index=NamedSharding(mesh, P(None)),
+            fb_weights=NamedSharding(mesh, P(None, None, None)),
+        )
     return type(table)(
         ids=NamedSharding(mesh, P(None, "model")),
         weights=NamedSharding(mesh, P(None, "model", "data")),
@@ -240,7 +250,19 @@ def serve_table_ep_shardings(mesh: Mesh, table) -> Any:
     (``core.dssoftmax.shard_table`` pads it). The specs are
     shape-agnostic over K and V_pad, so the same rule re-places every
     hot-swapped table ``ServeSession.swap_table`` pushes through
-    ``shard_table`` — swaps never need new sharding plumbing."""
+    ``shard_table`` — swaps never need new sharding plumbing.
+
+    Quantized tables: the int8 rows + per-row scales follow the expert
+    axis; ``fb_weights`` is REPLICATED (``fb_index`` values are global
+    rows into it, and it holds at most a few experts' fp rows)."""
+    if hasattr(table, "qweights"):
+        return type(table)(
+            ids=NamedSharding(mesh, P("model", None)),
+            qweights=NamedSharding(mesh, P("model", None, None)),
+            scales=NamedSharding(mesh, P("model", None)),
+            fb_index=NamedSharding(mesh, P("model")),
+            fb_weights=NamedSharding(mesh, P(None, None, None)),
+        )
     return type(table)(
         ids=NamedSharding(mesh, P("model", None)),
         weights=NamedSharding(mesh, P("model", None, None)),

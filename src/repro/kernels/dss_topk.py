@@ -7,16 +7,26 @@ in-VMEM per-block top-k. A host-side merge over the spilled
 ``(B, n_blocks, k)`` candidates yields the exact global top-k.
 
 Kernel-path matrix for ``core.dssoftmax.serve_topk`` (B tokens, K experts,
-V_pad packed rows/expert, d features, wb weight bytes/elem):
+V_pad packed rows/expert, d features, wb weight bytes/elem — 4/2 for
+fp32/bf16 tables, 1 for an int8 ``QuantizedServeTable``, which adds a
+4-byte fp32 scale per packed row, amortized over d; the legacy ``pallas``
+path has no scales operand and is infeasible on quantized tables):
 
-    path            engine   expert-row HBM reads   extra HBM traffic
-    --------------  -------  ---------------------  ----------------------------
-    jnp             XLA      B·V_pad·d·wb (/token)  (B,V_pad,d) gather material.
-    grouped         XLA      K·V_pad·d·wb (/expert) (K,C,V_pad) fp32 logit spill
-    pallas (this)   Pallas   B·V_pad·d·wb (/token)  (B,n_blocks,k) candidates
-                                                    + second XLA top_k merge
-    pallas_grouped  Pallas   K·V_pad·d·wb (/expert) none — top-k carried in
-                                                    VMEM, only O(B·k) outputs
+    path            engine   expert-row HBM reads    extra HBM traffic
+    --------------  -------  ----------------------  ---------------------------
+    jnp             XLA      B·V_pad·d·wb (/token)   (B,V_pad,d) gather material.
+    grouped         XLA      K·V_pad·d·wb (/expert)  (K,C,V_pad) fp32 logit spill
+                                                     + (K,C,d) dispatch
+                                                     round-trip
+    pallas (this)   Pallas   B·V_pad·d·wb (/token)   (B,n_blocks,k) candidates
+                                                     + second XLA top_k merge
+    pallas_grouped  Pallas   K·V_pad·d·wb (/expert)  (K,C,d) dispatch round-trip
+                                                     — top-k carried in VMEM,
+                                                     only O(B·k) outputs
+    pallas_fused    Pallas   ⌈B/bb⌉·K·V_pad·d·wb     none — gate matvec + top-1
+                    (one     (/token-BLOCK; = one    selection run in the kernel
+                    launch)  table pass at B ≤ bb)   prologue, no dispatch
+                                                     indices ever reach HBM
 
 Roofline argument: serving is memory-bound, so bytes-per-expert beats
 bytes-per-token as soon as tokens share experts (B > K, i.e. any real
@@ -34,8 +44,12 @@ When each path wins:
 * ``grouped`` — CPU/GPU serving via plain XLA; beats ``jnp`` wall-clock
   once B ≫ K (measured in ``benchmarks/serve_topk.py``), pays a
   (K,C,V_pad) logit spill the fused kernel avoids.
-* ``pallas`` — TPU, B ≲ K decode edge case.
-* ``pallas_grouped`` — TPU production serving default (ServeSession).
+* ``pallas`` — TPU, B ≲ K decode edge case; fp tables only.
+* ``pallas_grouped`` — TPU large-batch serving default (ServeSession
+  prefill / big batches); int8 rows dequantize in-register.
+* ``pallas_fused`` — TPU decode (B ≲ bb = one token block): single
+  launch, in-kernel gating, whole decode step in one table pass —
+  skips the grouped path's (K,C,d)+(K,C) dispatch round-trip.
 """
 from __future__ import annotations
 

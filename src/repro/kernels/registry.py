@@ -42,10 +42,20 @@ sharded name to the single-device ``serve_topk`` or vice versa.
 
 Calibration (closing the ROADMAP open item): pass
 ``AutoPolicy(calibration=load_bench_calibration())`` to replace the unit
-bytes-are-time assumption with measured µs/byte per (backend, path) from
-``BENCH_serve_topk.json``. Scores switch to estimated µs only when every
-feasible path is calibrated — mixing measured and modeled scales would be
-incoherent — and modeled bytes remain the fallback.
+bytes-are-time assumption with measured µs/byte per (backend, path,
+wbytes) from ``BENCH_serve_topk.json`` (the ``wbytes`` key keeps int8 /
+bf16 / fp32 measurements from mixing). Scores switch to estimated µs only
+when every feasible path is calibrated at the call site's ``wbytes`` —
+mixing measured and modeled scales would be incoherent — and modeled
+bytes remain the fallback.
+
+Quantized serving (PR 9): ``KernelContext.quantized`` marks an int8
+table (``wbytes == 1`` + per-row fp32 scales, priced by the cost
+formulas); specs with ``quantized_ok=False`` (the legacy per-token
+``pallas`` path) are infeasible there. The ``pallas_fused`` spec is the
+single-launch gate→dispatch→retrieve decode kernel — its cost model has
+no dispatch round-trip term, which is exactly why AutoPolicy picks it at
+decode shapes (B ≳ K, one 128-row token block).
 """
 from __future__ import annotations
 
@@ -102,6 +112,7 @@ class KernelContext:
     hbytes: int = 4
     ep: int = 1               # expert-parallel degree (mesh 'model' axis)
     ndata: int = 1            # batch-shard degree (mesh 'pod'×'data' axes)
+    quantized: bool = False   # int8 rows + per-row fp32 scales (wbytes == 1)
 
     @property
     def capacity(self) -> int:
@@ -153,6 +164,8 @@ class KernelSpec:
                                                 default=lambda c: 0)
     sharded: bool = False          # expert-parallel shard_map execution
     local_name: Optional[str] = None  # per-device kernel a sharded spec runs
+    fused: bool = False            # in-kernel gating (no XLA dispatch pre-pass)
+    quantized_ok: bool = True      # can serve int8 rows + per-row scales
 
     def supports(self, backend: str) -> bool:
         return self.backends is None or backend in self.backends
@@ -160,8 +173,10 @@ class KernelSpec:
     def feasible(self, ctx: KernelContext) -> bool:
         """Runnable at this call site: backend-native AND matching the
         call's sharding (sharded specs need ep > 1; base specs need the
-        single-device path)."""
-        return self.supports(ctx.backend) and self.sharded == (ctx.ep > 1)
+        single-device path) AND able to serve the table's precision."""
+        return (self.supports(ctx.backend)
+                and self.sharded == (ctx.ep > 1)
+                and (self.quantized_ok or not ctx.quantized))
 
     def bytes_moved(self, ctx: KernelContext) -> int:
         """Per-device HBM bytes the path moves for one call at ``ctx``."""
@@ -227,16 +242,20 @@ class AutoPolicy(KernelPolicy):
     ``history=[]`` to record ``(B, chosen)`` per *resolution* — i.e. once
     per jit trace, which is exactly once per distinct call-site shape.
 
-    ``calibration`` maps ``(backend, base_path) -> measured µs/byte``
-    (build one with :func:`load_bench_calibration`). When EVERY feasible
-    path at a call site is calibrated, scores become estimated µs
-    (measured HBM rate per path + the ICI penalty on the merge bytes);
-    otherwise modeled bytes remain the fallback for all of them — mixing
-    measured and modeled scales would make the comparison incoherent.
+    ``calibration`` maps ``(backend, base_path, wbytes) -> measured
+    µs/byte`` (build one with :func:`load_bench_calibration`). The
+    ``wbytes`` key keeps int8 / bf16 / fp32 measurements separate — a
+    µs/byte rate measured streaming 4-byte rows must never price a
+    1-byte table (different arithmetic intensity per byte). When EVERY
+    feasible path at a call site is calibrated at the call site's
+    ``wbytes``, scores become estimated µs (measured HBM rate per path +
+    the ICI penalty on the merge bytes); otherwise modeled bytes remain
+    the fallback for all of them — mixing measured and modeled scales
+    would make the comparison incoherent.
     """
 
     def __init__(self, history: Optional[List[Tuple[int, str]]] = None,
-                 calibration: Optional[Dict[Tuple[str, str], float]] = None):
+                 calibration: Optional[Dict[Tuple[str, str, int], float]] = None):
         self.history = history
         self.calibration = calibration
 
@@ -244,7 +263,9 @@ class AutoPolicy(KernelPolicy):
                upb_ici: Optional[float]) -> float:
         hbm, ici = spec.bytes_moved(ctx), spec.ici_bytes(ctx)
         if upb_ici is not None:
-            upb = self.calibration[(ctx.backend, spec.local_name or spec.name)]
+            upb = self.calibration[
+                (ctx.backend, spec.local_name or spec.name, ctx.wbytes)
+            ]
             return hbm * upb + ici * upb_ici
         return hbm + ici * ICI_HBM_BYTE_RATIO
 
@@ -254,7 +275,7 @@ class AutoPolicy(KernelPolicy):
             raise ValueError(f"no serve kernel supports backend {ctx.backend!r}")
         upb_ici = None
         if self.calibration is not None and all(
-            (ctx.backend, s.local_name or s.name) in self.calibration
+            (ctx.backend, s.local_name or s.name, ctx.wbytes) in self.calibration
             for s in feasible
         ):
             # One interconnect rate for everyone: the merge traffic is the
@@ -263,7 +284,7 @@ class AutoPolicy(KernelPolicy):
             # proxy), never off each path's own — a slow local kernel must
             # not have identical ICI bytes scored as costlier.
             upb_ici = ICI_HBM_BYTE_RATIO * min(
-                upb for (be, _), upb in self.calibration.items()
+                upb for (be, _, _), upb in self.calibration.items()
                 if be == ctx.backend
             )
         best = min(feasible,
@@ -275,15 +296,18 @@ class AutoPolicy(KernelPolicy):
 
 def load_bench_calibration(
     path: str = "BENCH_serve_topk.json",
-) -> Optional[Dict[Tuple[str, str], float]]:
-    """Measured µs/byte per (backend, path) from a serve_topk sweep.
+) -> Optional[Dict[Tuple[str, str, int], float]]:
+    """Measured µs/byte per (backend, path, wbytes) from a serve_topk sweep.
 
-    Reads the benchmark's rows (each carries ``us`` wall time and the
-    registry's own ``bytes_model`` for identical shapes) and returns the
-    median µs/byte per path — the per-backend read-rate calibration the
-    ROADMAP asked to feed back into :class:`AutoPolicy`. Returns ``None``
-    when the file is absent or holds no timed rows (modeled bytes stay
-    the fallback), so callers can pass the result straight through:
+    Reads the benchmark's rows (each carries ``us`` wall time, the
+    registry's own ``bytes_model`` for identical shapes, and the table's
+    ``wbytes``) and returns the median µs/byte per key — the per-backend
+    read-rate calibration the ROADMAP asked to feed back into
+    :class:`AutoPolicy`. Keying by ``wbytes`` keeps int8 / bf16 / fp32
+    sweeps apart (rows predating PR 9 carry no ``wbytes`` field and key
+    as the fp32 default 4). Returns ``None`` when the file is absent or
+    holds no timed rows (modeled bytes stay the fallback), so callers
+    can pass the result straight through:
     ``AutoPolicy(calibration=load_bench_calibration())``.
     """
     if not os.path.exists(path):
@@ -294,11 +318,12 @@ def load_bench_calibration(
     except (OSError, ValueError):
         return None
     backend = data.get("config", {}).get("backend", "cpu")
-    rates: Dict[Tuple[str, str], List[float]] = {}
+    rates: Dict[Tuple[str, str, int], List[float]] = {}
     for row in data.get("rows", []):
         us, nbytes = row.get("us"), row.get("bytes_model")
         if us and nbytes:
-            rates.setdefault((backend, row["path"]), []).append(us / nbytes)
+            key = (backend, row["path"], int(row.get("wbytes", 4)))
+            rates.setdefault(key, []).append(us / nbytes)
     if not rates:
         return None
     return {key: sorted(v)[len(v) // 2] for key, v in rates.items()}
@@ -327,35 +352,61 @@ def resolve_kernel(kernel, ctx: KernelContext) -> str:
 
 
 # ---------------------------------------------------------------------------
-# The four serve paths (cost formulas shared with benchmarks/serve_topk.py).
+# The serve paths (cost formulas shared with benchmarks/serve_topk.py).
 # wb/hb = weight/hidden bytes; every formula ends with the O(B·k) outputs.
+# Quantized tables (wb == 1) additionally read the (K, V_pad) fp32 per-row
+# scales alongside the rows they dequantize — priced via _scale_bytes so
+# int8 is never modeled as a free 4×/2× win.
 # ---------------------------------------------------------------------------
+
+def _scale_bytes_grouped(c: KernelContext) -> int:
+    # Per-row fp32 scales stream once alongside the (K, V_pad, d) rows.
+    return c.K * c.v_pad * 4 if c.quantized else 0
+
 
 def _cost_jnp(c: KernelContext) -> int:
     # Expert rows re-read once per TOKEN, *plus* the (B, V_pad, d) gather
     # XLA materializes in HBM before the matvec (write + re-read ≈ 2×).
-    return 2 * c.B * c.v_pad * c.d * c.wbytes + c.B * c.d * c.hbytes + c.out_bytes
+    # Quantized: the gathered (B, V_pad) scales spill + re-read likewise.
+    scale = 2 * c.B * c.v_pad * 4 if c.quantized else 0
+    return (2 * c.B * c.v_pad * c.d * c.wbytes + scale
+            + c.B * c.d * c.hbytes + c.out_bytes)
 
 
 def _cost_grouped(c: KernelContext) -> int:
-    # Rows once per EXPERT + dispatch buffers, but XLA spills the
+    # Rows once per EXPERT + the dispatch round-trip (the (K, C, d) grouped
+    # buffers are scattered to HBM by the pre-pass and re-read by the
+    # matmul — the traffic the fused path deletes), and XLA spills the
     # (K, C, V_pad) fp32 logits to HBM (write + read for the top-k).
-    return (c.K * c.v_pad * c.d * c.wbytes + c.K * c.capacity * c.d * c.hbytes
+    return (c.K * c.v_pad * c.d * c.wbytes + _scale_bytes_grouped(c)
+            + 2 * c.K * c.capacity * c.d * c.hbytes
             + 2 * c.K * c.capacity * c.v_pad * 4 + c.out_bytes)
 
 
 def _cost_pallas(c: KernelContext) -> int:
     # Streams rows per token (no gather spill) but spills per-block top-k
-    # candidates and re-merges.
+    # candidates and re-merges. No int8 variant (quantized_ok=False).
     n_blocks = max(1, c.v_pad // 128)
     return (c.B * c.v_pad * c.d * c.wbytes + c.B * c.d * c.hbytes
             + c.B * n_blocks * c.k * 8 + c.out_bytes)
 
 
 def _cost_pallas_grouped(c: KernelContext) -> int:
-    # Rows once per expert, logits + running top-k never leave VMEM.
-    return (c.K * c.v_pad * c.d * c.wbytes + c.K * c.capacity * c.d * c.hbytes
+    # Rows once per expert + the dispatch round-trip of the grouped
+    # buffers; logits + running top-k never leave VMEM.
+    return (c.K * c.v_pad * c.d * c.wbytes + _scale_bytes_grouped(c)
+            + 2 * c.K * c.capacity * c.d * c.hbytes
             + c.K * c.capacity * c.k * 8 + c.out_bytes)
+
+
+def _cost_pallas_fused(c: KernelContext) -> int:
+    # Gate + dispatch in the kernel prologue: no dispatch round-trip at
+    # all — tokens are read ONCE (B·d) and the whole table streams once
+    # per 128-row token block (decode ⇒ one pass), plus the tiny gate
+    # matrix and the (B,) expert-id telemetry output.
+    passes = -(-c.B // 128)
+    return (passes * (c.K * c.v_pad * c.d * c.wbytes + _scale_bytes_grouped(c))
+            + c.K * c.d * 4 + c.B * c.d * c.hbytes + c.B * 4 + c.out_bytes)
 
 
 register_kernel(KernelSpec(
@@ -375,6 +426,7 @@ register_kernel(KernelSpec(
     cost=_cost_pallas,
     pallas=True,
     backends=("tpu",),
+    quantized_ok=False,
 ))
 register_kernel(KernelSpec(
     name="pallas_grouped",
@@ -383,6 +435,14 @@ register_kernel(KernelSpec(
     grouped=True,
     pallas=True,
     backends=("tpu",),
+))
+register_kernel(KernelSpec(
+    name="pallas_fused",
+    description="single-launch gate→dispatch→retrieve Pallas decode kernel",
+    cost=_cost_pallas_fused,
+    pallas=True,
+    backends=("tpu",),
+    fused=True,
 ))
 
 
@@ -410,6 +470,8 @@ def _register_sharded(base: KernelSpec) -> None:
         ici=_ici_merge,
         sharded=True,
         local_name=base.name,
+        fused=base.fused,
+        quantized_ok=base.quantized_ok,
     ))
 
 

@@ -10,7 +10,9 @@ callback), so a scripted smoke run surfaces poisoned serving. With
 and the report adds the page-arena metrics: pages in use, copy-on-write
 copies, preemptions, and the shared-prefix hit rate / prefill chunks
 saved (give it ``--shared-prefix N --prefill-chunk C`` so there is a
-common system prompt to share).
+common system prompt to share). ``--quantize int8`` serves the DS table
+from int8 rows under the exactness gate and prints the gate report
+(exits non-zero when unguarded id flips survive the fallback).
 """
 import argparse
 import sys
@@ -99,6 +101,20 @@ def main():
     ap.add_argument("--stats-window", type=int, default=128,
                     help="step-stamped per-expert stats window length "
                          "(what the adaptation loop reads)")
+    ap.add_argument("--quantize", default=None, choices=("int8",),
+                    help="serve the DS table from int8 rows + per-row fp32 "
+                         "scales, under the exactness gate (experts whose "
+                         "top-k ids flip vs the fp32 oracle beyond "
+                         "--quantize-flip-threshold fall back to fp rows); "
+                         "the gate report prints after the run and a "
+                         "failing gate exits non-zero")
+    ap.add_argument("--quantize-calib", type=int, default=256,
+                    help="calibration activations drawn for the exactness "
+                         "gate")
+    ap.add_argument("--quantize-flip-threshold", type=float, default=0.0,
+                    help="per-expert flip-rate bound before fp fallback "
+                         "(0.0: measured-exact by construction; 1.0: pure "
+                         "int8, no fallback)")
     args = ap.parse_args()
     if args.param_mode == "fsdp" and not args.mesh:
         ap.error("--param-mode fsdp requires --mesh")
@@ -138,6 +154,9 @@ def main():
             prune_gamma=args.adapt_prune_gamma,
             max_swaps=args.adapt_max_swaps,
         ) if args.adapt else None),
+        quantize=args.quantize,
+        quantize_calib=args.quantize_calib,
+        quantize_flip_threshold=args.quantize_flip_threshold,
     )
     rng = np.random.RandomState(0)
     sysp = rng.randint(0, cfg.vocab_size,
@@ -182,6 +201,21 @@ def main():
               f"over {stats['window_steps']} steps, "
               f"effective capacity_factor="
               f"{stats['effective_capacity_factor']}")
+    if args.quantize:
+        rep = stats["quantize_report"]
+        print(f"quantized serving ({stats['quantize']}): exactness gate "
+              f"{'PASSED' if rep['passed'] else 'FAILED'} — "
+              f"{rep['n_flips_raw']}/{rep['n_tokens']} raw id flips "
+              f"(rate {rep['flip_rate_raw']:.3f}), "
+              f"{rep['n_fallback']} experts on fp fallback "
+              f"{rep['fallback_experts']}, "
+              f"{rep['n_unguarded_flips']} unguarded flips "
+              f"(threshold {rep['flip_threshold']})")
+        if not rep["passed"]:
+            print("exactness gate FAILED: unguarded id flips survive the "
+                  "per-expert fallback; raise fallback coverage (lower "
+                  "--quantize-flip-threshold) or serve fp", file=sys.stderr)
+            sys.exit(1)
     if stats["n_failed"]:
         for r in out:
             if r.status is RequestStatus.FAILED:

@@ -181,15 +181,30 @@ def head_topk(
     return vals, ids, {"dispatched": zero, "overflow": zero}
 
 
-def abstract_serve_table(cfg: ModelConfig) -> ds.ServeTable:
-    """ShapeDtypeStruct ServeTable for the dry-run (no trained mask yet).
+def abstract_serve_table(cfg: ModelConfig, quantize: str | None = None):
+    """ShapeDtypeStruct serve table for the dry-run (no trained mask yet).
 
     V_pad defaults to 2·N/K rounded to 128 — the paper's observed ~2× mean
-    redundancy (Fig. 5b) spread over K experts.
+    redundancy (Fig. 5b) spread over K experts. ``quantize='int8'``
+    returns the :class:`~repro.core.dssoftmax.QuantizedServeTable`
+    shapes (int8 rows + fp32 per-row scales, no fallback experts) so
+    dry-run memory estimates price the quantized deployment.
     """
     K = cfg.ds.num_experts
     v_pad = cfg.ds.serve_pad or ds._round_up(max(128, 2 * cfg.padded_vocab // K))
+    ids = jax.ShapeDtypeStruct((K, v_pad), jnp.int32)
+    if quantize == "int8":
+        return ds.QuantizedServeTable(
+            ids=ids,
+            qweights=jax.ShapeDtypeStruct((K, v_pad, cfg.d_model), jnp.int8),
+            scales=jax.ShapeDtypeStruct((K, v_pad), jnp.float32),
+            fb_index=jax.ShapeDtypeStruct((K,), jnp.int32),
+            fb_weights=jax.ShapeDtypeStruct((0, v_pad, cfg.d_model),
+                                            cfg.jdtype),
+        )
+    if quantize is not None:
+        raise ValueError(f"quantize must be None or 'int8', got {quantize!r}")
     return ds.ServeTable(
-        ids=jax.ShapeDtypeStruct((K, v_pad), jnp.int32),
+        ids=ids,
         weights=jax.ShapeDtypeStruct((K, v_pad, cfg.d_model), cfg.jdtype),
     )

@@ -75,7 +75,12 @@ class TableResource:
         self.table = self._place(table)
 
     def _place(self, table):
-        if self.mesh is not None and isinstance(table, ds.ServeTable):
+        # Quantized tables place identically (shard_table pads/shards by
+        # pytree field); note the online-repack paths hand RAW fp tables
+        # to the session, which re-quantizes BEFORE swapping them in here.
+        if self.mesh is not None and isinstance(
+            table, (ds.ServeTable, ds.QuantizedServeTable)
+        ):
             return ds.shard_table(table, self.mesh)
         return table
 

@@ -408,6 +408,27 @@ class ServeSession:
             in — strictly between decode steps. Requires a DS head and
             the raw DS mask state (``ds_state_or_table`` must NOT be a
             pre-packed table: repacking needs the (head, mask) pair).
+        quantize: ``'int8'`` serves the DS table from int8 rows with
+            per-row fp32 scales (PR 9). The table is quantized under
+            the exactness gate
+            (:func:`~repro.core.dssoftmax.calibrate_quantized_table`):
+            experts whose top-k ids flip vs the fp32 oracle on the
+            calibration activations beyond ``quantize_flip_threshold``
+            serve full-precision fallback rows. The resulting
+            :class:`~repro.core.dssoftmax.ExactnessReport` is exposed at
+            ``stats()['quantize_report']``. Every later
+            :meth:`swap_table` of a raw fp table (including the online
+            adaptation loop's repacks) re-runs the same gate, so the
+            session stays quantized across swaps.
+        quantize_calib: calibration activations for the exactness gate —
+            an ``(n, d_model)`` array of representative hidden states,
+            or an int ``n`` to draw that many from a fixed unit
+            gaussian (default 256).
+        quantize_flip_threshold: per-expert flip-rate bound above which
+            an expert falls back to full-precision rows. The default
+            0.0 makes the served table measured-exact on the
+            calibration trace by construction; 1.0 disables fallback
+            (pure int8, report still measured).
     """
 
     def __init__(self, bundle: ModelBundle, params, ds_state_or_table, *,
@@ -423,7 +444,10 @@ class ServeSession:
                  state_arena: Optional[int] = None,
                  prefix_sharing: bool = True,
                  stats_window: int = 128,
-                 adapt_policy: Optional[AdaptPolicy] = None):
+                 adapt_policy: Optional[AdaptPolicy] = None,
+                 quantize: Optional[str] = None,
+                 quantize_calib=256,
+                 quantize_flip_threshold: float = 0.0):
         cfg = bundle.cfg
         if cfg.family == "encdec":
             raise ValueError(
@@ -445,6 +469,10 @@ class ServeSession:
             )
         if param_mode == "fsdp" and mesh is None:
             raise ValueError("param_mode='fsdp' requires mesh=")
+        if quantize not in (None, "int8"):
+            raise ValueError(f"quantize must be None or 'int8', got {quantize!r}")
+        if quantize is not None and cfg.head != "ds":
+            raise ValueError("quantize= requires a DS head (serve table)")
         if paged:
             if max_seq_len % page_size:
                 raise ValueError(
@@ -475,13 +503,22 @@ class ServeSession:
 
         self._head_params = None    # replicated (head, mask) pair tracked
         self._ds_state = None       # across swaps so repacks compound
+        self._quantize = quantize
+        self._quantize_flip_threshold = float(quantize_flip_threshold)
+        self._quantize_calib = quantize_calib
+        self._quantize_report: Optional[ds.ExactnessReport] = None
         if cfg.head == "ds":
-            if isinstance(ds_state_or_table, ds.ServeTable):
+            if isinstance(ds_state_or_table,
+                          (ds.ServeTable, ds.QuantizedServeTable)):
                 table = ds_state_or_table
             else:
                 self._ds_state = ds_state_or_table
                 table = ds.pack_experts(params["head"], ds_state_or_table)
             self._head_params = params["head"]
+            if quantize is not None and isinstance(table, ds.ServeTable):
+                # exactness-gated int8 quantization against the serving
+                # gate; a pre-quantized table passes through (no report)
+                table = self._quantize_pack(table, params["head"]["gate"])
             # TableResource places onto the mesh (experts → model axis,
             # K padded to a multiple of ep) on the way in — at init and
             # on every later swap_table()
@@ -809,6 +846,31 @@ class ServeSession:
 
     # -- table hot-swap + online adaptation ---------------------------------
 
+    def _quantize_pack(self, table: ds.ServeTable,
+                       gate_w) -> ds.QuantizedServeTable:
+        """Quantize a raw fp table under the exactness gate (PR 9) and
+        record the :class:`~repro.core.dssoftmax.ExactnessReport` behind
+        ``stats()['quantize_report']``. Calibration activations come
+        from ``quantize_calib`` (an (n, d_model) array, or n gaussian
+        draws from a fixed key so repeated swaps gate identically)."""
+        calib = self._quantize_calib
+        if isinstance(calib, int):
+            calib = jax.random.normal(
+                jax.random.PRNGKey(17), (calib, self.cfg.d_model),
+                jnp.float32)
+        qtable, report = ds.calibrate_quantized_table(
+            jnp.asarray(gate_w), table, jnp.asarray(calib), k=self.k,
+            flip_threshold=self._quantize_flip_threshold)
+        self._quantize_report = report
+        log.info(
+            "int8 quantize: %d/%d calib flips raw, %d experts on fp "
+            "fallback, %d unguarded (gate %s)",
+            report.n_flips_raw, report.n_tokens,
+            len(report.fallback_experts), report.n_unguarded_flips,
+            "PASSED" if report.passed else "FAILED",
+        )
+        return qtable
+
     def swap_table(self, new_table: ds.ServeTable,
                    new_gate: Optional[jax.Array] = None, *,
                    capacity_factor: Optional[float] = None) -> int:
@@ -844,10 +906,17 @@ class ServeSession:
         are table-independent, so resident requests' tokens after the
         swap are bit-identical to a fresh session on the new table
         replaying ``prompt ++ pre_swap_tokens``.
+
+        A session built with ``quantize='int8'`` preserves its mode: a
+        raw fp ``ServeTable`` is re-quantized under the exactness gate
+        (against the post-step-2 serving gate) before placement, and the
+        fresh :class:`~repro.core.dssoftmax.ExactnessReport` replaces
+        ``stats()['quantize_report']``. A pre-quantized table swaps in
+        as-is.
         """
         if self.cfg.head != "ds":
             raise ValueError("swap_table requires a DS head")
-        if not isinstance(new_table, ds.ServeTable):
+        if not isinstance(new_table, (ds.ServeTable, ds.QuantizedServeTable)):
             raise ValueError(
                 "swap_table takes a packed, unpadded ServeTable (the "
                 "resource re-pads for the mesh)"
@@ -872,6 +941,12 @@ class ServeSession:
                                       self._param_shardings["head"]["gate"])
             head = dict(self.params["head"], gate=gate)
             self.params = dict(self.params, head=head)
+        if self._quantize is not None and isinstance(new_table, ds.ServeTable):
+            # A quantized session stays quantized across swaps: raw fp
+            # tables (incl. the online adaptation loop's repacks) re-run
+            # the exactness gate against the just-updated serving gate.
+            new_table = self._quantize_pack(new_table,
+                                           self.params["head"]["gate"])
         version = self._table_res.swap(
             new_table, gate=self.params["head"]["gate"])
         self._n_swaps += 1
@@ -1172,6 +1247,9 @@ class ServeSession:
             "table_version": self._table_res.version,
             "n_swaps": self._n_swaps,
             "decode_builds": self._n_decode_builds,
+            "quantize": self._quantize,
+            "quantize_report": (self._quantize_report.as_dict()
+                                if self._quantize_report is not None else None),
         }
         if self._win:
             wd = np.sum([d for _, d, _ in self._win], axis=0, dtype=np.int64)

@@ -217,7 +217,7 @@ def test_serve_topk_rejects_unknown_kernel():
 def test_registry_has_all_serve_paths():
     from repro.kernels.registry import get_spec, kernel_names
 
-    base = {"jnp", "grouped", "pallas", "pallas_grouped"}
+    base = {"jnp", "grouped", "pallas", "pallas_grouped", "pallas_fused"}
     # every base path + its expert-parallel shard_map twin
     assert set(kernel_names()) == base | {f"{n}_ep" for n in base}
     # Pallas paths are native only on TPU; XLA paths run everywhere.
@@ -228,6 +228,9 @@ def test_registry_has_all_serve_paths():
         assert spec.sharded == name.endswith("_ep")
         if spec.sharded:
             assert spec.local_name == name[:-3]
+        # fused / quantized capability flags carry to the _ep twins
+        assert spec.fused == ("fused" in name)
+        assert spec.quantized_ok == ("pallas" != (spec.local_name or name))
 
 
 @pytest.mark.parametrize("B,expected", [
@@ -381,15 +384,20 @@ def test_auto_policy_calibration_overrides_bytes_tie():
     ctx = KernelContext(B=64, d=128, K=32, v_pad=1024, backend="cpu")
     assert AutoPolicy().resolve(ctx) == "grouped"  # bytes model: grouped wins
     ratio = get_spec("jnp").bytes_moved(ctx) / get_spec("grouped").bytes_moved(ctx)
-    calib = {("cpu", "jnp"): 1.0, ("cpu", "grouped"): 2.0 * ratio}
+    calib = {("cpu", "jnp", 4): 1.0, ("cpu", "grouped", 4): 2.0 * ratio}
     assert AutoPolicy(calibration=calib).resolve(ctx) == "jnp"
     # incomplete calibration (one path missing) falls back to modeled bytes
-    assert AutoPolicy(calibration={("cpu", "jnp"): 1.0}).resolve(ctx) == "grouped"
+    assert AutoPolicy(calibration={("cpu", "jnp", 4): 1.0}).resolve(ctx) == "grouped"
+    # calibration measured at a DIFFERENT wbytes never prices this call
+    # site (int8 and fp32 sweeps must not mix) → modeled-bytes fallback
+    calib1 = {("cpu", "jnp", 1): 1.0, ("cpu", "grouped", 1): 2.0 * ratio}
+    assert AutoPolicy(calibration=calib1).resolve(ctx) == "grouped"
 
 
 def test_load_bench_calibration_roundtrip(tmp_path):
-    """load_bench_calibration: median µs/byte per (backend, path) from a
-    sweep file; absent/empty files mean 'stay on modeled bytes'."""
+    """load_bench_calibration: median µs/byte per (backend, path, wbytes)
+    from a sweep file; rows without a wbytes field key as the fp32
+    default 4; absent/empty files mean 'stay on modeled bytes'."""
     import json
 
     from repro.kernels.registry import load_bench_calibration
@@ -401,12 +409,15 @@ def test_load_bench_calibration_roundtrip(tmp_path):
         {"path": "jnp", "us": 200.0, "bytes_model": 1000},
         {"path": "grouped", "us": 50.0, "bytes_model": 1000},
         {"path": "pallas", "us": None, "bytes_model": 1000},  # skipped row
+        # an int8 sweep of the same path lands under its own wbytes key
+        {"path": "grouped", "us": 30.0, "bytes_model": 1000, "wbytes": 1},
     ]
     p.write_text(json.dumps({"config": {"backend": "cpu"}, "rows": rows}))
     calib = load_bench_calibration(str(p))
-    assert calib[("cpu", "jnp")] == pytest.approx(0.2)   # median of the three
-    assert calib[("cpu", "grouped")] == pytest.approx(0.05)
-    assert ("cpu", "pallas") not in calib
+    assert calib[("cpu", "jnp", 4)] == pytest.approx(0.2)  # median of the three
+    assert calib[("cpu", "grouped", 4)] == pytest.approx(0.05)
+    assert calib[("cpu", "grouped", 1)] == pytest.approx(0.03)
+    assert ("cpu", "pallas", 4) not in calib
     assert load_bench_calibration(str(tmp_path / "missing.json")) is None
 
 
