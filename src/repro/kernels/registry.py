@@ -24,7 +24,14 @@ TOKEN, grouped paths once per EXPERT, so the grouped paths win as soon as
 B ≫ K and lose (dispatch + K-row overhead) when B ≲ K. The crossover sits
 near B ≈ K/2: the per-token ``jnp`` path pays its (B, V_pad, d) gather
 materialization twice (spill + re-read), the grouped paths pay the full
-K·V_pad·d table plus their per-slot spill. Pallas paths are only feasible
+K·V_pad·d table plus their per-slot spill. Speculative decoding shifts
+decode along exactly this axis: the draft–verify step batches the head
+over every resident's whole candidate block — B = (gamma+1)·n_slots
+rows instead of n_slots — so a session whose plain decode sat below the
+crossover lands in the grouped regime at verify time. No pricing change
+is needed here: ``serve_kernel_context`` reads B from the head batch at
+trace time, so the verify step's context prices (and ``AutoPolicy``
+picks) the grouped paths automatically. Pallas paths are only feasible
 on TPU — elsewhere they lower through the interpreter (~25× slower than
 XLA), so :class:`AutoPolicy` never selects them off-TPU.
 

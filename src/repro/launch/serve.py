@@ -13,6 +13,10 @@ saved (give it ``--shared-prefix N --prefill-chunk C`` so there is a
 common system prompt to share). ``--quantize int8`` serves the DS table
 from int8 rows under the exactness gate and prints the gate report
 (exits non-zero when unguarded id flips survive the fallback).
+``--draft <arch> --gamma G`` turns on exact speculative decoding: the
+draft proposes G tokens per slot per step, the target verifies every
+resident's block in one batched chunk-shaped step, and the report adds
+accepted-tokens/step and the acceptance rate.
 """
 import argparse
 import sys
@@ -115,6 +119,16 @@ def main():
                     help="per-expert flip-rate bound before fp fallback "
                          "(0.0: measured-exact by construction; 1.0: pure "
                          "int8, no fallback)")
+    ap.add_argument("--draft", default=None, metavar="ARCH",
+                    help="speculative decoding: a (small) zoo config to "
+                         "propose --gamma tokens per slot per step, "
+                         "verified by the target in one batched "
+                         "chunk-shaped step; reduced to the target's "
+                         "vocab so token ids line up. Greedy output is "
+                         "bit-identical to the non-speculative stream")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="draft tokens proposed per slot per speculative "
+                         "step (verify block width is gamma+1)")
     args = ap.parse_args()
     if args.param_mode == "fsdp" and not args.mesh:
         ap.error("--param-mode fsdp requires --mesh")
@@ -133,6 +147,20 @@ def main():
     if args.prefill_chunk:
         # tail chunks write a full chunk of (masked) rows into the cache
         smax = max(smax, -(-args.prompt_len // args.prefill_chunk) * args.prefill_chunk)
+    draft = None
+    if args.draft:
+        dcfg = get_config(args.draft)
+        if args.reduced:
+            dcfg = reduce_config(dcfg)
+        # token ids must line up: force the draft head onto the target vocab
+        if dcfg.vocab_size != cfg.vocab_size:
+            dcfg = dcfg.replace(vocab_size=cfg.vocab_size)
+        dbundle = build(dcfg)
+        dparams, dstate = dbundle.init(jax.random.PRNGKey(1))
+        draft = (dbundle, dparams, dstate)
+        smax += args.gamma  # verify blocks may write gamma rows past the tip
+    if args.paged:
+        smax = -(-smax // args.page_size) * args.page_size
     session = ServeSession(
         bundle, params, ds_state,
         n_slots=min(args.slots, args.batch),
@@ -157,6 +185,8 @@ def main():
         quantize=args.quantize,
         quantize_calib=args.quantize_calib,
         quantize_flip_threshold=args.quantize_flip_threshold,
+        draft=draft,
+        gamma=args.gamma,
     )
     rng = np.random.RandomState(0)
     sysp = rng.randint(0, cfg.vocab_size,
@@ -201,6 +231,13 @@ def main():
               f"over {stats['window_steps']} steps, "
               f"effective capacity_factor="
               f"{stats['effective_capacity_factor']}")
+    if args.draft:
+        sp = stats["speculative"]
+        print(f"speculative (gamma={sp['gamma']}): "
+              f"{sp['emitted_per_step']:.2f} tokens/step "
+              f"({sp['accepted_per_step']:.2f} draft-accepted/step, "
+              f"accept_rate={sp['accept_rate']:.2f}) "
+              f"over {sp['spec_steps']} verify steps")
     if args.quantize:
         rep = stats["quantize_report"]
         print(f"quantized serving ({stats['quantize']}): exactness gate "

@@ -34,6 +34,7 @@ from repro.models.mamba2 import (
     mamba2_block,
     mamba2_decode,
     mamba2_prefill_chunk,
+    mamba2_verify_scan,
 )
 
 
@@ -293,6 +294,136 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: HybridCache,
         gather=gather,
     )
     return vals, ids, new_cache
+
+
+def verify_step(params, serve_table, cfg: ModelConfig, cache: HybridCache,
+                tokens, pos0, k: int = 8, kernel=None, mesh=None, gather=None,
+                capacity_factor=None, with_stats=False, pages=None,
+                state_pages=None):
+    """Speculative draft–verify for the state families (mirrors
+    ``transformer.verify_step``).
+
+    tokens: (B, W) int32 — row b holds ``[t_b, d_1 .. d_{W-1}]`` at
+    positions ``pos0[b] .. pos0[b]+W-1`` (``pos0`` is the per-slot (B,)
+    position vector; the SSD recurrence itself is position-free, only
+    the periodic shared-attention blocks consume it). The head runs on
+    ALL W positions — a (B·W, d) grouped-regime batch — returning
+    (vals, ids) of shape (B, W, k).
+
+    Two exactness-critical choices:
+
+    * the ssm recurrence uses :func:`mamba2_verify_scan` (the unrolled
+      per-token decode update), NOT the SSD dual form of
+      ``mamba2_prefill_chunk`` — SSD's exp-of-cumsum decays and bf16
+      intra-chunk matmuls are not bitwise the sequential recurrence, and
+      the greedy speculative stream must equal plain decoding.
+    * unlike attention KV (masked → rollback-free, committed here), the
+      conv/ssm recurrent state CANNOT be rolled back by masking — a
+      rejected draft token's dt≠0 update is baked into the state. The
+      returned cache therefore keeps the INCOMING conv/ssm leaves
+      untouched; the caller commits the accepted prefix afterwards with
+      :func:`commit_block` (per-row ``n_valid`` = accepted+1) from the
+      same pre-block cache.
+    """
+    B, W = tokens.shape
+    if gather is not None:
+        x = gather.rows("embed/table", params["embed"]["table"], tokens)
+        sa_full = gather.full("shared_attn", params["shared_attn"]) \
+            if cfg.family == "hybrid" else None
+    else:
+        x = embed(params["embed"], tokens)  # (B, W, d)
+        sa_full = params.get("shared_attn")
+
+    def mamba_body(carry, scanned):
+        lp, conv, ssm = scanned
+        if gather is not None:
+            lp = gather.layer("layers", lp)
+        cs = conv[state_pages] if state_pages is not None else conv
+        ss = ssm[state_pages] if state_pages is not None else ssm
+        out, _, _ = mamba2_verify_scan(
+            lp["mamba"], cfg, rmsnorm(lp["ln"], carry), cs, ss, W
+        )
+        # recurrent state is NOT committed — the caller's commit pass
+        # re-advances it by the accepted prefix only
+        return carry + out, (conv, ssm)
+
+    def attn_op(xc, gi):
+        sa = sa_full
+        h, nk, nv = attention_prefill_chunk(
+            sa["attn"], cfg, rmsnorm(sa["ln1"], xc),
+            cache.attn_k[gi], cache.attn_v[gi], pos0, pages=pages,
+        )
+        xc = xc + h
+        xc = xc + mlp(sa["mlp"], cfg, rmsnorm(sa["ln2"], xc))
+        return xc, nk, nv
+
+    x, new_cache = _group_walk(params, cfg, cache, x, mamba_body, attn_op)
+    h = rmsnorm(params["final_norm"], x)  # (B, W, d)
+    out = heads.head_topk(
+        params["head"], serve_table, cfg, h.reshape(B * W, -1), k,
+        embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
+        gather=gather, capacity_factor=capacity_factor, with_stats=with_stats,
+    )
+    vals = out[0].reshape(B, W, k)
+    ids = out[1].reshape(B, W, k)
+    if with_stats:
+        return vals, ids, new_cache, out[2]
+    return vals, ids, new_cache
+
+
+def commit_block(params, cfg: ModelConfig, cache: HybridCache, tokens, pos0,
+                 n_valid, gather=None, pages=None, state_pages=None):
+    """Commit pass after a speculative verify: advance each row's conv/ssm
+    recurrent state by its accepted prefix only.
+
+    tokens/pos0: the SAME (B, W) verify block and per-slot positions;
+    ``n_valid`` (B,) = accepted+1 per row (1 for rows with nothing to
+    commit — the block's first token is always a real emitted token for
+    resident rows; inactive rows pass 1 harmlessly against garbage
+    state that the next tenant's prefill fully replaces). Uses
+    :func:`mamba2_verify_scan` so committed state is bit-identical to
+    having decoded the accepted tokens one at a time. The attention
+    blocks must still RUN (their outputs feed later layers' state
+    updates) and their KV writes simply overwrite verify's identical
+    values. No head. Returns the new cache.
+    """
+    B, W = tokens.shape
+    if gather is not None:
+        x = gather.rows("embed/table", params["embed"]["table"], tokens)
+        sa_full = gather.full("shared_attn", params["shared_attn"]) \
+            if cfg.family == "hybrid" else None
+    else:
+        x = embed(params["embed"], tokens)  # (B, W, d)
+        sa_full = params.get("shared_attn")
+
+    def mamba_body(carry, scanned):
+        lp, conv, ssm = scanned
+        if gather is not None:
+            lp = gather.layer("layers", lp)
+        if state_pages is not None:
+            out, nconv, nssm = mamba2_verify_scan(
+                lp["mamba"], cfg, rmsnorm(lp["ln"], carry),
+                conv[state_pages], ssm[state_pages], n_valid
+            )
+            return carry + out, (conv.at[state_pages].set(nconv),
+                                 ssm.at[state_pages].set(nssm))
+        out, nconv, nssm = mamba2_verify_scan(
+            lp["mamba"], cfg, rmsnorm(lp["ln"], carry), conv, ssm, n_valid
+        )
+        return carry + out, (nconv, nssm)
+
+    def attn_op(xc, gi):
+        sa = sa_full
+        h, nk, nv = attention_prefill_chunk(
+            sa["attn"], cfg, rmsnorm(sa["ln1"], xc),
+            cache.attn_k[gi], cache.attn_v[gi], pos0, pages=pages,
+        )
+        xc = xc + h
+        xc = xc + mlp(sa["mlp"], cfg, rmsnorm(sa["ln2"], xc))
+        return xc, nk, nv
+
+    _, new_cache = _group_walk(params, cfg, cache, x, mamba_body, attn_op)
+    return new_cache
 
 
 def decode_step(params, serve_table, cfg: ModelConfig, cache: HybridCache, token, pos, k: int = 8,

@@ -305,13 +305,15 @@ def attention_prefill_chunk(params, cfg: ModelConfig, x, cache_k, cache_v, pos0,
     filled (B, S_max, KV, dh) cache.
 
     x: (B, C, d) chunk embeddings at positions ``pos0 .. pos0+C-1``
-    (scalar ``pos0`` shared across B — one slot is prefilled at a time).
-    K/V are written into the cache and each query attends causally to
-    every cache position ≤ its own, so running a prompt through
-    consecutive chunks is mathematically identical to one full-prompt
-    prefill (masked positions contribute exact zeros to the softmax).
-    Padding rows at the chunk tail write K/V at positions that stay
-    masked until a later real token overwrites them.
+    (scalar ``pos0`` shared across B — one slot is prefilled at a time —
+    or a (B,) int32 vector of per-row start positions, the speculative
+    verify case where every resident slot checks its own γ-block at its
+    own sequence length). K/V are written into the cache and each query
+    attends causally to every cache position ≤ its own, so running a
+    prompt through consecutive chunks is mathematically identical to one
+    full-prompt prefill (masked positions contribute exact zeros to the
+    softmax). Padding rows at the chunk tail write K/V at positions that
+    stay masked until a later real token overwrites them.
 
     ``pages`` switches to the PAGED layout (see
     :func:`attention_decode`): ``cache_k``/``cache_v`` are
@@ -324,7 +326,10 @@ def attention_prefill_chunk(params, cfg: ModelConfig, x, cache_k, cache_v, pos0,
     from repro.distributed.hints import BATCH, constrain
 
     B, C, _ = x.shape
-    positions = jnp.broadcast_to(pos0 + jnp.arange(C)[None, :], (B, C))
+    pos0 = jnp.asarray(pos0)
+    per_row = pos0.ndim == 1
+    positions = jnp.broadcast_to(
+        (pos0[:, None] if per_row else pos0) + jnp.arange(C)[None, :], (B, C))
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)
     if pages is not None:
         ps = cache_k.shape[1]
@@ -336,6 +341,11 @@ def attention_prefill_chunk(params, cfg: ModelConfig, x, cache_k, cache_v, pos0,
         KVh, dh_ = cache_k.shape[2], cache_k.shape[3]
         view_k = cache_k[pages].reshape(B, n_pg * ps, KVh, dh_)
         view_v = cache_v[pages].reshape(B, n_pg * ps, KVh, dh_)
+    elif per_row:
+        rows = jnp.arange(B)[:, None]
+        cache_k = cache_k.at[rows, positions].set(k_new.astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, positions].set(v_new.astype(cache_v.dtype))
+        view_k, view_v = cache_k, cache_v
     else:
         cache_k = jax.lax.dynamic_update_slice_in_dim(
             cache_k, k_new.astype(cache_k.dtype), pos0, axis=1)
@@ -352,8 +362,8 @@ def attention_prefill_chunk(params, cfg: ModelConfig, x, cache_k, cache_v, pos0,
     s = jnp.einsum("bqhd,bchd->bqhc", q, k,
                    preferred_element_type=jnp.float32) * (1.0 / math.sqrt(dh))
     s = constrain(s, BATCH, None, "model", None)
-    valid = (pos0 + jnp.arange(C))[:, None] >= jnp.arange(S)[None, :]  # (C, S)
-    s = jnp.where(valid[None, :, None, :], s, -1e9)
+    valid = positions[:, :, None] >= jnp.arange(S)[None, None, :]  # (B, C, S)
+    s = jnp.where(valid[:, :, None, :], s, -1e9)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bqhc,bchd->bqhd", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32).astype(q.dtype)

@@ -226,9 +226,14 @@ def mamba2_prefill_chunk(params, cfg: ModelConfig, u, conv_state, ssm_state, n_v
     right-padding: their post-softplus ``dt`` is masked to 0 (an exact
     no-op in the SSD recurrence) and the returned conv tail is sliced
     ending at the last *valid* row, so arbitrary prompt lengths stream
-    through chunks of one static shape. Outputs at padded rows are
-    garbage and must be ignored by the caller (the serving head reads row
-    ``n_valid - 1``). Returns (out, new_conv_state, new_ssm_state).
+    through chunks of one static shape. ``n_valid`` may be a scalar
+    (shared across B) or a (B,) int32 vector of per-row valid counts —
+    the speculative state-commit case where each slot advances by its own
+    accepted length; dt=0 rows are exact recurrence no-ops per batch row,
+    so the masking argument holds row-wise unchanged. Outputs at padded
+    rows are garbage and must be ignored by the caller (the serving head
+    reads row ``n_valid - 1``). Returns (out, new_conv_state,
+    new_ssm_state).
     """
     Bsz, Cn, _ = u.shape
     H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
@@ -241,7 +246,10 @@ def mamba2_prefill_chunk(params, cfg: ModelConfig, u, conv_state, ssm_state, n_v
     Bc = xBC[..., cfg.d_inner : cfg.d_inner + G * N].reshape(Bsz, Cn, G, N)
     Cc = xBC[..., cfg.d_inner + G * N :].reshape(Bsz, Cn, G, N)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,C,H)
-    dt = jnp.where((jnp.arange(Cn) < n_valid)[None, :, None], dt, 0.0)
+    n_valid = jnp.asarray(n_valid)
+    per_row = n_valid.ndim == 1
+    nv_col = n_valid[:, None] if per_row else n_valid[None, None]
+    dt = jnp.where((jnp.arange(Cn)[None, :] < nv_col)[:, :, None], dt, 0.0)
     A = -jnp.exp(params["A_log"])
     y, final = ssd_chunked(x, dt, A, Bc, Cc, cfg.ssm_chunk, initial_state=ssm_state)
     y = y + x.astype(jnp.float32) * params["D"][None, None, :, None]
@@ -252,8 +260,47 @@ def mamba2_prefill_chunk(params, cfg: ModelConfig, u, conv_state, ssm_state, n_v
     # ``full`` row W-1+i is chunk row i, so the W-1 rows ending at the last
     # valid row start at full index ``n_valid`` (covers n_valid < W-1 via
     # the incoming conv_state rows).
-    new_conv = jax.lax.dynamic_slice_in_dim(full, n_valid, W - 1, axis=1)
+    if per_row:
+        idx = n_valid[:, None] + jnp.arange(W - 1)[None, :]  # (B, W-1)
+        new_conv = full[jnp.arange(Bsz)[:, None], idx]
+    else:
+        new_conv = jax.lax.dynamic_slice_in_dim(full, n_valid, W - 1, axis=1)
     return out, new_conv, final
+
+
+def mamba2_verify_scan(params, cfg: ModelConfig, u, conv_state, ssm_state,
+                       n_valid):
+    """Sequential per-token decode recurrence over a (B, W) block — the
+    speculative verify/commit path for the state families.
+
+    Unlike :func:`mamba2_prefill_chunk` (the chunked-dual SSD form, whose
+    exp-of-cumsum decay products and bf16 intra-chunk matmuls are NOT
+    bitwise the one-token recurrence), this unrolls
+    :func:`mamba2_decode`'s exact per-token update over the block, so
+    candidates scored here — and state committed here — are bit-identical
+    to plain one-token decoding: the greedy speculative stream equals the
+    non-speculative stream bit-for-bit. ``W`` is γ+1 (small, static), so
+    the unroll keeps every step's HLO literally the decode step's.
+
+    Rows ≥ ``n_valid`` (scalar or (B,) — the per-slot accepted prefix in
+    the commit pass) leave the carried conv/ssm state untouched: a pure
+    ``where`` select, no arithmetic, so the masking argument is exact per
+    batch row. Outputs at those rows are garbage the caller ignores.
+    Returns (out (B, W, d), new_conv_state, new_ssm_state).
+    """
+    B, W, _ = u.shape
+    n_valid = jnp.asarray(n_valid)
+    nv = n_valid if n_valid.ndim == 1 else jnp.full((B,), n_valid)
+    conv, ssm = conv_state, ssm_state
+    outs = []
+    for j in range(W):
+        out, nconv, nssm = mamba2_decode(params, cfg, u[:, j : j + 1],
+                                         conv, ssm)
+        keep = jnp.asarray(j) < nv  # (B,)
+        conv = jnp.where(keep[:, None, None], nconv, conv)
+        ssm = jnp.where(keep[:, None, None, None], nssm, ssm)
+        outs.append(out[:, 0])
+    return jnp.stack(outs, axis=1), conv, ssm
 
 
 def mamba2_decode(params, cfg: ModelConfig, u, conv_state, ssm_state):

@@ -32,6 +32,24 @@ class ModelBundle:
     # passing chunked SSD prefill). None only for encdec (per-request
     # encoder frames — falls back to whole-prompt prefill).
     prefill_chunk: Optional[Callable[..., Any]] = None
+    # Speculative draft–verify step: score a (B, W) candidate block at
+    # per-slot positions in one chunk-shaped call, head applied to ALL W
+    # positions → (vals, ids) of shape (B, W, k). Transformer families
+    # commit attention KV in place (masking makes rollback free); ssm/
+    # hybrid return the incoming conv/ssm leaves untouched — the serving
+    # scheduler commits the accepted prefix with ``commit_block``
+    # afterwards. None for encdec.
+    verify_step: Optional[Callable[..., Any]] = None
+    # True when verify_step does NOT advance recurrent state and the
+    # scheduler must run the commit_block pass after acceptance.
+    verify_needs_state_commit: bool = False
+    # Commit pass for state families: (params, cache, tokens, pos0,
+    # n_valid, gather=, pages=, state_pages=) -> new cache. Advances each
+    # row's conv/ssm state by its accepted prefix using the exact
+    # sequential decode recurrence (NOT the SSD dual form), keeping the
+    # speculative stream bit-identical to plain decoding. None when
+    # verify_needs_state_commit is False.
+    commit_block: Optional[Callable[..., Any]] = None
 
     def abstract_params(self):
         return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
@@ -100,6 +118,31 @@ def build(cfg: ModelConfig) -> ModelBundle:
                 gather=gather, capacity_factor=capacity_factor,
                 with_stats=with_stats, pages=pages, state_pages=state_pages,
             )
+    # Speculative verify: same call shape as decode but over a (B, W)
+    # token block at per-slot (B,) pos0 — shares the chunked-prefill
+    # backbone so the verify batch compiles once per (B, W) for every
+    # family. ssm/hybrid verify leaves recurrent state uncommitted (see
+    # ModelBundle.verify_needs_state_commit).
+    verify = None
+    commit = None
+    if fam in ("dense", "moe", "vlm", "ssm", "hybrid"):
+        verify = lambda p, t, cache, tokens, pos0, k=8, kernel=None, \
+            mesh=None, gather=None, capacity_factor=None, with_stats=False, \
+            pages=None, state_pages=None: (
+            mod.verify_step(
+                p, t, cfg, cache, tokens, pos0, k=k, kernel=kernel,
+                mesh=mesh, gather=gather, capacity_factor=capacity_factor,
+                with_stats=with_stats, pages=pages, state_pages=state_pages,
+            )
+        )
+    if fam in ("ssm", "hybrid"):
+        commit = lambda p, cache, tokens, pos0, n_valid, gather=None, \
+            pages=None, state_pages=None: (
+            hybrid.commit_block(
+                p, cfg, cache, tokens, pos0, n_valid, gather=gather,
+                pages=pages, state_pages=state_pages,
+            )
+        )
     return ModelBundle(
         cfg=cfg,
         init=init,
@@ -110,6 +153,9 @@ def build(cfg: ModelConfig) -> ModelBundle:
             ),
         decode_step=decode,
         prefill_chunk=chunk,
+        verify_step=verify,
+        verify_needs_state_commit=fam in ("ssm", "hybrid"),
+        commit_block=commit,
     )
 
 

@@ -207,6 +207,24 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
     bundle-level API uniformity with the state families and ignored.
     """
     del state_pages  # KV-only family
+    h, nk, nv = _chunk_hidden(params, cfg, cache, tokens, pos0,
+                              gather=gather, pages=pages)
+    B = h.shape[0]
+    h_last = h[jnp.arange(B), n_valid - 1]  # (B, d)
+    vals, ids = heads.head_topk(
+        params["head"], serve_table, cfg, h_last, k,
+        embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
+        gather=gather,
+    )
+    return vals, ids, DecodeCache(k=nk, v=nv)
+
+
+def _chunk_hidden(params, cfg: ModelConfig, cache: DecodeCache, tokens, pos0,
+                  gather=None, pages=None):
+    """Shared chunk backbone for :func:`prefill_chunk` / :func:`verify_step`:
+    run a (B, C) token block at positions ``pos0 .. pos0+C-1`` (scalar or
+    per-row ``pos0``) against the cache. Returns (hidden (B, C, d), new
+    cache_k, new cache_v)."""
     if gather is not None:
         x = gather.rows("embed/table", params["embed"]["table"], tokens)
     else:
@@ -230,14 +248,43 @@ def prefill_chunk(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
         return xc + y, (nk, nv)
 
     xf, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
-    h = rmsnorm(params["final_norm"], xf)  # (B, C, d)
-    B = h.shape[0]
-    h_last = h[jnp.arange(B), n_valid - 1]  # (B, d)
-    vals, ids = heads.head_topk(
-        params["head"], serve_table, cfg, h_last, k,
+    return rmsnorm(params["final_norm"], xf), nk, nv
+
+
+def verify_step(params, serve_table, cfg: ModelConfig, cache: DecodeCache,
+                tokens, pos0, k: int = 8, kernel=None, mesh=None, gather=None,
+                capacity_factor=None, with_stats=False, pages=None,
+                state_pages=None):
+    """Speculative draft–verify: score a (B, W) block of candidate tokens.
+
+    tokens: (B, W) int32 — row b holds ``[t_b, d_1 .. d_{W-1}]`` (the
+    slot's last committed token followed by the draft proposals) at
+    positions ``pos0[b] .. pos0[b]+W-1`` where ``pos0`` is the per-slot
+    (B,) position vector. Reuses the chunked-prefill backbone (per-row
+    ``pos0``), so every decoder family verifies through the same
+    one-compile path; the head runs on ALL W positions at once — a
+    (B·W, d) batch that lands in the grouped kernel regime under
+    AutoPolicy — returning (vals, ids) of shape (B, W, k): position w
+    scores the target's candidates for the token AFTER the w-th input.
+
+    KV for all W positions is committed as written; candidate positions
+    beyond the accepted prefix need no rollback — attention masks
+    positions > the slot's ``pos`` to exact zeros and later real tokens
+    overwrite them.
+    """
+    del state_pages  # KV-only family
+    h, nk, nv = _chunk_hidden(params, cfg, cache, tokens, pos0,
+                              gather=gather, pages=pages)
+    B, W, d = h.shape
+    out = heads.head_topk(
+        params["head"], serve_table, cfg, h.reshape(B * W, d), k,
         embed_table=params["embed"]["table"], kernel=kernel, mesh=mesh,
-        gather=gather,
+        gather=gather, capacity_factor=capacity_factor, with_stats=with_stats,
     )
+    vals = out[0].reshape(B, W, k)
+    ids = out[1].reshape(B, W, k)
+    if with_stats:
+        return vals, ids, DecodeCache(k=nk, v=nv), out[2]
     return vals, ids, DecodeCache(k=nk, v=nv)
 
 

@@ -97,6 +97,33 @@ step-stamped per-expert stats window becomes a
 ``repack_for_traffic`` re-packs (optionally re-prunes and selectively
 clones persistently-overflowing experts) when the windowed overflow
 rate says the table no longer fits the traffic.
+
+``draft=`` turns on exact draft–verify **speculative decoding**: a small
+draft model (its own bundle/params/table, same vocab) proposes ``gamma``
+tokens per resident per step from a private contiguous cache, and the
+target scores every resident's ``gamma+1``-token block in ONE batched
+``verify_step`` call — the chunked-prefill-shaped path with a per-slot
+``pos`` vector, so every decoder family shares it and the session still
+compiles a bounded set of shapes (one draft decode + one verify). The
+head runs on all ``B x (gamma+1)`` positions at once — the batch regime
+where the grouped/pallas serve kernels win (see
+``kernels/registry.py``). Acceptance is exact: greedy emits the longest
+draft prefix matching the target's argmax plus the target's correction
+token — bit-identical to the non-speculative stream — and sampled
+requests run rejection sampling adapted to the head's top-k-truncated
+candidate distributions, with every uniform keyed by ``(seed, absolute
+emission index)`` so the stream is invariant to block alignment and
+survives preempt-resume. Attention KV needs no rollback (stale rows
+stay masked / are overwritten before read); ssm/hybrid recurrent state
+cannot be rolled back, so verify leaves it untouched and a separate
+``commit_block`` pass advances each row by its accepted prefix using
+the exact sequential decode recurrence.
+
+Sampling itself is pure host-side numpy: a counter-based Philox stream
+keyed by ``(seed, emission index)`` drives Gumbel-max top-k sampling —
+zero per-token jax dispatches (the old per-token
+``PRNGKey``/``fold_in``/``categorical`` chain cost one device round-trip
+per emitted token).
 """
 from __future__ import annotations
 
@@ -133,6 +160,29 @@ from repro.utils import get_logger
 
 log = get_logger("serve")
 
+# -- host-side sampling RNG --------------------------------------------------
+# One independent Philox uniform stream per decision kind, all keyed by
+# (seed, absolute emission index m). Any prefix of the token stream pins
+# the same uniforms regardless of how speculative blocks were aligned, so
+# preempt-resume and swap_table replay the stream identically — and the
+# whole sampler stays on the host (zero per-token jax dispatches).
+_SALT_SAMPLE = 0x5A17_0001   # plain top-k Gumbel-max sampling
+_SALT_DRAFT = 0x5A17_0002    # draft proposal sampling
+_SALT_ACCEPT = 0x5A17_0003   # speculative accept/reject uniform
+_SALT_RESID = 0x5A17_0004    # speculative residual draw
+
+
+def _uniforms(seed: int, salt: int, m: int, n: int) -> np.ndarray:
+    """``n`` iid U[0,1) doubles from a counter-based Philox stream —
+    pure host math, a function of (seed, salt, m) alone. The emission
+    index seeds the high counter word; the generator's own draws bump
+    the low words, so distinct ``m`` streams never overlap."""
+    bg = np.random.Philox(
+        key=np.array([seed & 0xFFFF_FFFF_FFFF_FFFF, salt], np.uint64),
+        counter=np.array([0, 0, 0, m], np.uint64),
+    )
+    return np.random.Generator(bg).random(n)
+
 
 class RequestStatus(enum.Enum):
     """Request lifecycle states. ``QUEUED``/``ACTIVE`` are transient;
@@ -164,7 +214,10 @@ class SamplingParams:
     ``temperature <= 0`` is greedy; otherwise tokens are sampled from the
     softmax over the head's top-k candidates (top-k sampling — the DS
     head already returns the k best classes). ``top_k`` optionally
-    narrows sampling to the first ``min(top_k, k)`` candidates.
+    narrows sampling to the first ``top_k`` of those candidates; the
+    head only ever RETURNS the session's ``k`` candidates, so values
+    above it are rejected at ``submit()`` (they could not widen the
+    distribution and would silently alias ``top_k=k``).
     ``eos_id`` stops the request the moment it is emitted (the eos token
     IS appended). ``deadline_steps`` bounds the request's lifetime in
     session decode steps counted from ``submit()`` — exceeded while
@@ -187,7 +240,10 @@ class SamplingParams:
 @dataclass(eq=False)  # identity equality: queue membership/removal must
 class Request:        # never compare prompt arrays elementwise
     prompt: np.ndarray          # (S,) int32
-    max_new_tokens: int = 16    # legacy field; ignored when ``sampling`` is set
+    # legacy shorthand for Request(prompt, sampling=SamplingParams(
+    # max_new_tokens=n)); setting BOTH it and ``sampling`` is an error —
+    # SamplingParams is the single source of truth
+    max_new_tokens: Optional[int] = None
     out_tokens: List[int] = field(default_factory=list)
     sampling: Optional[SamplingParams] = None
     status: RequestStatus = RequestStatus.QUEUED
@@ -202,8 +258,17 @@ class Request:        # never compare prompt arrays elementwise
     @property
     def sampling_params(self) -> SamplingParams:
         if self.sampling is not None:
+            if self.max_new_tokens is not None:
+                raise ValueError(
+                    "Request sets both the legacy max_new_tokens field "
+                    f"({self.max_new_tokens}) and sampling= (max_new_tokens="
+                    f"{self.sampling.max_new_tokens}); SamplingParams is the "
+                    "single source of truth — drop the legacy field"
+                )
             return self.sampling
-        return SamplingParams(max_new_tokens=self.max_new_tokens)
+        if self.max_new_tokens is not None:
+            return SamplingParams(max_new_tokens=self.max_new_tokens)
+        return SamplingParams()
 
 
 @dataclass
@@ -429,6 +494,25 @@ class ServeSession:
             0.0 makes the served table measured-exact on the
             calibration trace by construction; 1.0 disables fallback
             (pure int8, report still measured).
+        draft: ``(draft_bundle, draft_params, draft_ds_state_or_table)``
+            — a small same-vocab model enabling exact draft–verify
+            speculative decoding. Each step the draft proposes ``gamma``
+            tokens per resident (sequential B=n_slots draft decodes
+            against a private contiguous cache), the target scores all
+            residents' ``gamma+1``-token blocks in ONE batched
+            ``verify_step`` (the chunked-prefill-shaped path: per-slot
+            ``pos`` vector, head over all B·(gamma+1) positions), and a
+            host-side acceptance pass emits the longest valid prefix
+            plus one target token. Greedy output is bit-identical to the
+            non-speculative stream; sampled output is distribution-exact
+            (rejection sampling over the top-k-truncated candidates,
+            uniforms keyed by ``(seed, emission index)`` so the stream
+            is block-alignment-invariant). Requests must additionally
+            leave ``gamma`` cache positions of headroom (checked at
+            ``submit``). The draft's cache is always contiguous, even
+            when the target is paged.
+        gamma: draft tokens proposed per slot per speculative step
+            (block width is ``gamma + 1``).
     """
 
     def __init__(self, bundle: ModelBundle, params, ds_state_or_table, *,
@@ -447,7 +531,9 @@ class ServeSession:
                  adapt_policy: Optional[AdaptPolicy] = None,
                  quantize: Optional[str] = None,
                  quantize_calib=256,
-                 quantize_flip_threshold: float = 0.0):
+                 quantize_flip_threshold: float = 0.0,
+                 draft: Optional[tuple] = None,
+                 gamma: int = 4):
         cfg = bundle.cfg
         if cfg.family == "encdec":
             raise ValueError(
@@ -473,6 +559,28 @@ class ServeSession:
             raise ValueError(f"quantize must be None or 'int8', got {quantize!r}")
         if quantize is not None and cfg.head != "ds":
             raise ValueError("quantize= requires a DS head (serve table)")
+        if draft is not None:
+            if gamma < 1:
+                raise ValueError(f"gamma must be >= 1, got {gamma}")
+            if bundle.verify_step is None:
+                raise ValueError(
+                    f"family {cfg.family!r} has no verify_step; speculative "
+                    "decoding needs the chunk-shaped verify path"
+                )
+            d_bundle = draft[0]
+            if d_bundle.cfg.family == "encdec":
+                raise ValueError("the draft model must be a token-only decoder")
+            if d_bundle.cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab_size ({d_bundle.cfg.vocab_size}) must match "
+                    f"the target's ({cfg.vocab_size}) — acceptance compares "
+                    "token ids across the two distributions"
+                )
+            if prefill_chunk is not None and d_bundle.prefill_chunk is None:
+                raise ValueError(
+                    f"draft family {d_bundle.cfg.family!r} has no chunked "
+                    "prefill; use whole-prompt prefill (prefill_chunk=None)"
+                )
         if paged:
             if max_seq_len % page_size:
                 raise ValueError(
@@ -649,6 +757,44 @@ class ServeSession:
         self._tok = np.zeros(n_slots, np.int32)
         self._pos = np.zeros(n_slots, np.int32)
 
+        # ---- speculative decoding (draft model) ---------------------------
+        self.gamma = int(gamma)
+        self._draft = None
+        self._verify_fn = None
+        self._commit_fn = None
+        self._draft_commit_fn = None
+        self._spec_stats = {"steps": 0, "slot_steps": 0, "accepted": 0,
+                            "emitted": 0}
+        if draft is not None:
+            d_bundle, d_params, d_state = draft
+            if d_bundle.cfg.head == "ds":
+                if isinstance(d_state, (ds.ServeTable, ds.QuantizedServeTable)):
+                    d_table = d_state
+                else:
+                    d_table = ds.pack_experts(d_params["head"], d_state)
+            else:
+                d_table = d_state
+            # the draft's cache is ALWAYS a contiguous (n_slots, S_max)
+            # block, even when the target is paged: the draft is small,
+            # and keeping it off the arena means speculative mode never
+            # changes page pressure accounting beyond the +gamma verify
+            # headroom
+            d_specs = cache_specs(d_bundle.cfg, ShapeConfig(
+                name="serve_draft", seq_len=max_seq_len,
+                global_batch=n_slots, kind="decode"))
+            self._draft = {"bundle": d_bundle, "params": d_params,
+                           "table": d_table}
+            self._draft_cache = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), d_specs)
+            if prefill_chunk is not None:
+                self._draft_row_zero = jax.tree.map(
+                    lambda s: jnp.zeros((s.shape[0], 1) + s.shape[2:],
+                                        s.dtype), d_specs)
+            self._build_draft_fns()
+            log.info("speculative decoding: draft=%s gamma=%d (verify block "
+                     "B=%d x W=%d)", d_bundle.cfg.name, self.gamma, n_slots,
+                     self.gamma + 1)
+
         self._build_decode_fn()
         self._build_prefill_fns()
 
@@ -801,6 +947,53 @@ class ServeSession:
 
         self._decode_fn = jax.jit(_decode)
 
+        if self._draft is None:
+            return
+        # speculative verify (+ state commit): rebuilt together with the
+        # decode step so swap_table's changed (K, V_pad) reprices them too.
+        # Shapes are static — (n_slots, gamma+1) blocks + the per-slot pos
+        # vector — so each compiles exactly once per table version.
+        if self._mgr is not None:
+            def _verify(p, t, c, toks, pos0, pages, spages):
+                out = bundle.verify_step(
+                    self._pin_p(p), t, c, toks, pos0, k=k,
+                    kernel=self._eff_kernel, mesh=self.mesh,
+                    gather=self._gather,
+                    capacity_factor=self._eff_capacity_factor,
+                    with_stats=True, pages=pages, state_pages=spages,
+                )
+                vals, ids, c, stats = out
+                return vals, ids, self._pin(c), stats
+        else:
+            def _verify(p, t, c, toks, pos0):
+                out = bundle.verify_step(
+                    self._pin_p(p), t, c, toks, pos0, k=k,
+                    kernel=self._eff_kernel, mesh=self.mesh,
+                    gather=self._gather,
+                    capacity_factor=self._eff_capacity_factor,
+                    with_stats=True,
+                )
+                vals, ids, c, stats = out
+                return vals, ids, self._pin(c), stats
+
+        self._verify_fn = jax.jit(_verify)
+
+        if not bundle.verify_needs_state_commit:
+            return
+        if self._mgr is not None:
+            def _commit(p, c, toks, pos0, nv, pages, spages):
+                return self._pin(bundle.commit_block(
+                    self._pin_p(p), c, toks, pos0, nv,
+                    gather=self._gather, pages=pages, state_pages=spages,
+                ))
+        else:
+            def _commit(p, c, toks, pos0, nv):
+                return self._pin(bundle.commit_block(
+                    self._pin_p(p), c, toks, pos0, nv, gather=self._gather,
+                ))
+
+        self._commit_fn = jax.jit(_commit)
+
     def _build_prefill_fns(self) -> None:
         """(Re)build the jitted prefill closures. Like the decode step,
         these take the table as an argument but are rebuilt on every
@@ -843,6 +1036,50 @@ class ServeSession:
                 return vals, ids, c
 
         self._chunk_fn = jax.jit(_chunk)
+
+    def _build_draft_fns(self) -> None:
+        """Jitted closures over the draft model, built ONCE at init (the
+        draft table never swaps). The draft serves single-device with the
+        default kernel resolution — it is small by construction, and
+        keeping it off the mesh/FSDP machinery means speculative mode
+        adds exactly three compiled shapes: draft decode (B=n_slots),
+        draft prefill (whole-prompt or chunked), and — for state-family
+        drafts — the commit pass."""
+        d = self._draft
+        db, k = d["bundle"], self.k
+
+        def _ddecode(p, t, c, tok, pos):
+            vals, ids, c = db.decode_step(p, t, c, tok, pos, k=k)
+            return vals, ids, c
+
+        self._draft_decode_fn = jax.jit(_ddecode)
+        self._draft_prefill_fn = jax.jit(
+            lambda p, t, b: db.prefill(p, t, b, k=k))
+        if self.prefill_chunk is not None:
+            def _dchunk(p, t, c, toks, pos0, nv):
+                return db.prefill_chunk(p, t, c, toks, pos0, nv, k=k)
+
+            self._draft_chunk_fn = jax.jit(_dchunk)
+
+        d_axes = cache_seq_axes(db.cfg)
+
+        def _dinsert(shared, row, slot):
+            def put(sh, r, ax):
+                if ax == 2:
+                    return sh.at[:, slot, : r.shape[2]].set(
+                        r[:, 0].astype(sh.dtype))
+                return sh.at[:, slot].set(r[:, 0].astype(sh.dtype))
+
+            return jax.tree.map(put, shared, row, d_axes)
+
+        self._draft_insert_fn = jax.jit(_dinsert)
+        self._draft_scrub_fn = jax.jit(
+            lambda sh, slot: jax.tree.map(lambda x: x.at[:, slot].set(0), sh))
+        if db.verify_needs_state_commit:
+            def _dcommit(p, c, toks, pos0, nv):
+                return db.commit_block(p, c, toks, pos0, nv)
+
+            self._draft_commit_fn = jax.jit(_dcommit)
 
     # -- table hot-swap + online adaptation ---------------------------------
 
@@ -1063,7 +1300,10 @@ class ServeSession:
             self._finish(req, RequestStatus.REJECTED, msg)
             raise ValueError(msg)
 
-        sp = req.sampling_params
+        try:
+            sp = req.sampling_params
+        except ValueError as e:  # legacy max_new_tokens AND sampling= set
+            reject(str(e))
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         S = len(prompt)
         if sp.max_new_tokens < 1:
@@ -1073,9 +1313,12 @@ class ServeSession:
                    f"got {sp.temperature}")
         if sp.top_k is not None and sp.top_k < 1:
             reject(f"top_k must be >= 1, got {sp.top_k}")
-        if sp.top_k is not None and sp.top_k > self.cfg.vocab_size:
-            reject(f"top_k ({sp.top_k}) exceeds vocab_size "
-                   f"({self.cfg.vocab_size})")
+        if sp.top_k is not None and sp.top_k > self.k:
+            # the head only returns this session's k candidates — a wider
+            # top_k cannot widen the distribution; rejecting beats silently
+            # serving an effective top_k of k
+            reject(f"top_k ({sp.top_k}) exceeds the head's candidate width "
+                   f"k ({self.k}); the head only returns k candidates")
         if sp.deadline_steps is not None and sp.deadline_steps < 1:
             reject(f"deadline_steps must be >= 1, got {sp.deadline_steps}")
         if S < 1:
@@ -1084,10 +1327,15 @@ class ServeSession:
             bad = prompt[(prompt < 0) | (prompt >= self.cfg.vocab_size)][0]
             reject(f"prompt contains token id {bad} outside "
                    f"[0, {self.cfg.vocab_size})")
-        if S + sp.max_new_tokens - 1 > self.max_seq_len:
+        # speculative sessions write gamma draft positions past the last
+        # emitted token before the verify step prunes them
+        spec_pad = self.gamma if self._draft is not None else 0
+        if S + sp.max_new_tokens - 1 + spec_pad > self.max_seq_len:
             reject(
                 f"prompt_len ({S}) + max_new_tokens ({sp.max_new_tokens})"
-                f" - 1 exceeds max_seq_len ({self.max_seq_len})"
+                f" - 1"
+                + (f" + speculative headroom ({spec_pad})" if spec_pad else "")
+                + f" exceeds max_seq_len ({self.max_seq_len})"
             )
         if self.prefill_chunk is not None:
             # The tail chunk writes a full `prefill_chunk` rows (padding
@@ -1106,7 +1354,7 @@ class ServeSession:
             # worst-case page footprint must fit the arena ALONE — a
             # request that cannot run even with every resident preempted
             # is rejected up front rather than wedging the queue
-            worst = S + sp.max_new_tokens - 1
+            worst = S + sp.max_new_tokens - 1 + spec_pad
             if self.prefill_chunk is not None:
                 worst = max(worst, -(-S // self.prefill_chunk)
                             * self.prefill_chunk)
@@ -1148,10 +1396,13 @@ class ServeSession:
 
     def step(self) -> bool:
         """Expire overdue queued requests, admit into free slots, then run
-        ONE jitted decode step over the slot batch. Returns True while
+        ONE jitted decode step over the slot batch (or one speculative
+        draft–verify block when ``draft=`` is set). Returns True while
         work remains."""
         self._expire_queue()
         self._admit()
+        if self._draft is not None:
+            return self._step_speculative()
         if self._mgr is not None:
             self._prepare_decode_writes()
         act = self.scheduler.active()
@@ -1195,6 +1446,233 @@ class ServeSession:
             # ran to completion on the old table version
             self._maybe_adapt()
         return self.scheduler.has_work()
+
+    def _step_speculative(self) -> bool:
+        """One draft–verify block: gamma sequential draft proposals per
+        slot, ONE batched target verify over every resident's
+        (gamma+1)-token block, host-side exact acceptance, then the
+        state-commit passes and per-slot emission.
+
+        Ordering is load-bearing: commits run BEFORE the finite guard /
+        emission so a quarantined slot's state is still well-defined when
+        it is scrubbed, and emission releases slots only after every
+        batched device call of the step has launched."""
+        W = self.gamma + 1
+        if self._mgr is not None:
+            # verify writes the whole block: secure [pos, pos+W) per slot
+            self._prepare_decode_writes(width=W)
+        act = self.scheduler.active()
+        if not act:
+            return self.scheduler.has_work()
+        n = self.n_slots
+        base_tok = self._tok.copy()
+        base_pos = self._pos.copy()
+
+        # -- draft proposals: gamma sequential B=n_slots draft decodes ----
+        # jnp arrays are immutable, so holding the pre-block draft cache
+        # is a free snapshot — the commit pass re-advances it by each
+        # row's accepted prefix only
+        d = self._draft
+        d_cache0 = self._draft_cache
+        dtok = base_tok.copy()
+        dpos = base_pos.copy()
+        props = np.zeros((n, self.gamma), np.int32)
+        # per (slot, j): the draft's (vals, ids) behind proposal j, or
+        # None when the proposal is a point mass (greedy draft rows need
+        # no q; poisoned draft rows fall back to a token-0 point mass —
+        # acceptance stays exact, the target supplies the real token)
+        prop_q: list = [[None] * self.gamma for _ in range(n)]
+        for j in range(self.gamma):
+            dvals, dids, self._draft_cache = self._draft_decode_fn(
+                d["params"], d["table"], self._draft_cache,
+                jnp.asarray(dtok), jnp.asarray(dpos))
+            dvals, dids = np.asarray(dvals), np.asarray(dids)
+            for i, slot in act:
+                if self.scheduler.slots[i] is not slot:
+                    continue
+                sp = slot.req.sampling_params
+                m = slot.n_emitted + j  # absolute index of the proposed token
+                if not np.isfinite(dvals[i]).all() or dids[i, 0] < 0:
+                    props[i, j] = 0
+                    dtok[i] = 0
+                    continue
+                if sp.temperature <= 0.0:
+                    t = int(dids[i, 0])
+                else:
+                    k_eff = dids.shape[1] if sp.top_k is None \
+                        else min(sp.top_k, dids.shape[1])
+                    u = _uniforms(sp.seed, _SALT_DRAFT, m, k_eff)
+                    with np.errstate(divide="ignore"):
+                        g = -np.log(-np.log(u))
+                    t = int(dids[i, int(np.argmax(
+                        dvals[i, :k_eff].astype(np.float64) / sp.temperature
+                        + g))])
+                    prop_q[i][j] = (dvals[i].copy(), dids[i].copy())
+                props[i, j] = t
+                dtok[i] = t
+            dpos += 1
+
+        # -- ONE batched chunk-shaped verify over every block -------------
+        blocks = np.zeros((n, W), np.int32)
+        blocks[:, 0] = base_tok
+        blocks[:, 1:] = props
+        if self._mgr is not None:
+            vvals, vids, self._cache, stats = self._verify_fn(
+                self.params, self.table, self._cache, jnp.asarray(blocks),
+                jnp.asarray(base_pos), jnp.asarray(self._mgr.tables),
+                jnp.asarray(self._mgr.state_pid))
+        else:
+            vvals, vids, self._cache, stats = self._verify_fn(
+                self.params, self.table, self._cache, jnp.asarray(blocks),
+                jnp.asarray(base_pos))
+        self.n_steps += 1
+        vvals, vids = np.asarray(vvals), np.asarray(vids)
+        self._record_overflow(stats)
+
+        # -- host-side exact acceptance -----------------------------------
+        emitted: dict = {}
+        n_valid = np.ones(n, np.int32)
+        poisoned: List[int] = []
+        for i, slot in act:
+            if self.scheduler.slots[i] is not slot:
+                continue
+            if not np.isfinite(vvals[i]).all() or (vids[i, :, 0] < 0).any():
+                poisoned.append(i)
+                continue
+            toks, n_acc = self._accept_block(
+                vvals[i], vids[i], props[i], prop_q[i],
+                slot.req.sampling_params, slot.n_emitted)
+            emitted[i] = toks
+            n_valid[i] = n_acc + 1
+            self._spec_stats["slot_steps"] += 1
+            self._spec_stats["accepted"] += n_acc
+        self._spec_stats["steps"] += 1
+
+        # -- commit accepted prefixes (state families cannot roll back) ---
+        nv = jnp.asarray(n_valid)
+        if self._commit_fn is not None:
+            if self._mgr is not None:
+                self._cache = self._commit_fn(
+                    self.params, self._cache, jnp.asarray(blocks),
+                    jnp.asarray(base_pos), nv,
+                    jnp.asarray(self._mgr.tables),
+                    jnp.asarray(self._mgr.state_pid))
+            else:
+                self._cache = self._commit_fn(
+                    self.params, self._cache, jnp.asarray(blocks),
+                    jnp.asarray(base_pos), nv)
+        if self._draft_commit_fn is not None:
+            # state-family draft: re-advance from the pre-block snapshot.
+            # (A transformer draft needs neither rollback nor commit: its
+            # next proposal round overwrites position pos' before reading
+            # it, and stale rows past pos' stay masked.)
+            self._draft_cache = self._draft_commit_fn(
+                d["params"], d_cache0, jnp.asarray(blocks),
+                jnp.asarray(base_pos), nv)
+
+        # -- quarantine, then emit ----------------------------------------
+        for i in poisoned:
+            self._finish_slot(
+                i, RequestStatus.FAILED,
+                "non-finite verify output (slot quarantined)",
+            )
+        for i, slot in act:
+            if self.scheduler.slots[i] is not slot:
+                continue
+            for t in emitted.get(i, ()):
+                self._emit(i, slot, t)
+                # count tokens actually emitted (a slot hitting eos or
+                # max_new truncates its accepted block mid-emission)
+                self._spec_stats["emitted"] += 1
+                if self.scheduler.slots[i] is not slot:
+                    break  # finished (eos/max/deadline) or cb released it
+        if self._adapt_policy is not None:
+            self._maybe_adapt()
+        return self.scheduler.has_work()
+
+    def _accept_block(self, vals_w: np.ndarray, ids_w: np.ndarray,
+                      props: np.ndarray, prop_q: list, sp: SamplingParams,
+                      m0: int) -> tuple:
+        """Exact acceptance for one slot's verified block. Returns
+        ``(tokens_to_emit, n_accepted)`` — the accepted draft prefix plus
+        exactly one target-sampled token (correction on first mismatch /
+        rejection, bonus after a clean sweep).
+
+        Greedy is a literal prefix match against the target argmax chain,
+        so the emitted tokens are bit-identical to non-speculative greedy
+        decoding. Sampled mode is standard speculative rejection sampling
+        adapted to the head's top-k-truncated distributions: accept
+        proposal d ~ q with probability min(1, p(d)/q(d)); on rejection
+        draw from the residual (p - q)^+ mapped onto the TARGET's
+        candidate support. For any discrete p, q — including point-mass
+        fallbacks and disjoint supports — the emitted token is
+        distributed exactly as p. All uniforms key on ``(seed, absolute
+        emission index)``, making the stream invariant to how blocks were
+        aligned (preempt-resume restarts at a block boundary and still
+        replays identically)."""
+        gamma = len(props)
+        out: List[int] = []
+        n_acc = 0
+        if sp.temperature <= 0.0:
+            for j in range(gamma):
+                tgt = int(ids_w[j, 0])
+                out.append(tgt)
+                if int(props[j]) != tgt:
+                    return out, n_acc  # correction token emitted
+                n_acc += 1
+            out.append(int(ids_w[gamma, 0]))  # bonus token
+            return out, n_acc
+        k = ids_w.shape[1]
+        k_eff = k if sp.top_k is None else min(sp.top_k, k)
+        for j in range(gamma):
+            m = m0 + j
+            pv = vals_w[j, :k_eff].astype(np.float64) / sp.temperature
+            pv -= pv.max()
+            p = np.exp(pv)
+            p /= p.sum()
+            pid = ids_w[j, :k_eff].astype(np.int64)
+            d_tok = int(props[j])
+            q_on_p = np.zeros_like(p)  # q mapped onto the target support
+            if prop_q[j] is None:
+                qd = 1.0  # point mass on the proposal
+                hits = np.nonzero(pid == d_tok)[0]
+                if len(hits):
+                    q_on_p[hits[0]] = 1.0
+            else:
+                dvals, dids = prop_q[j]
+                dk_eff = len(dids) if sp.top_k is None \
+                    else min(sp.top_k, len(dids))
+                qv = dvals[:dk_eff].astype(np.float64) / sp.temperature
+                qv -= qv.max()
+                q = np.exp(qv)
+                q /= q.sum()
+                did = dids[:dk_eff].astype(np.int64)
+                qd = float(q[np.nonzero(did == d_tok)[0][0]])
+                for a, cid in enumerate(pid):
+                    hit = np.nonzero(did == cid)[0]
+                    if len(hit):
+                        q_on_p[a] = q[hit[0]]
+            hits = np.nonzero(pid == d_tok)[0]
+            pd = float(p[hits[0]]) if len(hits) else 0.0
+            u = float(_uniforms(sp.seed, _SALT_ACCEPT, m, 1)[0])
+            if u * qd <= pd:  # accept with prob min(1, p/q)
+                out.append(d_tok)
+                n_acc += 1
+                continue
+            res = np.maximum(p - q_on_p, 0.0)
+            z = res.sum()
+            # z == P(reject under p's support); z <= 0 only when q covers
+            # p exactly on this support (then rejection implies the mass
+            # lives outside — defensively resample from p itself)
+            res = res / z if z > 0.0 else p
+            r = float(_uniforms(sp.seed, _SALT_RESID, m, 1)[0])
+            idx = int(np.searchsorted(np.cumsum(res), r, side="right"))
+            out.append(int(pid[min(idx, k_eff - 1)]))
+            return out, n_acc
+        # clean sweep: the bonus token is the PLAIN stream sample from the
+        # last row — exactly p_gamma, keyed like any other emission
+        out.append(self._sample(vals_w[gamma], ids_w[gamma], sp, m0 + gamma))
+        return out, n_acc
 
     def run(self, requests: Optional[List[Request]] = None) -> List[Request]:
         """Submit ``requests`` (if given) and step until the queue drains.
@@ -1276,6 +1754,23 @@ class ServeSession:
                 "prefill_chunks": self._n_prefill_chunks,
                 "prefill_chunks_saved": self._n_prefill_chunks_saved,
             }
+        if self._draft is not None:
+            ss = self._spec_stats
+            steps = max(1, ss["steps"])
+            out["speculative"] = {
+                "gamma": self.gamma,
+                "spec_steps": ss["steps"],
+                "draft_accepted": ss["accepted"],
+                "spec_emitted": ss["emitted"],
+                # per VERIFY step, summed over resident slots; > 1 per
+                # resident means speculation is paying (each step emits
+                # the baseline's one token plus accepted drafts)
+                "emitted_per_step": ss["emitted"] / steps,
+                "accepted_per_step": ss["accepted"] / steps,
+                # fraction of proposed draft tokens the target accepted
+                "accept_rate": ss["accepted"]
+                / max(1, ss["slot_steps"] * self.gamma),
+            }
         return out
 
     # -- internals ----------------------------------------------------------
@@ -1313,6 +1808,9 @@ class ServeSession:
             # later (shorter) tenant's insert would not overwrite all of
             # them — masked attention still multiplies them (0·NaN=NaN)
             self._cache = self._scrub_fn(self._cache, i)
+        if self._draft is not None and status is RequestStatus.FAILED:
+            # the draft's contiguous row may carry the same poison
+            self._draft_cache = self._draft_scrub_fn(self._draft_cache, i)
 
     def _expire_queue(self) -> None:
         overdue = [
@@ -1447,6 +1945,10 @@ class ServeSession:
                                           state_snapshot=snap)
             slot = sched.admit(i, req, S)
             req.status = RequestStatus.ACTIVE
+            if self._draft is not None:
+                # the draft mirrors the slot's token history in its own
+                # contiguous cache (re-prefilled from scratch on resume)
+                self._draft_prefill_slot(toks, i)
             if n_resume:
                 # the re-prefill's head output is discarded: those tokens
                 # were already emitted before preemption
@@ -1544,6 +2046,29 @@ class ServeSession:
                 pending.append((prefix_hash(toks[:hi]), hi, snap))
         return vals, ids, pending
 
+    def _draft_prefill_slot(self, toks: np.ndarray, i: int) -> None:
+        """Prefill the draft's contiguous cache row for slot ``i`` with
+        the slot's full token history (head output discarded — the draft
+        first speaks in the next proposal round). Mirrors the session's
+        prefill mode so a chunked session keeps one compiled draft
+        prefill shape."""
+        d = self._draft
+        if self.prefill_chunk is None:
+            _, _, row = self._draft_prefill_fn(
+                d["params"], d["table"],
+                {"tokens": jnp.asarray(np.asarray(toks, np.int32)[None])})
+        else:
+            cp = self.prefill_chunk
+            row = self._draft_row_zero
+            for lo in range(0, len(toks), cp):
+                tail = toks[lo: lo + cp]
+                buf = np.zeros(cp, np.int32)
+                buf[: len(tail)] = tail
+                _, _, row = self._draft_chunk_fn(
+                    d["params"], d["table"], row, jnp.asarray(buf[None]),
+                    lo, len(tail))
+        self._draft_cache = self._draft_insert_fn(self._draft_cache, row, i)
+
     # -- paged-arena management ---------------------------------------------
 
     def _alloc_state_page(self, i: int, priority: int) -> bool:
@@ -1583,18 +2108,19 @@ class ServeSession:
                                                  plan.dst)
         return True
 
-    def _prepare_decode_writes(self) -> None:
-        """Before the decode step, secure each resident's write position.
-        A resident that cannot get its page even after preempting every
-        lower-priority batchmate preempts ITSELF — its freed pages
-        unblock the survivors, and it resumes token-identically once
-        capacity returns."""
+    def _prepare_decode_writes(self, width: int = 1) -> None:
+        """Before the decode step, secure each resident's write positions
+        (``width`` of them — 1 for plain decode, gamma+1 for a
+        speculative verify block). A resident that cannot get its pages
+        even after preempting every lower-priority batchmate preempts
+        ITSELF — its freed pages unblock the survivors, and it resumes
+        token-identically once capacity returns."""
         for i, slot in list(self.scheduler.active()):
             if self.scheduler.slots[i] is not slot:
                 continue  # preempted by an earlier iteration
             pos = int(self._pos[i])
             pr = slot.req.sampling_params.priority
-            if not self._prepare_kv_write_range(i, pos, pos + 1, pr):
+            if not self._prepare_kv_write_range(i, pos, pos + width, pr):
                 self._preempt_slot(i)
 
     def _preempt_lowest_below(self, priority: int) -> bool:
@@ -1662,13 +2188,21 @@ class ServeSession:
                 n_emitted: int) -> int:
         """One token from the head's (k,) top-k candidates. Depends only on
         (vals, ids, sp, n_emitted) — a request samples identically whether
-        it runs solo or batched with others (token-identity invariant)."""
+        it runs solo or batched with others (token-identity invariant).
+
+        Pure host-side numpy: Gumbel-max over a counter-based Philox
+        stream keyed by (seed, n_emitted). The previous implementation
+        built a fresh PRNGKey + fold_in + jax.random.categorical PER
+        TOKEN — one device dispatch/round-trip per emitted token, easily
+        dominating small-model decode steps."""
         if sp.temperature <= 0.0:
             return int(ids[0])
         k_eff = len(ids) if sp.top_k is None else min(sp.top_k, len(ids))
-        key = jax.random.fold_in(jax.random.PRNGKey(sp.seed), n_emitted)
-        logits = jnp.asarray(vals[:k_eff], jnp.float32) / sp.temperature
-        return int(ids[int(jax.random.categorical(key, logits))])
+        u = _uniforms(sp.seed, _SALT_SAMPLE, n_emitted, k_eff)
+        with np.errstate(divide="ignore"):
+            g = -np.log(-np.log(u))  # Gumbel(0,1); u=0 -> -inf, never picked
+        scores = np.asarray(vals[:k_eff], np.float64) / sp.temperature + g
+        return int(ids[int(np.argmax(scores))])
 
     def _emit(self, i: int, slot: _Slot, token: int) -> None:
         req = slot.req

@@ -131,6 +131,50 @@ def test_hot_swap_identity(arch, vocab, paged):
                                        vocab=vocab, **kw)
 
 
+def test_hot_swap_sampled_stream_identity():
+    """Sampled decoding (temperature > 0) through a mid-flight hot-swap:
+    the host sampler keys every uniform on (seed, absolute emission
+    index), so a resident's post-swap suffix equals a fresh session on
+    the new table RESUMING the request (prompt + pre-swap out_tokens,
+    n_emitted preserved) — no sampler state is tied to the table or the
+    session (PR 10 sampler contract)."""
+    bundle, params, ds_state = _tiny("qwen2-1.5b", 128)
+    max_new = 8
+    rng = np.random.RandomState(3)
+    reqs = [Request(prompt=rng.randint(0, 128, rng.randint(4, 9))
+                    .astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=max_new,
+                                            temperature=0.8, top_k=4,
+                                            seed=100 + i))
+            for i in range(2)]
+    sess = ServeSession(bundle, params, ds_state, n_slots=2,
+                        max_seq_len=32, kernel="jnp")
+    for r in reqs:
+        sess.submit(r)
+    for _ in range(3):
+        sess.step()
+    pre = [list(r.out_tokens) for r in reqs]
+    assert all(pre)  # residents emitted before the swap
+
+    res = repack_for_traffic(params["head"], ds_state, HOT0,
+                             key=jax.random.PRNGKey(3))
+    sess.swap_table(res.table, new_gate=res.head_params["gate"],
+                    capacity_factor=res.capacity_factor)
+    while sess.step():
+        pass
+
+    params2 = dict(params, head=res.head_params)
+    fresh = ServeSession(bundle, params2, res.table, n_slots=2,
+                         max_seq_len=32, kernel="jnp")
+    refs = [Request(prompt=r.prompt.copy(), out_tokens=list(p),
+                    sampling=r.sampling_params)
+            for r, p in zip(reqs, pre)]
+    fresh.run(refs)
+    for r, ref in zip(reqs, refs):
+        assert r.status is RequestStatus.COMPLETED
+        assert r.out_tokens == ref.out_tokens
+
+
 @needs8
 @pytest.mark.parametrize("param_mode", ["replicated", "fsdp"])
 def test_hot_swap_identity_on_mesh(param_mode):

@@ -363,6 +363,42 @@ def test_preempted_request_resumes_identically(tiny_tf):
     _assert_leak_free(sess)
 
 
+def test_preempted_sampled_request_resumes_identically(tiny_tf):
+    """Sampled decoding (temperature > 0) through preemption: every
+    uniform in the host sampler keys on (seed, absolute emission index),
+    so a victim resuming mid-stream replays the SAME sampled tokens as
+    an uncontended solo run — there is no per-token RNG state to
+    checkpoint or restore (PR 10 sampler contract)."""
+    bundle, params, state = tiny_tf
+    rng = np.random.RandomState(6)
+    low = Request(prompt=rng.randint(1, 100, 10).astype(np.int32),
+                  sampling=SamplingParams(max_new_tokens=20, priority=0,
+                                          temperature=0.9, top_k=4, seed=11))
+    high = Request(prompt=rng.randint(1, 100, 10).astype(np.int32),
+                   sampling=SamplingParams(max_new_tokens=20, priority=5,
+                                           temperature=0.7, seed=22))
+    ref = []
+    for r in _clone([low, high]):
+        ServeSession(bundle, params, state, n_slots=1, max_seq_len=64, k=8,
+                     prefill_chunk=4).run([r])
+        ref.append(r.out_tokens)
+    sess = ServeSession(bundle, params, state, n_slots=2, max_seq_len=64,
+                        k=8, prefill_chunk=4, paged=True, page_size=8,
+                        page_arena=5, prefix_sharing=False)
+    sess.submit(low)
+    for _ in range(3):
+        sess.step()
+    assert low.status is RequestStatus.ACTIVE
+    sess.submit(high)
+    while sess.step():
+        pass
+    assert sess.stats()["paged"]["preemptions"] > 0
+    assert low.status is RequestStatus.COMPLETED
+    assert high.status is RequestStatus.COMPLETED
+    assert [low.out_tokens, high.out_tokens] == ref
+    _assert_leak_free(sess)
+
+
 def test_equal_priority_never_preempts_self_preempt_converges(tiny_tf):
     """Equal-priority residents cannot evict each other; under pressure a
     resident that cannot grow self-preempts (freeing pages for the

@@ -254,12 +254,13 @@ def test_session_reuse_compiles_nothing_new(tiny):
     bundle, params, ds_state, table = tiny
     sess = ServeSession(bundle, params, table, n_slots=1, max_seq_len=32,
                         kernel="jnp")
-    sess.run([Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=3)])
+    sess.run([Request(prompt=np.arange(5, dtype=np.int32),
+                      sampling=SamplingParams(max_new_tokens=3))])
     assert sess._decode_fn._cache_size() == 1
     n_prefill = sess._prefill_fn._cache_size()
     # same prompt length again: zero new compiles anywhere
     sess.run([Request(prompt=np.arange(5, dtype=np.int32) + 1,
-                      max_new_tokens=4)])
+                      sampling=SamplingParams(max_new_tokens=4))])
     assert sess._decode_fn._cache_size() == 1
     assert sess._prefill_fn._cache_size() == n_prefill
 

@@ -1,0 +1,335 @@
+"""Speculative decoding on the DS head (ISSUE 10): exact draft–verify
+blocks inside a live ``ServeSession`` + the host-side sampler rework.
+
+Acceptance:
+
+* greedy speculative streams are BIT-IDENTICAL to the non-speculative
+  baseline across transformer/ssm/hybrid targets, contiguous and paged
+  caches, cross-family drafts, and a 4x2 mesh in both param modes —
+  speculation changes latency, NEVER tokens;
+* compile counts stay bounded: ONE batched verify shape and ONE draft
+  decode shape no matter how residency shifts (the plain decode step is
+  never traced in speculative mode);
+* sampled acceptance is DISTRIBUTION-EXACT (chi-squared against the
+  target softmax for overlapping and point-mass draft distributions)
+  and deterministic under a fixed seed;
+* the reworked ``_sample`` makes ZERO per-token jax dispatches
+  (regression-tested by poisoning the jax.random entry points);
+* ``top_k`` validates against the session head ``k`` and the legacy
+  ``Request.max_new_tokens`` shorthand errors when combined with
+  ``sampling`` (single source of truth).
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_test_mesh, needs_devices
+from repro.configs import get_config, reduce_config
+from repro.models import build
+from repro.train import Request, RequestStatus, SamplingParams, ServeSession
+
+needs8 = needs_devices(8)
+
+
+def _tiny(arch, vocab=128):
+    cfg = reduce_config(get_config(arch), vocab=vocab)
+    if cfg.head == "ds":
+        cfg = cfg.replace(ds=get_config(arch).ds.replace(num_experts=4))
+    bundle = build(cfg)
+    params, ds_state = bundle.init(jax.random.PRNGKey(0))
+    return bundle, params, ds_state
+
+
+@pytest.fixture(scope="module")
+def tiny_tf():
+    return _tiny("qwen2-1.5b")
+
+
+@pytest.fixture(scope="module")
+def tiny_ssm_draft():
+    return _tiny("mamba2-130m", 128)
+
+
+def _mixed_requests(vocab, n=5, seed=0, max_new=(2, 6, 3, 5, 4), **sp):
+    rng = np.random.RandomState(seed)
+    return [Request(prompt=rng.randint(1, vocab, rng.randint(3, 12))
+                    .astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=max_new[i % len(max_new)],
+                                            **sp))
+            for i in range(n)]
+
+
+def _clone(reqs):
+    return [Request(prompt=r.prompt.copy(), sampling=r.sampling_params)
+            for r in reqs]
+
+
+def _run_pair(target, draft, reqs, gamma=3, **sess_kw):
+    """Baseline session vs speculative session on the same requests;
+    returns (baseline_tokens, spec_tokens, spec_session)."""
+    bundle, params, state = target
+    base = _clone(reqs)
+    ServeSession(bundle, params, state, n_slots=2, max_seq_len=32, k=8,
+                 **sess_kw).run(base)
+    sess = ServeSession(bundle, params, state, n_slots=2, max_seq_len=32,
+                        k=8, draft=draft, gamma=gamma, **sess_kw)
+    sess.run(reqs)
+    return [r.out_tokens for r in base], [r.out_tokens for r in reqs], sess
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: greedy speculative identity across families and cache layouts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,vocab", [
+    ("qwen2-1.5b", 128),      # transformer
+    ("mamba2-130m", 96),      # ssm (verify-scan + commit_block path)
+    ("zamba2-7b", 96),        # hybrid
+])
+@pytest.mark.parametrize("paged", [False, True])
+def test_speculative_greedy_identity(arch, vocab, paged):
+    target = _tiny(arch, vocab)
+    kw = dict(paged=True, page_size=8, prefill_chunk=4) if paged else {}
+    reqs = _mixed_requests(vocab)
+    ref, got, sess = _run_pair(target, draft=target, reqs=reqs, **kw)
+    assert all(r.status is RequestStatus.COMPLETED for r in reqs)
+    assert got == ref, f"{arch} paged={paged}: speculative stream diverged"
+    # one batched verify shape + one draft decode shape, period — the
+    # plain decode step is never traced in speculative mode
+    assert sess._verify_fn._cache_size() == 1
+    assert sess._draft_decode_fn._cache_size() == 1
+    assert sess._decode_fn._cache_size() == 0
+
+
+def test_speculative_cross_family_draft(tiny_tf, tiny_ssm_draft):
+    """An ssm draft proposing for a transformer target: the draft only
+    ever supplies token ids (and, sampled, its top-k distribution) —
+    families need not match for the stream to stay exact."""
+    reqs = _mixed_requests(128)
+    ref, got, sess = _run_pair(tiny_tf, draft=tiny_ssm_draft, reqs=reqs)
+    assert got == ref
+    assert sess._verify_fn._cache_size() == 1
+    # the ssm draft commits its conv/ssm state once per block
+    assert sess._draft_commit_fn._cache_size() == 1
+
+
+def test_speculative_chunked_prefill_identity(tiny_tf):
+    reqs = _mixed_requests(128)
+    ref, got, sess = _run_pair(tiny_tf, draft=tiny_tf, reqs=reqs,
+                               prefill_chunk=4)
+    assert got == ref
+    assert sess._verify_fn._cache_size() == 1
+
+
+def test_speculative_stats_accounting(tiny_tf):
+    reqs = _mixed_requests(128)
+    _, got, sess = _run_pair(tiny_tf, draft=tiny_tf, reqs=reqs)
+    sp = sess.stats()["speculative"]
+    assert sp["gamma"] == 3 and sp["spec_steps"] > 0
+    assert 0.0 <= sp["accept_rate"] <= 1.0
+    # every emitted token past the prefill token came from a verify step
+    assert sp["spec_emitted"] == sum(len(t) for t in got) - len(reqs)
+    assert sp["emitted_per_step"] == sp["spec_emitted"] / sp["spec_steps"]
+
+
+def test_speculative_sampled_deterministic(tiny_tf):
+    """Sampled speculative decoding replays bit-identically under the
+    same seeds: every uniform (draft proposal, accept test, residual
+    draw, bonus sample) keys on (seed, salt, absolute emission index)."""
+    reqs = _mixed_requests(128, temperature=0.8, top_k=4, seed=9)
+    _, got1, _ = _run_pair(tiny_tf, draft=tiny_tf, reqs=reqs)
+    again = _clone(reqs)
+    _, got2, _ = _run_pair(tiny_tf, draft=tiny_tf, reqs=again)
+    assert got1 == got2
+    assert all(len(t) for t in got1)
+
+
+@needs8
+@pytest.mark.parametrize("param_mode", ["replicated", "fsdp"])
+def test_speculative_identity_on_mesh(param_mode):
+    """4x2 expert-parallel mesh, both param modes: the verify step runs
+    through the same shard_map plumbing as decode (the draft stays off
+    the mesh) and the greedy stream still matches the single-device
+    non-speculative baseline."""
+    target = _tiny("qwen2-1.5b", 128)
+    bundle, params, state = target
+    reqs = _mixed_requests(128, n=4)
+    base = _clone(reqs)
+    ServeSession(bundle, params, state, n_slots=4, max_seq_len=32,
+                 k=8).run(base)
+    mesh = make_test_mesh("4x2")
+    sess = ServeSession(bundle, params, state, n_slots=4, max_seq_len=32,
+                        k=8, mesh=mesh, param_mode=param_mode,
+                        draft=target, gamma=3)
+    sess.run(reqs)
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in base]
+    assert sess._verify_fn._cache_size() == 1
+    assert sess._draft_decode_fn._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# Statistical exactness of the acceptance rule (the PR's theorem)
+# ---------------------------------------------------------------------------
+
+def _acceptor():
+    """``_accept_block``/``_sample`` bound to a bare host object — the
+    acceptance rule is pure host math and never touches session state."""
+    h = type("Host", (), {})()
+    h._sample = ServeSession._sample.__get__(h)
+    h._accept_block = ServeSession._accept_block.__get__(h)
+    return h
+
+
+def _softmax(v):
+    e = np.exp(v - v.max())
+    return e / e.sum()
+
+
+@pytest.mark.parametrize("point_mass", [False, True])
+def test_acceptance_distribution_exact(point_mass):
+    """chi-squared: over many independent blocks the first emitted token
+    of a gamma=1 draft–verify round is distributed EXACTLY as the target
+    softmax — for an overlapping draft distribution (accept w.p.
+    min(1, p/q), residual (p-q)^+ on rejection) and for the point-mass
+    fallback (qd=1 on a fixed proposal)."""
+    h = _acceptor()
+    k = 8
+    rng = np.random.RandomState(42)
+    tvals = np.sort(rng.randn(k))[::-1].copy()          # target logits
+    dvals = np.sort(rng.randn(k))[::-1].copy()          # draft logits
+    ids = np.arange(k, dtype=np.int64)
+    p = _softmax(tvals)
+    q = _softmax(dvals)
+    vals_w = np.stack([tvals, tvals])                   # row 1 = bonus row
+    ids_w = np.stack([ids, ids])
+    sp = SamplingParams(temperature=1.0, seed=0)
+    n_trials, counts = 4000, np.zeros(k)
+    for t in range(n_trials):
+        if point_mass:
+            d, pq = 2, [None]                           # fixed proposal
+        else:
+            d, pq = int(rng.choice(k, p=q)), [(dvals, ids)]  # d ~ q
+        out, _ = h._accept_block(vals_w, ids_w,
+                                 np.array([d], np.int64), pq, sp,
+                                 m0=10 * t)             # fresh uniforms
+        counts[out[0]] += 1
+    # both rules leave the marginal law exactly p (the PR's theorem);
+    # the point-mass fallback accepts w.p. p(d) and the residual excludes
+    # d, the overlap rule accepts w.p. min(1, p/q) with residual (p-q)^+
+    expected = n_trials * p
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    assert chi2 < 24.32, f"chi2={chi2:.2f} vs crit 24.32 (df=7, a=1e-3)"
+
+
+def test_acceptance_greedy_prefix_and_correction():
+    h = _acceptor()
+    k = 4
+    ids_row = np.array([7, 3, 5, 1], np.int64)
+    vals_w = np.tile(np.array([4.0, 3.0, 2.0, 1.0]), (4, 1))
+    ids_w = np.tile(ids_row, (4, 1))
+    sp = SamplingParams(temperature=0.0)
+    # all three proposals match the target argmax chain: 3 accepts + bonus
+    out, n_acc = h._accept_block(vals_w, ids_w, np.array([7, 7, 7]),
+                                 [None] * 3, sp, m0=0)
+    assert (out, n_acc) == ([7, 7, 7, 7], 3)
+    # mismatch at j=1: the correction token is the target's argmax there
+    out, n_acc = h._accept_block(vals_w, ids_w, np.array([7, 3, 7]),
+                                 [None] * 3, sp, m0=0)
+    assert (out, n_acc) == ([7, 7], 1)
+
+
+# ---------------------------------------------------------------------------
+# Sampler rework: host-only numpy, zero per-token jax dispatches
+# ---------------------------------------------------------------------------
+
+def test_sample_makes_zero_jax_dispatches(tiny_tf, monkeypatch):
+    """The old ``_sample`` built PRNGKey + fold_in + categorical PER
+    TOKEN (a device dispatch each). Poison all three: a sampled workload
+    must still complete — the sampler is pure host numpy."""
+    def _boom(*a, **kw):
+        raise AssertionError("per-token jax.random dispatch from _sample")
+
+    monkeypatch.setattr(jax.random, "categorical", _boom)
+    monkeypatch.setattr(jax.random, "fold_in", _boom)
+    monkeypatch.setattr(jax.random, "PRNGKey", _boom)
+    bundle, params, state = tiny_tf
+    reqs = _mixed_requests(128, n=3, temperature=0.7, top_k=4, seed=5)
+    ServeSession(bundle, params, state, n_slots=2, max_seq_len=32,
+                 k=8).run(reqs)
+    assert all(r.status is RequestStatus.COMPLETED for r in reqs)
+    assert all(len(r.out_tokens) for r in reqs)
+
+
+def test_sample_depends_only_on_seed_and_index():
+    h = _acceptor()
+    vals = np.array([2.0, 1.5, 1.0, 0.5])
+    ids = np.array([4, 9, 2, 7], np.int64)
+    sp = SamplingParams(temperature=1.0, seed=3)
+    a = [h._sample(vals, ids, sp, m) for m in range(32)]
+    b = [h._sample(vals, ids, sp, m) for m in range(32)]
+    assert a == b                      # deterministic per (seed, index)
+    assert len(set(a)) > 1             # actually samples
+    sp2 = SamplingParams(temperature=1.0, seed=4)
+    assert a != [h._sample(vals, ids, sp2, m) for m in range(32)]
+    # top_k narrows the support to the first candidates
+    sp3 = SamplingParams(temperature=1.0, seed=3, top_k=1)
+    assert all(h._sample(vals, ids, sp3, m) == 4 for m in range(8))
+
+
+# ---------------------------------------------------------------------------
+# submit()-time validation satellites
+# ---------------------------------------------------------------------------
+
+def test_top_k_validates_against_session_k(tiny_tf):
+    bundle, params, state = tiny_tf
+    sess = ServeSession(bundle, params, state, n_slots=1, max_seq_len=32,
+                        k=8)
+    bad = Request(prompt=np.arange(1, 5, dtype=np.int32),
+                  sampling=SamplingParams(max_new_tokens=2, temperature=1.0,
+                                          top_k=16))
+    with pytest.raises(ValueError, match="top_k"):
+        sess.submit(bad)
+    assert bad.status is RequestStatus.REJECTED
+    assert "top_k" in bad.error and "8" in bad.error
+    # top_k == k is the widest legal value (aliases the full candidate set)
+    ok = Request(prompt=np.arange(1, 5, dtype=np.int32),
+                 sampling=SamplingParams(max_new_tokens=2, temperature=1.0,
+                                         top_k=8))
+    sess.run([ok])
+    assert ok.status is RequestStatus.COMPLETED
+
+
+def test_legacy_max_new_tokens_single_source_of_truth(tiny_tf):
+    # legacy shorthand still works alone...
+    r = Request(prompt=np.arange(1, 5, dtype=np.int32), max_new_tokens=3)
+    assert r.sampling_params.max_new_tokens == 3
+    # ...but combining it with SamplingParams is an error, not a silent
+    # precedence rule
+    both = Request(prompt=np.arange(1, 5, dtype=np.int32), max_new_tokens=3,
+                   sampling=SamplingParams(max_new_tokens=5))
+    with pytest.raises(ValueError, match="single source of truth"):
+        both.sampling_params
+    bundle, params, state = tiny_tf
+    sess = ServeSession(bundle, params, state, n_slots=1, max_seq_len=32,
+                        k=8)
+    with pytest.raises(ValueError, match="single source of truth"):
+        sess.submit(both)
+    assert both.status is RequestStatus.REJECTED
+
+
+def test_speculative_needs_headroom(tiny_tf):
+    """submit() accounts the verify block's worst-case cache writes:
+    a prompt that fits without speculation is rejected when the gamma
+    headroom would run past max_seq_len."""
+    bundle, params, state = tiny_tf
+    sess = ServeSession(bundle, params, state, n_slots=1, max_seq_len=16,
+                        k=8, draft=(bundle, params, state), gamma=4)
+    r = Request(prompt=np.arange(1, 9, dtype=np.int32),
+                sampling=SamplingParams(max_new_tokens=8))
+    with pytest.raises(ValueError, match="max_seq_len"):
+        sess.submit(r)   # 8 + 8 - 1 + 4 = 19 > 16
+    assert r.status is RequestStatus.REJECTED
+    ok = Request(prompt=np.arange(1, 5, dtype=np.int32),
+                 sampling=SamplingParams(max_new_tokens=8))
+    sess.run([ok])   # 4 + 8 - 1 + 4 = 15 <= 16
+    assert ok.status is RequestStatus.COMPLETED

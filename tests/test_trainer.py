@@ -8,7 +8,7 @@ from repro.configs import get_config, reduce_config
 from repro.configs.base import TrainConfig
 from repro.data import DataPipeline, TopicLMStream
 from repro.models import build
-from repro.train import Request, ServeSession, Trainer
+from repro.train import Request, SamplingParams, ServeSession, Trainer
 from repro.train.train_step import make_train_step
 
 
@@ -88,8 +88,10 @@ def test_serve_session_generates(tmp_path):
     params, ds_state = bundle.init(jax.random.PRNGKey(0))
     session = ServeSession(bundle, params, ds_state, n_slots=2,
                            max_seq_len=16)
-    reqs = [Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=4),
-            Request(prompt=np.arange(3, dtype=np.int32) + 7, max_new_tokens=4)]
+    reqs = [Request(prompt=np.arange(5, dtype=np.int32),
+                    sampling=SamplingParams(max_new_tokens=4)),
+            Request(prompt=np.arange(3, dtype=np.int32) + 7,
+                    sampling=SamplingParams(max_new_tokens=4))]
     out = session.run(reqs)
     for r in out:
         assert len(r.out_tokens) == 4
